@@ -1,0 +1,27 @@
+"""Paper Table I: edge-device specifications (the hardware registry)."""
+import time
+
+from repro.core import hardware as hw
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    for name in ("rpi4", "rpi5", "jetson_orin_nano", "tpu_v5e"):
+        h = hw.get(name)
+        rows.append({
+            "device": name,
+            "peak_gflops": h.peak_flops / 1e9,
+            "mem_bw_gbs": h.mem_bw / 1e9,
+            "storage_mbs": h.storage_bw / 1e6,
+            "net_gbs": h.net_bw / 1e9,
+            "mem_gb": h.mem_capacity / 1e9,
+        })
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+    return "table1_devices", us, rows
+
+
+if __name__ == "__main__":
+    name, us, rows = run()
+    for r in rows:
+        print(r)

@@ -1,0 +1,101 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+CellResult JSONs (idempotent; §Perf is maintained by hand)."""
+import sys
+from pathlib import Path
+
+from repro.core.roofline import load_all
+
+RUNS = Path(__file__).resolve().parent.parent / "runs" / "dryrun"
+
+
+def fmt(v, nd=3):
+    if isinstance(v, float):
+        return f"{v:.{nd}g}"
+    return str(v)
+
+
+def dryrun_section(cells):
+    single = [c for c in cells if c.mesh == "16x16"]
+    multi = [c for c in cells if c.mesh == "2x16x16"]
+    out = ["## §Dry-run", ""]
+    out.append(f"All (arch x shape) cells lower + compile on the single-pod "
+               f"16x16 mesh ({len(single)} cells) AND the multi-pod 2x16x16 "
+               f"mesh ({len(multi)} cells). The pod axis composes with data "
+               f"for gradient sync (P(('pod','data'))). Rolled-scan compiles "
+               f"are the artifact; costs below come from unrolled/"
+               f"extrapolated measurement (see launch/cost_extrapolation.py).")
+    out.append("")
+    out.append("| arch | shape | mesh | devices | compile_s | arg_GB/dev | temp_GB/dev | collective ops |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape, c.mesh)):
+        if "+" in c.mesh:
+            continue
+        md = c.memory_detail
+        coll_ops = int(c.collective_detail.get("collective_count", 0))
+        out.append(
+            f"| {c.arch} | {c.shape} | {c.mesh} | {c.num_devices} | "
+            f"{c.compile_seconds:.1f} | "
+            f"{md.get('argument_size_in_bytes', 0) / 1e9:.2f} | "
+            f"{md.get('temp_size_in_bytes', 0) / 1e9:.2f} | {coll_ops} |")
+    out.append("")
+    out.append("Skipped cells (DESIGN.md §7): long_500k for the 7 pure "
+               "full-attention archs (quadratic-attention KV at 524k tokens "
+               "is out of family scope per the assignment).")
+    return "\n".join(out)
+
+
+def roofline_section(cells):
+    single = [c for c in cells if c.mesh == "16x16"]
+    out = ["## §Roofline", ""]
+    out.append("Hardware: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM, "
+               "4 ICI links x 50 GB/s. Terms per device per step from the "
+               "compiled artifact: compute = HLO_FLOPs/peak; memory = "
+               "HLO bytes-accessed/HBM_BW; collective = parsed collective "
+               "operand bytes/ICI. `useful` = MODEL_FLOPS/HLO_FLOPs with "
+               "MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only), N = active "
+               "params. `roofline_frac` = analytic-minimum step time / "
+               "compiled bound time.")
+    out.append("")
+    hdr = ["arch", "shape", "GFLOP/dev", "GB/dev", "coll MB/dev",
+           "t_comp ms", "t_mem ms", "t_coll ms", "dominant", "useful",
+           "frac", "note"]
+    out.append("| " + " | ".join(hdr) + " |")
+    out.append("|" + "|".join("---" for _ in hdr) + "|")
+    for c in sorted(single, key=lambda c: (c.arch, c.shape)):
+        t = c.terms()
+        out.append("| " + " | ".join([
+            c.arch, c.shape, fmt(c.hlo_flops / 1e9), fmt(c.hlo_bytes / 1e9),
+            fmt(c.collective_bytes / 1e6), fmt(t.compute_s * 1e3),
+            fmt(t.memory_s * 1e3), fmt(t.collective_s * 1e3), t.dominant,
+            fmt(c.useful_ratio), fmt(c.roofline_fraction),
+            c.note.replace("|", "/")[:40]]) + " |")
+    out.append("")
+    # analytical cross-check summary
+    ratios = [c.analytic_flops / c.hlo_flops for c in single if c.hlo_flops]
+    out.append(f"Analytical-vs-compiled FLOPs ratio across cells: "
+               f"median {sorted(ratios)[len(ratios) // 2]:.2f} "
+               f"(EdgeProfiler's closed-form model vs XLA; see "
+               f"tests/test_analytical.py for exactness of the parameter "
+               f"counts).")
+    return "\n".join(out)
+
+
+def main(out_path="EXPERIMENTS.md"):
+    cells = load_all(RUNS)
+    p = Path(out_path)
+    text = p.read_text() if p.exists() else ""
+    generated = dryrun_section(cells) + "\n\n" + roofline_section(cells)
+    marker = "<!-- GENERATED DRYRUN+ROOFLINE -->"
+    end_marker = "<!-- END GENERATED -->"
+    if marker in text:
+        pre, rest = text.split(marker, 1)
+        _, post = rest.split(end_marker, 1)
+        text = pre + marker + "\n" + generated + "\n" + end_marker + post
+    else:
+        text = text + "\n" + marker + "\n" + generated + "\n" + end_marker + "\n"
+    p.write_text(text)
+    print(f"wrote {p} ({len(cells)} cells)")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "EXPERIMENTS.md")

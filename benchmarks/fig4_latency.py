@@ -1,0 +1,39 @@
+"""Paper Fig. 4(a-f): per-stage latency + energy across devices and
+precisions — memory-bound latency, storage I/O, H2D, network, end-to-end,
+energy per token."""
+import time
+
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core.profiler import profile
+
+DEVICES = ("rpi4", "rpi5", "jetson_orin_nano")
+PRECISIONS = ("fp32", "fp16", "int8")
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    n = 0
+    for spec in EDGE_MODELS.values():
+        for hw in DEVICES:
+            for prec in PRECISIONS:
+                r = profile(spec, hw, prec, seq_len=2048)
+                n += 1
+                rows.append({
+                    "model": spec.name, "device": hw, "precision": prec,
+                    "fig4a_t_mem_s": round(r.latency.memory, 4),
+                    "fig4b_t_io_s": round(r.latency.storage_io, 3),
+                    "fig4c_t_h2d_s": round(r.latency.h2d, 4),
+                    "fig4d_t_net_s": round(r.latency.network, 4),
+                    "fig4e_t_e2e_s": round(r.latency.end_to_end, 3),
+                    "fig4f_energy_j": round(r.energy_per_token_j, 4),
+                    "t_compute_s": round(r.latency.compute, 4),
+                    "arith_intensity": round(r.arithmetic_intensity, 3),
+                })
+    us = (time.perf_counter() - t0) * 1e6 / max(1, n)
+    return "fig4_latency_energy", us, rows
+
+
+if __name__ == "__main__":
+    for r in run()[2]:
+        print(r)

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: quant_matmul / flash_attention ref-path
+wall-times on CPU (the TPU-kernel correctness path) + dequant fidelity.
+On-hardware timings belong to the roofline report; these give the
+us_per_call column for the CSV harness."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.quant import W4_SYM_GROUP, W8_SYM_CHANNEL, dequantize, quantize
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    t_total = time.perf_counter()
+    x = jnp.asarray(rng.normal(size=(256, 1024)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(1024, 1024)).astype(np.float32))
+    for cfg, name in ((W8_SYM_CHANNEL, "int8"), (W4_SYM_GROUP, "int4")):
+        t = quantize(w, cfg)
+        f = jax.jit(lambda a, q=t: ref.quant_matmul_ref(a, q))
+        us = _time(f, x)
+        err = float(jnp.max(jnp.abs(w - dequantize(t))))
+        rows.append({"kernel": f"quant_matmul_{name}_ref", "M": 256,
+                     "K": 1024, "N": 1024, "us": round(us, 1),
+                     "weight_max_err": round(err, 4)})
+    q = jnp.asarray(rng.normal(size=(1, 512, 8, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 512, 2, 64)).astype(np.float32))
+    f = jax.jit(lambda a, b: ref.flash_attention_ref(a, b, b))
+    rows.append({"kernel": "flash_attention_ref", "M": 512, "K": 8, "N": 64,
+                 "us": round(_time(f, q, k), 1), "weight_max_err": 0.0})
+    us = (time.perf_counter() - t_total) * 1e6 / max(1, len(rows))
+    return "kernel_bench", us, rows
+
+
+if __name__ == "__main__":
+    for r in run()[2]:
+        print(r)

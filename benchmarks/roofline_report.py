@@ -1,0 +1,31 @@
+"""Roofline report: reads the dry-run CellResult JSONs and emits the
+§Roofline table (per arch x shape x mesh: three terms, dominant bound,
+useful-FLOPs ratio, roofline fraction, analytical cross-check)."""
+import time
+from pathlib import Path
+
+from repro.core.roofline import CellResult, load_all, markdown_table
+
+RUNS = Path(__file__).resolve().parent.parent / "runs" / "dryrun"
+
+
+def run(directory=RUNS):
+    t0 = time.perf_counter()
+    cells = load_all(directory)
+    rows = []
+    for c in cells:
+        r = c.row()
+        t = c.terms()
+        r["analytic_vs_hlo_flops"] = round(
+            c.analytic_flops / c.hlo_flops, 3) if c.hlo_flops else 0.0
+        rows.append(r)
+    us = (time.perf_counter() - t0) * 1e6 / max(1, len(rows))
+    return "roofline_cells", us, rows
+
+
+def markdown(directory=RUNS) -> str:
+    return markdown_table(load_all(directory))
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), then a
+detail block per benchmark.
+"""
+from __future__ import annotations
+
+import json
+
+
+def main() -> None:
+    from benchmarks import (device_table, fig4_latency, kernel_bench,
+                            roofline_report, table2_quant)
+    results = []
+    for mod in (device_table, table2_quant, fig4_latency, kernel_bench,
+                roofline_report):
+        name, us, rows = mod.run()
+        derived = len(rows)
+        results.append((name, us, derived, rows))
+
+    print("name,us_per_call,derived")
+    for name, us, derived, _ in results:
+        print(f"{name},{us:.1f},{derived}")
+
+    for name, us, derived, rows in results:
+        print(f"\n## {name} ({derived} rows)")
+        for r in rows:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Table II: model size, runtime memory, inference speedup per
+precision for the four edge models — analytical reproduction, with the
+paper's reported values alongside for the delta columns."""
+import time
+
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core.profiler import profile
+
+# Paper Table II reference values: (model, precision) -> (size_GB, runtime_GB, speedup)
+PAPER = {
+    ("tinyllama-1.1b", "fp16"): (2.2, 3.13, 1.0),
+    ("tinyllama-1.1b", "int8"): (1.2, 2.25, 1.86),
+    ("tinyllama-1.1b", "int4"): (0.644, 1.78, 2.45),
+    ("gemma3-1b", "fp16"): (2.0, 2.44, 1.0),
+    ("gemma3-1b", "int8"): (1.1, 1.60, 1.26),
+    ("gemma3-1b", "int4"): (0.815, 1.35, 1.52),
+    ("llama3.2-1b", "fp16"): (2.5, 3.58, 1.0),
+    ("llama3.2-1b", "int8"): (1.3, 2.53, 2.7),
+    ("llama3.2-1b", "int4"): (0.776, 2.01, 3.33),
+    ("deepseek-r1-1.5b", "fp16"): (3.6, 3.91, 1.0),
+    ("deepseek-r1-1.5b", "int8"): (1.9, 2.55, 2.19),
+    ("deepseek-r1-1.5b", "int4"): (1.1, 1.84, 2.97),
+}
+
+
+def run():
+    rows = []
+    t0 = time.perf_counter()
+    n = 0
+    for spec in EDGE_MODELS.values():
+        base = profile(spec, "rpi5", "fp16", seq_len=2048)
+        for prec in ("fp16", "int8", "int4"):
+            r = profile(spec, "rpi5", prec, seq_len=2048)
+            n += 1
+            speedup = base.latency.steady_state / r.latency.steady_state
+            ref = PAPER.get((spec.name, prec), (None, None, None))
+            rows.append({
+                "model": spec.name, "precision": prec,
+                "size_gb": round(r.model_size_bytes / 1e9, 3),
+                "paper_size_gb": ref[0],
+                "runtime_gb": round(r.memory_runtime_bytes / 1e9, 2),
+                "paper_runtime_gb": ref[1],
+                "speedup": round(speedup, 2),
+                "paper_speedup": ref[2],
+            })
+    us = (time.perf_counter() - t0) * 1e6 / max(1, n)
+    return "table2_quant_ablation", us, rows
+
+
+if __name__ == "__main__":
+    for r in run()[2]:
+        print(r)

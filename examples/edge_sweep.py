@@ -1,0 +1,35 @@
+"""Reproduce the paper's evaluation grid (Fig. 4 + Table II) in one sweep
+and print the headline claims with our numbers next to the paper's.
+
+    PYTHONPATH=src python examples/edge_sweep.py
+"""
+from repro.configs.edge_models import EDGE_MODELS, LLAMA32_1B, TINYLLAMA
+from repro.core.profiler import profile
+
+print("=" * 76)
+print("EdgeProfiler sweep: 4 models x 3 devices x 4 precisions")
+print("=" * 76)
+hdr = f"{'model':18s} {'device':18s} {'prec':5s} {'io_s':>7s} {'comp_s':>7s} " \
+      f"{'e2e_s':>7s} {'J/tok':>7s}"
+print(hdr)
+for spec in EDGE_MODELS.values():
+    for hw in ("rpi4", "rpi5", "jetson_orin_nano"):
+        for prec in ("fp32", "fp16", "int8", "int4"):
+            r = profile(spec, hw, prec, seq_len=2048)
+            print(f"{spec.name:18s} {hw:18s} {prec:5s} "
+                  f"{r.latency.storage_io:7.2f} {r.latency.compute:7.3f} "
+                  f"{r.latency.end_to_end:7.2f} {r.energy_per_token_j:7.3f}")
+
+print("\nHeadline claims (paper -> ours):")
+r32 = profile(LLAMA32_1B, "rpi4", "fp32", seq_len=2048)
+r8 = profile(LLAMA32_1B, "rpi4", "int8", seq_len=2048)
+print(f"  RPi4 FP32 e2e  ~15.4s -> {r32.latency.end_to_end:.1f}s")
+print(f"  RPi4 INT8 e2e   ~3.9s -> {r8.latency.end_to_end:.1f}s")
+jet = profile(LLAMA32_1B, "jetson_orin_nano", "int8", seq_len=2048)
+print(f"  Jetson INT8 e2e ~1.05s -> {jet.latency.end_to_end:.2f}s")
+t16 = profile(TINYLLAMA, "rpi4", "fp16", seq_len=2048)
+t4 = profile(TINYLLAMA, "rpi4", "int4", seq_len=2048)
+print(f"  INT4 vs FP16 memory reduction 60-70% -> "
+      f"{100 * (1 - t4.model_size_bytes / t16.model_size_bytes):.0f}%")
+print(f"  INT8 latency cut vs FP32 ~75% -> "
+      f"{100 * (1 - r8.latency.end_to_end / r32.latency.end_to_end):.0f}%")

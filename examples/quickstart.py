@@ -1,0 +1,34 @@
+"""Quickstart: profile a lightweight LLM on an edge device (paper Fig. 3).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import ARCHS
+from repro.core.profiler import profile
+
+# 1. pick a model config, a hardware config, a precision config
+report = profile(ARCHS["tinyllama-1.1b"], hardware="rpi4",
+                 precision="int8", seq_len=2048)
+
+# 2. the analytical model returns the paper's full output set
+print(f"model            : {report.model}")
+print(f"params           : {report.params / 1e9:.2f} B")
+print(f"FLOPs/token      : {report.flops_per_token / 1e9:.2f} GFLOPs")
+print(f"model size       : {report.model_size_bytes / 1e9:.2f} GB")
+print(f"runtime memory   : {report.memory_runtime_bytes / 1e9:.2f} GB")
+print(f"latency breakdown:")
+print(f"  compute        : {report.latency.compute * 1e3:8.1f} ms")
+print(f"  memory         : {report.latency.memory * 1e3:8.1f} ms")
+print(f"  storage I/O    : {report.latency.storage_io * 1e3:8.1f} ms")
+print(f"  host-to-device : {report.latency.h2d * 1e3:8.1f} ms")
+print(f"  network        : {report.latency.network * 1e3:8.1f} ms")
+print(f"  end-to-end     : {report.latency.end_to_end:8.2f} s")
+print(f"arith intensity  : {report.arithmetic_intensity:.3f} FLOP/byte")
+print(f"energy/token     : {report.energy_per_token_j:.3f} J")
+
+# 3. compare precisions (the paper's central ablation)
+print("\nprecision sweep on rpi4 (end-to-end seconds):")
+for prec in ("fp32", "fp16", "int8", "int4"):
+    r = profile(ARCHS["tinyllama-1.1b"], "rpi4", prec, seq_len=2048)
+    print(f"  {prec:5s} e2e={r.latency.end_to_end:6.2f}s "
+          f"energy={r.energy_per_token_j:6.3f}J "
+          f"size={r.model_size_bytes / 1e9:5.2f}GB")

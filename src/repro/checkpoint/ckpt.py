@@ -1,0 +1,107 @@
+"""Pure-JAX checkpointing: atomic, resumable, mesh-reshardable.
+
+Layout:  <dir>/step_<N>/
+            manifest.json      (leaf paths, shapes, dtypes, step)
+            arrays.npz         (one entry per leaf, path-keyed)
+         <dir>/LATEST          (atomic pointer file)
+
+Writes go to ``step_<N>.tmp`` then ``os.replace`` — a crash mid-write can
+never corrupt the latest checkpoint (fault-tolerance invariant, tested by
+killing a writer mid-stream in tests/test_checkpoint.py).
+
+``restore`` puts every leaf onto the CURRENT mesh's shardings — restoring
+a checkpoint written on a different mesh shape re-shards transparently
+(elastic scaling: shrink/grow between runs).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(directory: str | Path, step: int, tree: Any,
+         extra: Optional[Dict[str, Any]] = None) -> Path:
+    d = Path(directory)
+    d.mkdir(parents=True, exist_ok=True)
+    final = d / f"step_{step:08d}"
+    tmp = d / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = d / "LATEST.tmp"
+    ptr_tmp.write_text(final.name)
+    os.replace(ptr_tmp, d / "LATEST")
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    d = Path(directory)
+    ptr = d / "LATEST"
+    if ptr.exists():
+        name = ptr.read_text().strip()
+        if (d / name / "manifest.json").exists():
+            return int(name.split("_")[1])
+    # fall back to scanning completed checkpoints
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*")
+                   if p.is_dir() and not p.name.endswith(".tmp")
+                   and (p / "manifest.json").exists())
+    return steps[-1] if steps else None
+
+
+def restore(directory: str | Path, template: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``template``.  ``shardings`` (matching
+    pytree of NamedSharding) re-shards onto the current mesh."""
+    d = Path(directory)
+    if step is None:
+        step = latest_step(d)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {d}")
+    src = d / f"step_{step:08d}"
+    data = np.load(src / "arrays.npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    out = []
+    for (path, leaf), shd in zip(paths, shard_leaves):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = data[key]
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"ckpt {arr.shape} vs template {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def read_manifest(directory: str | Path, step: int) -> Dict[str, Any]:
+    return json.loads((Path(directory) / f"step_{step:08d}" / "manifest.json")
+                      .read_text())

@@ -1,0 +1,13 @@
+"""gemma3-4b [dense] — 34L d2560 8H (kv=4) ff=10240 V=262144.
+5:1 local:global attention, 1024-token sliding window, 128k context,
+tied embeddings. [hf:google/gemma-3]
+"""
+from repro.core.model_config import ModelSpec
+
+SPEC = ModelSpec(
+    name="gemma3-4b", family="dense",
+    num_layers=34, d_model=2560, num_heads=8, num_kv_heads=4,
+    d_ff=10240, vocab_size=262144,
+    sliding_window=1024, local_global_ratio=5, tie_embeddings=True,
+    attn_logit_softcap=0.0,
+)

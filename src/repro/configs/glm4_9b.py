@@ -1,0 +1,10 @@
+"""glm4-9b [dense] — 40L d4096 32H (kv=2) ff=13696 V=151552. RoPE, GQA.
+[hf:THUDM/glm-4-9b]
+"""
+from repro.core.model_config import ModelSpec
+
+SPEC = ModelSpec(
+    name="glm4-9b", family="dense",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=2,
+    d_ff=13696, vocab_size=151552,
+)

@@ -1,0 +1,13 @@
+"""internvl2-2b [vlm] — InternLM2-1.8B backbone: 24L d2048 16H (kv=8)
+ff=8192 V=92553, with an InternViT-300M frontend STUB: input_specs()
+provides 256 precomputed patch embeddings (d_vit=1024) projected into the
+LM. [arXiv:2404.16821] Vocab padded 92553 -> 92672 (DESIGN.md §8).
+"""
+from repro.core.model_config import ModelSpec
+
+SPEC = ModelSpec(
+    name="internvl2-2b", family="vlm",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=8,
+    d_ff=8192, vocab_size=92553,
+    vision_tokens=256, vision_embed_dim=1024,
+)

@@ -1,0 +1,17 @@
+"""llama4-scout-17b-a16e [moe] — 48L d5120 40H (kv=8) ff=8192 V=202048,
+16 routed experts top-1 + 1 shared expert. [hf:meta-llama/Llama-4-Scout-17B-16E]
+
+Text backbone only; 'early fusion' multimodality is out of the assigned
+scope (the assignment provides LM shapes).  Every layer is MoE with one
+shared expert, matching the Scout config.
+"""
+from repro.core.model_config import ModelSpec, MoESpec
+
+SPEC = ModelSpec(
+    name="llama4-scout-17b-a16e", family="moe",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    d_ff=8192, vocab_size=202048,
+    moe=MoESpec(num_experts=16, top_k=1, expert_ff=8192,
+                num_shared_experts=1, shared_ff=8192,
+                capacity_factor=1.25, pad_to_multiple=16),
+)

@@ -1,0 +1,11 @@
+"""minitron-4b [dense] — 32L d3072 24H (kv=8) ff=9216 V=256000.
+Pruned Nemotron [arXiv:2407.14679]. Non-gated squared-ReLU MLP (as the
+original) -> 4.19B params, matching the released checkpoint.
+"""
+from repro.core.model_config import ModelSpec
+
+SPEC = ModelSpec(
+    name="minitron-4b", family="dense",
+    num_layers=32, d_model=3072, num_heads=24, num_kv_heads=8,
+    d_ff=9216, vocab_size=256000, act="relu2",
+)

@@ -1,0 +1,17 @@
+"""qwen2-moe-a2.7b [moe] — 24L d2048 16H (kv=16) expert_ff=1408 V=151936,
+60 routed experts top-4 + 4 shared experts. [hf:Qwen/Qwen1.5-MoE-A2.7B]
+
+60 experts pad to 64 for 16-way EP (DESIGN.md §8).  The 4 shared experts
+are fused into one always-on FFN of width 4x1408=5632 (as the HF config's
+shared_expert_intermediate_size).
+"""
+from repro.core.model_config import ModelSpec, MoESpec
+
+SPEC = ModelSpec(
+    name="qwen2-moe-a2.7b", family="moe",
+    num_layers=24, d_model=2048, num_heads=16, num_kv_heads=16,
+    d_ff=1408, vocab_size=151936,
+    moe=MoESpec(num_experts=60, top_k=4, expert_ff=1408,
+                num_shared_experts=4, shared_ff=5632,
+                capacity_factor=1.25, pad_to_multiple=16),
+)

@@ -1,0 +1,15 @@
+"""The four assigned input shapes (seq_len x global_batch x step kind)."""
+from repro.core.model_config import ShapeSpec
+
+TRAIN_4K = ShapeSpec("train_4k", seq_len=4_096, global_batch=256, kind="train")
+PREFILL_32K = ShapeSpec("prefill_32k", seq_len=32_768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeSpec("decode_32k", seq_len=32_768, global_batch=128, kind="decode")
+LONG_500K = ShapeSpec("long_500k", seq_len=524_288, global_batch=1, kind="decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def get(name: str) -> ShapeSpec:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape '{name}'; have {sorted(SHAPES)}")
+    return SHAPES[name]

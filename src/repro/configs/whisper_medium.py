@@ -1,0 +1,17 @@
+"""whisper-medium [audio] — enc-dec, 24+24L d1024 16H ff=4096 V=51865.
+[arXiv:2212.04356]
+
+The conv frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings (B, 1500, d).  LayerNorm + non-gated GELU
+MLPs; decoder has cross-attention over the encoder output.
+Vocab padded 51865 -> 52224 for TP (DESIGN.md §8).
+"""
+from repro.core.model_config import ModelSpec
+
+SPEC = ModelSpec(
+    name="whisper-medium", family="audio",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=4096, vocab_size=51865,
+    norm="layernorm", act="gelu", tie_embeddings=True,
+    encoder_layers=24, encoder_seq=1500, cross_attention=True,
+)

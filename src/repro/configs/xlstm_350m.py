@@ -1,0 +1,12 @@
+"""xlstm-350m [ssm] — 24 blocks d1024 4H, mLSTM with every-8th block sLSTM,
+no separate FFN (d_ff=0; the mLSTM block carries its own 2x up-projection).
+[arXiv:2405.04517]
+"""
+from repro.core.model_config import ModelSpec, XLSTMSpec
+
+SPEC = ModelSpec(
+    name="xlstm-350m", family="ssm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304, tie_embeddings=True,
+    xlstm=XLSTMSpec(slstm_every=8, proj_factor=2.0, qk_dim_factor=0.5),
+)

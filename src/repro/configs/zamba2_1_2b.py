@@ -1,0 +1,17 @@
+"""zamba2-1.2b [hybrid] — 38 Mamba2 layers d2048, ssm_state=64, plus ONE
+shared full transformer block (32H MHA kv=32, ff=8192) applied every 6th
+layer with shared weights. [arXiv:2411.15242]
+
+Simplifications vs the HF checkpoint (noted in DESIGN.md): the shared
+block's per-application LoRA deltas and the concatenated-embedding input
+are dropped; the shared block runs on the d_model residual stream.
+"""
+from repro.core.model_config import ModelSpec, SSMSpec
+
+SPEC = ModelSpec(
+    name="zamba2-1.2b", family="hybrid",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32000,
+    ssm=SSMSpec(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk=256),
+    attn_every=6, shared_attn_block=True,
+)

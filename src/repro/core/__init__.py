@@ -1,0 +1,26 @@
+"""EdgeProfiler core: the paper's analytical profiling model.
+
+Public API:
+    profile(spec, hardware, precision, ...) -> Report      (paper Fig. 3)
+    analyze(spec, shape, precision, mesh)  -> Analysis     (generalized)
+    paper_param_count / paper_flops_per_token / paper_memory (eqs 7-9)
+"""
+from repro.core.analytical import (Analysis, MeshShape, analyze,
+                                   paper_flops_per_token, paper_memory,
+                                   paper_param_count)
+from repro.core.hardware import HardwareSpec, JETSON_ORIN_NANO, RPI4, RPI5, TPU_V5E
+from repro.core.hardware import get as get_hardware
+from repro.core.latency import LatencyBreakdown, RooflineTerms, breakdown, roofline_terms
+from repro.core.model_config import ModelSpec, MoESpec, ShapeSpec, SSMSpec, XLSTMSpec
+from repro.core.precision import PrecisionSpec
+from repro.core.precision import get as get_precision
+from repro.core.profiler import Report, profile, sweep
+
+__all__ = [
+    "Analysis", "MeshShape", "analyze", "paper_flops_per_token",
+    "paper_memory", "paper_param_count", "HardwareSpec", "RPI4", "RPI5",
+    "JETSON_ORIN_NANO", "TPU_V5E", "get_hardware", "LatencyBreakdown",
+    "RooflineTerms", "breakdown", "roofline_terms", "ModelSpec", "MoESpec",
+    "ShapeSpec", "SSMSpec", "XLSTMSpec", "PrecisionSpec", "get_precision",
+    "Report", "profile", "sweep",
+]

@@ -1,0 +1,215 @@
+"""EdgeProfiler analytical model (paper §III) — faithful + generalized.
+
+``paper_*`` functions are the literal equations (7)-(9) for the vanilla
+MHA transformer the paper assumes.  ``analyze()`` is the generalized form
+driven by ``core.blocks`` so it covers every assigned architecture, both
+inference and training, single-device and sharded.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core import blocks
+from repro.core.model_config import ModelSpec, ShapeSpec
+from repro.core.precision import PrecisionSpec
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful equations (7)-(9)
+# ---------------------------------------------------------------------------
+
+def paper_param_count(L: int, H: int, I: int, V: int) -> float:
+    """Eq. (7): P = L·4H² + L·2HI + 2VH."""
+    return L * 4 * H * H + L * 2 * H * I + 2 * V * H
+
+
+def paper_flops_per_token(L: int, H: int, I: int, S: int) -> float:
+    """Eq. (8): FLOPs/token = L(6H² + 4HS + 4HI + 4IH + 9H)."""
+    return L * (6 * H * H + 4 * H * S + 4 * H * I + 4 * I * H + 9 * H)
+
+
+def paper_memory(P: float, B: float, S: int, H: int, L: int) -> float:
+    """Eq. (9): M = P·B + S·H·B + 2L·S·H·B."""
+    return P * B + S * H * B + 2 * L * S * H * B
+
+
+# ---------------------------------------------------------------------------
+# Generalized analysis
+# ---------------------------------------------------------------------------
+
+@dataclass
+class MemoryBreakdown:
+    weights: float = 0.0
+    activations: float = 0.0
+    kv_cache: float = 0.0
+    optimizer: float = 0.0
+    gradients: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (self.weights + self.activations + self.kv_cache
+                + self.optimizer + self.gradients)
+
+
+@dataclass
+class CollectiveBreakdown:
+    """Per-device collective bytes per step (analytical prediction)."""
+    dp_grad: float = 0.0           # gradient all-reduce / reduce-scatter
+    tp_act: float = 0.0            # TP activation all-reduce / all-gather
+    ep_a2a: float = 0.0            # MoE all-to-all (dispatch + combine)
+    sp_softmax: float = 0.0        # seq-parallel softmax stat exchange
+
+    @property
+    def total(self) -> float:
+        return self.dp_grad + self.tp_act + self.ep_a2a + self.sp_softmax
+
+
+@dataclass
+class Analysis:
+    """Everything EdgeProfiler derives for one (model, shape, precision[, mesh])."""
+    spec: ModelSpec
+    shape: ShapeSpec
+    params: int
+    params_active: int
+    flops_per_token: float         # useful forward flops (top-k MoE)
+    flops_dispatch_per_token: float  # what dense-dispatch HLO executes
+    step_flops: float              # full step (train: fwd+bwd; serve: fwd)
+    model_flops: float             # assignment: 6·N·D (dense) / 6·N_active·D (MoE)
+    memory: MemoryBreakdown = field(default_factory=MemoryBreakdown)
+    collectives: CollectiveBreakdown = field(default_factory=CollectiveBreakdown)
+    hbm_traffic: float = 0.0       # bytes moved per step per device (roofline)
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "params": self.params, "params_active": self.params_active,
+            "flops_per_token": self.flops_per_token,
+            "step_flops": self.step_flops, "model_flops": self.model_flops,
+            "mem_weights": self.memory.weights, "mem_acts": self.memory.activations,
+            "mem_kv": self.memory.kv_cache, "mem_opt": self.memory.optimizer,
+            "mem_grad": self.memory.gradients, "mem_total": self.memory.total,
+            "coll_dp": self.collectives.dp_grad, "coll_tp": self.collectives.tp_act,
+            "coll_ep": self.collectives.ep_a2a, "coll_sp": self.collectives.sp_softmax,
+            "coll_total": self.collectives.total, "hbm_traffic": self.hbm_traffic,
+        }
+
+
+@dataclass(frozen=True)
+class MeshShape:
+    """Logical parallelism degrees used for per-device accounting."""
+    dp: int = 1
+    tp: int = 1
+    pods: int = 1
+
+    @property
+    def devices(self) -> int:
+        return self.dp * self.tp * self.pods
+
+    @property
+    def total_dp(self) -> int:
+        return self.dp * self.pods
+
+
+def analyze(spec: ModelSpec, shape: ShapeSpec, precision: PrecisionSpec,
+            mesh: MeshShape = MeshShape(), train_dtype_bytes: float = 2.0,
+            remat: bool = True, microbatch: int = 0,
+            fsdp: bool = False) -> Analysis:
+    """Generalized EdgeProfiler analysis for one cell.
+
+    For ``train`` shapes this models the actual train_step (grad-accum,
+    remat, AdamW fp32 m/v sharded) — for ``prefill``/``decode`` the serve
+    step at the given precision (weight-only quant supported).
+    """
+    P = blocks.param_count(spec, padded=True)
+    P_logical = blocks.param_count(spec, padded=False)
+    P_active = blocks.active_param_count(spec)
+    S, B = shape.seq_len, shape.global_batch
+    d = spec.d_model
+    is_train = shape.kind == "train"
+    wb = train_dtype_bytes if is_train else precision.bytes_per_param
+    ab = train_dtype_bytes if is_train else precision.act_bytes
+
+    # ---- flops -----------------------------------------------------------
+    if shape.kind == "decode":
+        fpt = blocks.forward_flops_per_token(spec, S)
+        fpt_d = blocks.forward_flops_per_token(spec, S, dispatch=True)
+        tokens = B                      # one token per sequence per step
+        step_flops = fpt * tokens
+    else:
+        # prefill/train: average context length = S/2 under causal masking
+        fpt = blocks.forward_flops_per_token(spec, S // 2)
+        fpt_d = blocks.forward_flops_per_token(spec, S // 2, dispatch=True)
+        tokens = S * B
+        step_flops = fpt * tokens + blocks.encoder_flops(spec) * B
+        if is_train:
+            step_flops *= 3             # bwd = 2x fwd
+            if remat:
+                step_flops += fpt * tokens  # recompute fwd inside bwd
+
+    # assignment definition: 6·N·D for training (fwd+bwd); forward-only
+    # steps (prefill/decode) do 2·N·D useful matmul FLOPs
+    n_active = P_active if spec.moe is not None else P_logical
+    model_flops = (6 if is_train else 2) * n_active * tokens
+
+    # ---- memory (per device) ----------------------------------------------
+    mem = MemoryBreakdown()
+    shard = mesh.devices
+    dpx, tp = mesh.total_dp, mesh.tp
+    # weights sharded over tp (EP lives inside the tp/model axis); FSDP
+    # additionally shards the weight/grad matrices over the data axis and
+    # all-gathers per use.  Training gradients use the same layout.
+    wshard = tp * (mesh.dp if fsdp else 1)
+    mem.weights = P * wb / wshard
+    if is_train:
+        mb = microbatch or max(1, B // dpx)
+        mem.gradients = P * wb / wshard
+        mem.optimizer = P * 8.0 / (tp * (mesh.dp if fsdp else min(dpx, 8)))
+        # remat keeps one residual per layer per microbatch token
+        n_res = spec.num_layers + spec.encoder_layers
+        mem.activations = n_res * mb * S * d * train_dtype_bytes / 1  # per device (batch already per-dp)
+        if not remat:
+            mem.activations *= 8       # rough: all intermediates live
+    else:
+        mem.activations = B / max(1, dpx) * (1 if shape.kind == "decode" else S) * d * ab * 4
+        mem.kv_cache = blocks.cache_bytes(spec, max(1, B // max(1, dpx)), S, bytes_per=2.0) / (
+            tp if shape.kind != "decode" or B >= dpx else mesh.devices)
+        if B < dpx:                     # long-context: seq-sharded cache
+            mem.kv_cache = blocks.cache_bytes(spec, B, S, bytes_per=2.0) / shard
+
+    # ---- HBM traffic per device per step (memory roofline term) ----------
+    if shape.kind == "decode":
+        # every decode step re-reads all (sharded) weights + the cache once
+        mem_t = mem.weights + mem.kv_cache + mem.activations
+    else:
+        # weights read once per microbatch pass + activations written/read
+        passes = 3 if is_train else 1
+        mem_t = mem.weights * passes + mem.activations * 2 + mem.kv_cache
+    hbm_traffic = mem_t
+
+    # ---- collectives per device per step ----------------------------------
+    coll = CollectiveBreakdown()
+    if is_train and dpx > 1:
+        # ring all-reduce of bf16 grads: 2·(n-1)/n · sharded-bytes
+        coll.dp_grad = 2 * (dpx - 1) / dpx * (P * wb / tp)
+    if tp > 1:
+        # per TP-sharded layer: all-reduce of (tokens_per_device, d) twice
+        tok_dev = tokens / max(1, dpx)
+        n_tp_layers = sum(1 for k in spec.layer_kinds() if not k.startswith("sl"))
+        per = 2 * (tp - 1) / tp * tok_dev * d * ab
+        coll.tp_act = per * 2 * n_tp_layers * (3 if is_train else 1)
+    if spec.moe is not None and tp > 1:
+        tok_dev = tokens / max(1, dpx)
+        n_moe = sum(1 for i, k in enumerate(spec.layer_kinds())
+                    if k.startswith("attn") and i % spec.moe_every == 0)
+        coll.ep_a2a = (2 * tok_dev * spec.moe.top_k * d * ab * n_moe
+                       * (3 if is_train else 1))
+    if shape.kind == "decode" and B < dpx:
+        # distributed softmax stats: (heads, 2) floats per layer per step
+        n_attn = spec.num_attention_layers()
+        coll.sp_softmax = n_attn * B * spec.num_heads * 2 * 4 * (dpx - 1) / dpx
+
+    return Analysis(
+        spec=spec, shape=shape, params=P_logical, params_active=P_active,
+        flops_per_token=fpt, flops_dispatch_per_token=fpt_d,
+        step_flops=step_flops, model_flops=model_flops,
+        memory=mem, collectives=coll, hbm_traffic=hbm_traffic)

@@ -1,0 +1,69 @@
+"""Utilization-factor calibration (paper §IV: 'published peak FLOPs and
+bandwidths with calibrated utilization factors').
+
+Given observed (or paper-reported) stage/end-to-end latencies, fit the
+U_* factors by coordinate descent on squared relative error.  Factors are
+clamped to [0.05, 1.0] — a fit that wants U > 1 means the peak spec is
+wrong, which the fit reports instead of hiding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hardware import HardwareSpec
+from repro.core.latency import breakdown
+from repro.core.precision import PrecisionSpec, get as get_precision
+from repro.core.model_config import ModelSpec
+
+
+@dataclass
+class Observation:
+    spec: ModelSpec
+    precision: str
+    target_e2e_s: float
+    seq_len: int = 2048
+
+
+_FACTORS = ("u_compute", "u_memory", "u_storage", "u_h2d", "u_net")
+
+
+def _predict(hw: HardwareSpec, obs: Observation) -> float:
+    from repro.core.profiler import profile
+    rep = profile(obs.spec, hw, obs.precision, seq_len=obs.seq_len)
+    return rep.latency.end_to_end
+
+
+def calibrate(hw: HardwareSpec, observations: Sequence[Observation],
+              iters: int = 60) -> Tuple[HardwareSpec, Dict[str, float]]:
+    """Fit utilization factors to observations; returns (fitted_hw, report)."""
+    cur = hw
+    grid = np.geomspace(0.05, 1.0, 25)
+
+    def loss(h: HardwareSpec) -> float:
+        err = 0.0
+        for o in observations:
+            pred = _predict(h, o)
+            err += ((pred - o.target_e2e_s) / o.target_e2e_s) ** 2
+        return err
+
+    best = loss(cur)
+    for _ in range(iters):
+        improved = False
+        for f in _FACTORS:
+            vals = []
+            for g in grid:
+                cand = cur.with_(**{f: float(g)})
+                vals.append((loss(cand), g))
+            l, g = min(vals)
+            if l < best - 1e-12:
+                best, cur, improved = l, cur.with_(**{f: float(g)}), True
+        if not improved:
+            break
+    report = {f: getattr(cur, f) for f in _FACTORS}
+    report["loss"] = best
+    for o in observations:
+        report[f"pred_{o.spec.name}_{o.precision}"] = _predict(cur, o)
+    return cur, report

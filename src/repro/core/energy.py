@@ -1,0 +1,33 @@
+"""Energy model — paper §III-C, equation (15).
+
+E = FLOPs x e_flop + M x e_byte   (joules per step / per token)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.analytical import Analysis
+from repro.core.hardware import HardwareSpec
+from repro.core.precision import PrecisionSpec
+
+
+@dataclass
+class EnergyBreakdown:
+    compute_j: float
+    data_j: float
+
+    @property
+    def total(self) -> float:
+        return self.compute_j + self.data_j
+
+
+def energy(an: Analysis, hw: HardwareSpec, precision: PrecisionSpec) -> EnergyBreakdown:
+    """Eq. (15). Low-bit compute scales e_flop by bits/32 down to the int8
+    floor (INT4 executes on the int8 ALU datapath on the paper's targets) —
+    the INT4 energy saving then arises mostly from fewer bytes moved."""
+    flop_scale = min(1.0, max(precision.bits, 8) / 32.0)
+    compute_j = an.step_flops * hw.e_flop * flop_scale
+    bytes_moved = (an.params * precision.bytes_per_param
+                   + an.memory.kv_cache + an.memory.activations)
+    data_j = bytes_moved * hw.e_byte
+    return EnergyBreakdown(compute_j, data_j)

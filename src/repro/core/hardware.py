@@ -1,0 +1,134 @@
+"""Hardware configurations for EdgeProfiler.
+
+The paper's three edge devices (Table I) plus the TPU v5e pod target and
+the paper's workstation host. Peak numbers come from published specs; the
+utilization factors are *calibrated* (paper §IV "calibrated utilization
+factors") — see core/calibration.py, which fits them so the paper's
+reported end-to-end numbers are reproduced, and records the fit.
+
+Units: FLOP/s, bytes/s, joules/FLOP, joules/byte.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict
+
+GB = 1e9
+MB = 1e6
+TFLOPS = 1e12
+GFLOPS = 1e9
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float              # dense fp32-equiv peak unless noted
+    mem_bw: float                  # DRAM/HBM bandwidth
+    storage_bw: float              # disk/flash read bandwidth
+    h2d_bw: float                  # host-to-device (PCIe/NVLink/LPDDR copy)
+    net_bw: float                  # node-to-node network / ICI per link
+    mem_capacity: float            # bytes of DRAM/HBM
+    u_compute: float = 0.60
+    u_memory: float = 0.60
+    u_storage: float = 0.80
+    u_h2d: float = 0.80
+    u_net: float = 0.70
+    e_flop: float = 1.0e-11        # J/FLOP
+    e_byte: float = 2.0e-10        # J/byte
+    # Peak scaling for reduced precision compute, relative to fp32 peak.
+    precision_speedup: Dict[str, float] = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.precision_speedup is None:
+            object.__setattr__(
+                self, "precision_speedup",
+                {"fp32": 1.0, "fp16": 2.0, "bf16": 2.0, "int8": 4.0, "int4": 4.0})
+
+    def flops_at(self, precision: str) -> float:
+        return self.peak_flops * self.precision_speedup.get(precision, 1.0)
+
+    def with_(self, **kw) -> "HardwareSpec":
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Paper Table I devices.  Peaks from vendor specs:
+#  * RPi4: 4x Cortex-A72 @1.5 GHz, NEON 2x128b FMA/cycle -> ~24 GFLOP/s fp32;
+#    LPDDR4-2400 ~6 GB/s effective; fast USB3/SSD storage path (calibrated
+#    against the paper's 15.4 s FP32 end-to-end -> ~400 MB/s).
+#  * RPi5: 4x Cortex-A76 @2.4 GHz -> ~76 GFLOP/s; LPDDR4X-4267 ~12 GB/s,
+#    PCIe 2.0 x1 NVMe ~450 MB/s.
+#  * Jetson Orin Nano Super: 67 INT8 TOPS (sparse) -> ~17 TFLOP/s fp16
+#    dense-equivalent on GPU; 102 GB/s LPDDR5; NVMe PCIe 3.0 x4 ~2.5 GB/s.
+# ---------------------------------------------------------------------------
+
+RPI4 = HardwareSpec(
+    name="rpi4",
+    peak_flops=24 * GFLOPS,
+    mem_bw=6 * GB,
+    storage_bw=400 * MB,
+    h2d_bw=4 * GB,        # CPU-only device: "H2D" is a DRAM-to-DRAM remap
+    net_bw=0.125 * GB,    # 1 GbE
+    mem_capacity=8 * GB,
+    u_compute=0.50, u_memory=0.55, u_storage=0.85, u_h2d=0.80, u_net=0.70,
+    e_flop=2.0e-10, e_byte=6.0e-10,
+)
+
+RPI5 = HardwareSpec(
+    name="rpi5",
+    peak_flops=76 * GFLOPS,
+    mem_bw=12 * GB,
+    storage_bw=450 * MB,
+    h2d_bw=8 * GB,
+    net_bw=0.125 * GB,
+    mem_capacity=16 * GB,
+    u_compute=0.55, u_memory=0.60, u_storage=0.85, u_h2d=0.80, u_net=0.70,
+    e_flop=1.2e-10, e_byte=4.5e-10,
+)
+
+JETSON_ORIN_NANO = HardwareSpec(
+    name="jetson_orin_nano",
+    peak_flops=8.5 * TFLOPS,      # fp32-equiv dense (17 TFLOP/s fp16)
+    mem_bw=102 * GB,
+    storage_bw=2.5 * GB,
+    h2d_bw=8 * GB,                # unified memory; PCIe-class copy path
+    net_bw=1.25 * GB,             # 10 GbE-class
+    mem_capacity=8 * GB,
+    u_compute=0.45, u_memory=0.65, u_storage=0.80, u_h2d=0.85, u_net=0.70,
+    e_flop=2.5e-11, e_byte=3.0e-10,
+)
+
+# The deployment target for the framework itself (assignment constants).
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops=197 * TFLOPS,      # bf16 peak per chip (assignment constant)
+    mem_bw=819 * GB,
+    storage_bw=1 * GB,            # per-host persistent-storage read for ckpt
+    h2d_bw=32 * GB,               # PCIe gen4 x16 host link
+    net_bw=50 * GB,               # ICI per link (assignment constant)
+    mem_capacity=16 * GB,
+    u_compute=1.0, u_memory=1.0, u_storage=0.8, u_h2d=0.8, u_net=1.0,
+    e_flop=5.0e-13, e_byte=1.0e-10,
+    # Roofline terms use the bf16 peak directly.
+    precision_speedup={"fp32": 0.5, "fp16": 1.0, "bf16": 1.0, "int8": 2.0, "int4": 2.0},
+)
+
+WORKSTATION = HardwareSpec(
+    name="workstation_i7_10700f",
+    peak_flops=400 * GFLOPS,
+    mem_bw=41 * GB,
+    storage_bw=2.0 * GB,
+    h2d_bw=16 * GB,
+    net_bw=1.25 * GB,
+    mem_capacity=32 * GB,
+)
+
+REGISTRY: Dict[str, HardwareSpec] = {
+    h.name: h for h in (RPI4, RPI5, JETSON_ORIN_NANO, TPU_V5E, WORKSTATION)
+}
+
+
+def get(name: str) -> HardwareSpec:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown hardware '{name}'; have {sorted(REGISTRY)}")
+    return REGISTRY[name]

@@ -1,0 +1,156 @@
+"""Extract roofline inputs from compiled XLA artifacts.
+
+``cost_analysis()`` provides HLO FLOPs and bytes accessed; collective
+bytes are NOT in cost_analysis, so we parse the post-SPMD-partitioning
+HLO text and sum operand sizes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute).  With an SPMD-partitioned module the operand shapes
+are per-device shards, so totals are per-device bytes per step.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# bf16[8,128,2048]{2,1,0} or f32[] — capture dtype and dims
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# an op line looks like:  %name = TYPE op-name(OPERANDS), attrs...
+_OP_LINE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\s*\(([^)]*)\)")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\S+\[[0-9,]*\](?:\{[^}]*\})?)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def as_dict(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"collective_bytes": self.total_bytes,
+                                 "collective_count": float(self.total_count)}
+        for k, v in sorted(self.bytes_by_kind.items()):
+            out[f"bytes_{k}"] = v
+        for k, v in sorted(self.count_by_kind.items()):
+            out[f"count_{k}"] = float(v)
+        return out
+
+
+def _type_bytes(type_str: str) -> float:
+    return sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(type_str))
+
+
+def parse_collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective in (post-optimization) HLO text.
+
+    Two passes: (1) symbol table %name -> result bytes from every op
+    definition, (2) collective lines sum looked-up operand sizes (falling
+    back to the collective's own result size when an operand is unknown —
+    exact for all-reduce/all-to-all/permute, which are size-preserving).
+    ``-start``/``-done`` async pairs are counted once (on the start op).
+    """
+    symbols: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            symbols[m.group(1)] = _type_bytes(m.group(2))
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        if "-done" in line and "-start" not in line:
+            continue            # async pair: count the -start only
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        kind, operands = m.group(1), m.group(2)
+        nbytes = 0.0
+        for name in _OPERAND_RE.findall(operands):
+            nbytes += symbols.get(name, 0.0)
+        if nbytes == 0.0:
+            dm = _DEF_RE.match(line)
+            if dm:
+                nbytes = _type_bytes(dm.group(2))
+                if kind == "all-gather":
+                    nbytes = 0.0    # result is inflated; skip if unknown operand
+        if nbytes == 0.0:
+            continue
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    """FLOPs / bytes from compiled.cost_analysis(), robust across jax versions."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {"flops": float(ca.get("flops", 0.0)),
+           "bytes_accessed": float(ca.get("bytes accessed", 0.0))}
+    for k, v in ca.items():
+        if k.startswith("bytes accessed") and k != "bytes accessed":
+            out.setdefault("bytes_accessed_out", 0.0)
+    return out
+
+
+def extract_memory(compiled) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return out
+    if ma is None:
+        return out
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out
+
+
+def count_remat_duplicates(hlo_text: str) -> Dict[str, int]:
+    """Heuristic remat detector: count fusion/dot ops whose name carries the
+    ``.remat`` / duplicate suffix XLA uses when recomputing."""
+    dup = 0
+    dots = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") and (" dot(" in s or " convolution(" in s):
+            dots += 1
+            if ".remat" in s or "rematted" in s:
+                dup += 1
+    return {"dot_ops": dots, "remat_dots": dup}

@@ -1,0 +1,92 @@
+"""Latency breakdown — paper §III-B, equations (10)-(14).
+
+Faithful implementation: each stage divides a byte/FLOP count by the
+corresponding (bandwidth x utilization).  ``breakdown()`` reproduces the
+paper's edge-device analysis; ``roofline_terms()`` is the same arithmetic
+specialized to the TPU pod target (compute / HBM / ICI), used by
+EXPERIMENTS.md §Roofline next to the compiled-HLO numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.analytical import Analysis
+from repro.core.hardware import HardwareSpec
+from repro.core.precision import PrecisionSpec
+
+
+@dataclass
+class LatencyBreakdown:
+    compute: float
+    memory: float
+    storage_io: float
+    h2d: float
+    network: float
+    # fine-grained compute split (paper §III-B "fine-grained breakdown")
+    per_op: Dict[str, float]
+
+    @property
+    def end_to_end(self) -> float:
+        """Paper's end-to-end: serial sum of all stages (cold start)."""
+        return self.compute + self.memory + self.storage_io + self.h2d + self.network
+
+    @property
+    def steady_state(self) -> float:
+        """Warm inference: weights resident, max of overlap-able stages."""
+        return max(self.compute, self.memory) + self.network
+
+
+def breakdown(an: Analysis, hw: HardwareSpec, precision: PrecisionSpec,
+              per_op_flops: Dict[str, float] | None = None) -> LatencyBreakdown:
+    """Equations (10)-(14) for one analyzed cell on one device."""
+    weight_bytes = an.params * precision.bytes_per_param
+    flops = an.step_flops
+    eff_flops = hw.flops_at(precision.name) * hw.u_compute
+
+    t_comp = flops / eff_flops                                    # eq. 10
+    t_mem = an.memory.total / (hw.mem_bw * hw.u_memory)           # eq. 11
+    t_io = weight_bytes / (hw.storage_bw * hw.u_storage)          # eq. 12
+    t_h2d = weight_bytes / (hw.h2d_bw * hw.u_h2d)                 # eq. 13
+    kv_shard = an.shape.seq_len * an.spec.d_model * precision.act_bytes
+    t_net = kv_shard / (hw.net_bw * hw.u_net)                     # eq. 14
+
+    per_op = {}
+    if per_op_flops:
+        for name, f in per_op_flops.items():
+            per_op[name] = f / eff_flops
+    return LatencyBreakdown(t_comp, t_mem, t_io, t_h2d, t_net, per_op)
+
+
+def arithmetic_intensity(an: Analysis, precision: PrecisionSpec) -> float:
+    """FLOPs per byte of memory traffic (paper: 'well under 1' on edge)."""
+    bytes_moved = an.params * precision.bytes_per_param + an.memory.kv_cache
+    return an.step_flops / max(1.0, bytes_moved)
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def bound(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+
+def roofline_terms(step_flops_per_device: float, hbm_bytes_per_device: float,
+                   collective_bytes_per_device: float, hw: HardwareSpec,
+                   links: int = 4) -> RooflineTerms:
+    """Assignment constants: per-chip peak, HBM BW, ICI links."""
+    return RooflineTerms(
+        compute_s=step_flops_per_device / hw.peak_flops,
+        memory_s=hbm_bytes_per_device / hw.mem_bw,
+        collective_s=collective_bytes_per_device / (hw.net_bw * links),
+    )

@@ -1,0 +1,53 @@
+"""Precision configurations (paper §III-A "Precision configuration").
+
+The paper uses a single bytes-per-value B. We keep that faithful mode and
+extend it with group-quantization scale overhead (what GGUF/AWQ-style
+formats actually ship) so Table II's INT4 model sizes (644 MB TinyLlama,
+not the naive 550 MB) are reproduced rather than idealized.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+
+@dataclass(frozen=True)
+class PrecisionSpec:
+    name: str
+    bits: int                       # bits per weight value
+    scale_bits: int = 0             # per-group scale storage
+    group_size: int = 0             # 0 = per-channel/tensor (negligible overhead)
+    act_bits: int = 16              # activation precision (paper: per-tensor acts)
+    zero_point_bits: int = 0        # asymmetric schemes carry a zero point
+
+    @property
+    def bytes_per_param(self) -> float:
+        b = self.bits / 8.0
+        if self.group_size:
+            b += (self.scale_bits + self.zero_point_bits) / 8.0 / self.group_size
+        return b
+
+    @property
+    def act_bytes(self) -> float:
+        return self.act_bits / 8.0
+
+
+FP32 = PrecisionSpec("fp32", bits=32, act_bits=32)
+FP16 = PrecisionSpec("fp16", bits=16, act_bits=16)
+BF16 = PrecisionSpec("bf16", bits=16, act_bits=16)
+# INT8: per-channel scales -> negligible storage overhead, fp16 activations.
+INT8 = PrecisionSpec("int8", bits=8, scale_bits=16, group_size=0, act_bits=16)
+# INT4: group-32 fp16 scales (llama.cpp Q4-style ~= 4.5 bits/weight).
+INT4 = PrecisionSpec("int4", bits=4, scale_bits=16, group_size=32, act_bits=16)
+# W8A8 for the fully-quantized serving path.
+INT8_W8A8 = PrecisionSpec("int8_w8a8", bits=8, scale_bits=16, group_size=0, act_bits=8)
+
+REGISTRY: Dict[str, PrecisionSpec] = {
+    p.name: p for p in (FP32, FP16, BF16, INT8, INT4, INT8_W8A8)
+}
+
+
+def get(name: str) -> PrecisionSpec:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown precision '{name}'; have {sorted(REGISTRY)}")
+    return REGISTRY[name]

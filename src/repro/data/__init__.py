@@ -1,0 +1,1 @@
+from repro.data.synthetic import DataConfig, Pipeline, batch_at

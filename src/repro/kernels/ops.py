@@ -1,0 +1,69 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On non-TPU backends (this CPU container) the kernels execute with
+interpret=True; model code can also force the pure-jnp reference path
+(`impl="ref"`), which is what the dry-run lowers (pallas_call does not
+lower on the CPU host-platform backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+from repro.kernels.quantize_kernel import quantize_rowwise_pallas
+from repro.quant.qtypes import QuantizedTensor
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quant_matmul(x: jnp.ndarray, w: QuantizedTensor, *, impl: str = "auto",
+                 out_dtype=None, bm: int = 128, bn: int = 128, bk: int = 128):
+    """x (M, K) @ dequant(w). impl: auto | pallas | ref.
+
+    auto -> Pallas on TPU, pure-jnp ref elsewhere (interpret-mode grids
+    lower to giant XLA while-loops; the ref path is what the CPU dry-run
+    and tests should lower unless explicitly exercising the kernel)."""
+    if impl == "ref" or (impl == "auto" and _default_interpret()):
+        return ref.quant_matmul_ref(x, w, out_dtype=out_dtype)
+    cfg = w.config
+    if cfg.granularity == "group":
+        group = cfg.group_size
+        scale = w.scale.reshape(w.shape[0] // group, 1, w.shape[1])
+    elif cfg.granularity == "channel":
+        group = 0
+        scale = w.scale.reshape(1, w.shape[1])
+    else:
+        group = 0
+        scale = jnp.broadcast_to(w.scale.reshape(1, 1), (1, w.shape[1]))
+    if w.zero is not None:
+        return ref.quant_matmul_ref(x, w, out_dtype=out_dtype)  # asym: ref path
+    return quant_matmul_pallas(
+        x, w.q, scale, bits=cfg.bits, group=group, bm=bm, bn=bn, bk=bk,
+        out_dtype=out_dtype, interpret=_default_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: Optional[float] = None, impl: str = "auto",
+                    bq: int = 128, bk: int = 128):
+    if impl == "ref" or (impl == "auto" and _default_interpret()):
+        return ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                       scale=scale)
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, bq=bq, bk=bk,
+                                  interpret=_default_interpret())
+
+
+def quantize_rowwise(x, *, bits: int = 8, impl: str = "auto", bm: int = 128):
+    if impl == "ref" or x.shape[0] % bm != 0 or \
+            (impl == "auto" and _default_interpret()):
+        return ref.quantize_rowwise_ref(x, bits=bits)
+    return quantize_rowwise_pallas(x, bits=bits, bm=bm,
+                                   interpret=_default_interpret())

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QuantizedTensor
+from repro.quant.quantize import dequantize, quantize_values
+
+
+def quant_matmul_ref(x: jnp.ndarray, w: QuantizedTensor,
+                     out_dtype=None) -> jnp.ndarray:
+    """x (..., K) @ dequant(w) (K, N)."""
+    wf = dequantize(w, out_dtype=jnp.float32)
+    out = jnp.dot(x.astype(jnp.float32), wf, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q (B, Sq, H, D), k/v (B, Sk, KV, D) -> (B, Sq, H, D). GQA-aware."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    rep = H // KV
+    kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+    vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+    s = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * s
+    q_idx = jnp.arange(Sq)[:, None] + (Sk - Sq)   # align ends (decode-friendly)
+    k_idx = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= q_idx >= k_idx
+    if window:
+        mask &= (q_idx - k_idx) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def quantize_rowwise_ref(x: jnp.ndarray, bits: int = 8):
+    """Per-row symmetric quantization of a 2-D tensor -> (q, scale)."""
+    from repro.quant.qtypes import QuantConfig
+    cfg = QuantConfig(bits=bits, symmetric=True, granularity="channel", axis=0)
+    q, scale, _ = quantize_values(x, cfg)
+    return q, scale.reshape(x.shape[0], 1)

@@ -1,0 +1,64 @@
+"""EdgeProfiler CLI (paper Fig. 3): model x hardware x precision -> report.
+
+  python -m repro.launch.profile --model tinyllama-1.1b --hardware rpi4 \
+      --precision int8 --seq 2048
+  python -m repro.launch.profile --sweep          # paper Fig. 4 grid
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCHS
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core import hardware as hw_mod
+from repro.core import precision as prec_mod
+from repro.core.profiler import profile
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="tinyllama-1.1b",
+                    help=f"one of {sorted(ARCHS)}")
+    ap.add_argument("--hardware", default="rpi4",
+                    help=f"one of {sorted(hw_mod.REGISTRY)}")
+    ap.add_argument("--precision", default="fp16",
+                    help=f"one of {sorted(prec_mod.REGISTRY)}")
+    ap.add_argument("--seq", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--kind", default="decode", choices=["decode", "prefill", "train"])
+    ap.add_argument("--sweep", action="store_true",
+                    help="paper Fig. 4: all edge models x devices x precisions")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    if args.sweep:
+        rows = []
+        for m in EDGE_MODELS.values():
+            for hw in ("rpi4", "rpi5", "jetson_orin_nano"):
+                for prec in ("fp32", "fp16", "int8", "int4"):
+                    rows.append(profile(m, hw, prec, seq_len=args.seq).as_dict())
+        if args.json:
+            print(json.dumps(rows, indent=1))
+        else:
+            keys = ["model", "hardware", "precision", "model_size_gb",
+                    "t_io", "t_compute", "t_memory", "t_end_to_end",
+                    "energy_per_token_j"]
+            print(",".join(keys))
+            for r in rows:
+                print(",".join(f"{r[k]:.4g}" if isinstance(r[k], float)
+                               else str(r[k]) for k in keys))
+        return
+
+    rep = profile(ARCHS[args.model], args.hardware, args.precision,
+                  seq_len=args.seq, batch=args.batch, kind=args.kind)
+    d = rep.as_dict()
+    if args.json:
+        print(json.dumps(d, indent=1))
+    else:
+        for k, v in d.items():
+            print(f"{k:22s} {v:.6g}" if isinstance(v, float) else f"{k:22s} {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Distributed training launcher.
+
+Two modes:
+  * ``--local``: CPU-scale end-to-end run (real arrays, reduced config) —
+    exercises the identical step function, checkpointing and resume logic
+    the pod run would use.
+  * default: pjit the train step against the production mesh with
+    ShardingRules placements.  On real hardware the same entry point runs
+    under ``jax.distributed.initialize()``; in this container it requires
+    the dry-run device override (see launch/dryrun.py) and is exercised
+    via ``--dry-steps 0`` (lower/compile only).
+
+Fault tolerance: step-atomic checkpoints + auto-resume (train/loop.py);
+elastic restarts re-shard the checkpoint onto the current mesh
+(checkpoint/ckpt.py::restore with new shardings).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.data.synthetic import DataConfig
+from repro.train.loop import LoopConfig, train
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig
+from repro.train.optimizer import warmup_cosine
+from repro.quant.qtypes import W8_SYM_CHANNEL, W4_SYM_GROUP
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--local", action="store_true",
+                    help="reduced config, single device, real run")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--qat", default=None, choices=[None, "int8", "int4"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None)
+    args = ap.parse_args()
+
+    spec = ARCHS[args.arch]
+    if args.local:
+        spec = spec.scaled_down(layers=args.layers, width=args.width,
+                                vocab=args.vocab)
+    qat = {None: None, "int8": W8_SYM_CHANNEL, "int4": W4_SYM_GROUP}[args.qat]
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr),
+        microbatches=args.microbatches,
+        qat=qat,
+        attention_impl="naive" if args.seq <= 2048 else "chunked",
+        lr_schedule=warmup_cosine(args.lr, warmup=max(10, args.steps // 20),
+                                  total=args.steps),
+    )
+    dcfg = DataConfig(vocab_size=spec.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch)
+    loop = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                      ckpt_dir=args.ckpt_dir, fail_at_step=args.fail_at)
+    train(spec, tcfg, dcfg, loop)
+
+
+if __name__ == "__main__":
+    main()

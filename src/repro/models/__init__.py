@@ -1,0 +1,6 @@
+"""Pure-JAX functional model zoo for all assigned architectures."""
+from repro.models.lm import (decode_step, forward, group_plan, init,
+                             init_cache, param_count_actual, prefill)
+
+__all__ = ["decode_step", "forward", "group_plan", "init", "init_cache",
+           "param_count_actual", "prefill"]

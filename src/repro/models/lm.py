@@ -1,0 +1,513 @@
+"""Generic LM assembly: every assigned architecture is an instance of this
+module, driven entirely by ``ModelSpec`` + ``core.blocks`` declarations.
+
+Layers are grouped into runs of identical kind and executed with
+``lax.scan`` over stacked parameters (one compiled body per kind), which
+keeps XLA compile time flat in depth — essential for the 512-device
+dry-run of 48-layer models.
+
+Entry points:
+    init(rng, spec, dtype)                 -> params
+    forward(params, spec, batch, ...)      -> (logits, aux)   train/teacher-forced
+    prefill(params, spec, batch, ...)      -> (logits, cache) inference prefill
+    decode_step(params, spec, cache, t)    -> (logits, cache) one token
+    init_cache(spec, batch, max_seq, ...)  -> cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocks
+from repro.core.model_config import ModelSpec
+from repro.models import layers as L
+from repro.models import recurrent as R
+from repro.models.scan_util import scan as _scan
+from repro.quant.qlinear import qdot, maybe_fake_quant
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Layer grouping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    kind: str          # attn | attn_local | attn_global | ssm | ssm_shared | mlstm | slstm
+    base: int          # first layer index
+    n: int             # number of layers
+
+
+def group_plan(spec: ModelSpec) -> List[Group]:
+    kinds = list(spec.layer_kinds())
+    if spec.ssm is not None and spec.attn_every:
+        kinds = ["ssm_shared" if (i + 1) % spec.attn_every == 0 else k
+                 for i, k in enumerate(kinds)]
+    groups: List[Group] = []
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        groups.append(Group(kinds[i], i, j - i))
+        i = j
+    return groups
+
+
+def _base_kind(kind: str) -> str:
+    return "ssm" if kind == "ssm_shared" else kind
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_param(key, name: str, shape, dtype, n_layers: int):
+    if len(shape) == 0 or name.endswith("_b") or "bias" in name:
+        return jnp.zeros(shape, dtype)
+    if "norm" in name or name in ("ssm_gate_norm", "ml_onorm"):
+        return jnp.zeros(shape, dtype)          # rmsnorm stored as (1 + scale)
+    if name == "ssm_A_log":
+        return jnp.log(jnp.linspace(1.0, 16.0, shape[0])).astype(dtype)
+    if name == "ssm_D":
+        return jnp.ones(shape, dtype)
+    if name == "ssm_dt_bias":
+        return jnp.zeros(shape, dtype)
+    std = 0.02
+    if name.endswith(("wo", "out_proj", "ml_down")):
+        std = 0.02 / math.sqrt(max(1, 2 * n_layers))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init(rng, spec: ModelSpec, dtype=jnp.float32) -> Params:
+    n_total = spec.num_layers + spec.encoder_layers
+    params: Params = {"global": {}, "groups": []}
+    keys = jax.random.split(rng, 4096)
+    ki = iter(range(4096))
+
+    for name, shape in blocks.global_param_shapes(spec).items():
+        std_key = keys[next(ki)]
+        params["global"][name] = _init_param(std_key, name, shape, dtype, n_total)
+
+    for g in group_plan(spec):
+        gp: Dict[str, jnp.ndarray] = {}
+        shapes = blocks.layer_param_shapes(spec, _base_kind(g.kind), g.base)
+        for name, shape in shapes.items():
+            stacked = jnp.stack([
+                _init_param(keys[next(ki)], name, shape, dtype, n_total)
+                for _ in range(g.n)])
+            gp[name] = stacked
+        params["groups"].append(gp)
+
+    if spec.ssm is not None and spec.attn_every:
+        sb = {}
+        for name, shape in blocks.shared_block_param_shapes(spec).items():
+            sb[name] = _init_param(keys[next(ki)], name, shape, dtype, n_total)
+        params["shared_block"] = sb
+
+    if spec.encoder_layers:
+        ep = {}
+        shapes = blocks.layer_param_shapes(spec, "enc_attn")
+        for name, shape in shapes.items():
+            ep[name] = jnp.stack([
+                _init_param(keys[next(ki)], name, shape, dtype, n_total)
+                for _ in range(spec.encoder_layers)])
+        params["encoder"] = ep
+
+    return params
+
+
+def param_count_actual(params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(x.size for x in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Blocks with residual/norm wiring
+# ---------------------------------------------------------------------------
+
+def _layer_forward(spec: ModelSpec, kind: str, p: Params, x, positions,
+                   enc_out, shared_p, impl: str, qat_cfg):
+    """Full residual layer. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if qat_cfg is not None:
+        p = {k: maybe_fake_quant(v, qat_cfg) if k.startswith(
+            ("wq", "wk", "wv", "wo", "mlp", "experts", "shared", "cross"))
+            else v for k, v in p.items()}
+    base = _base_kind(kind)
+    if base in ("attn", "attn_local", "attn_global", "enc_attn"):
+        h = L.attention_block(spec, p, L.norm(spec, p, "norm1", x), positions,
+                              kind=base, impl=impl)
+        x = x + h
+        if spec.cross_attention and base != "enc_attn":
+            h = L.cross_attention_block(spec, p, L.norm(spec, p, "norm_cross", x),
+                                        enc_out)
+            x = x + h
+        y = L.norm(spec, p, "norm2", x)
+        if "router_w" in p:
+            h, aux = L.moe_block(spec, p, y)
+        else:
+            h = L.mlp_block(spec, p, y)
+        x = x + h
+    elif base == "ssm":
+        x = x + R.mamba2_forward(spec, p, L.norm(spec, p, "norm1", x))
+        if kind == "ssm_shared":
+            x = _shared_block_forward(spec, shared_p, x, positions, impl)
+    elif base == "mlstm":
+        x = x + R.mlstm_forward(spec, p, L.norm(spec, p, "norm1", x))
+    elif base == "slstm":
+        x = x + R.slstm_forward(spec, p, L.norm(spec, p, "norm1", x))
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def _shared_block_forward(spec: ModelSpec, sp: Params, x, positions, impl):
+    h = L.attention_block(spec, sp, L.norm(spec, sp, "norm1", x), positions,
+                          kind="attn", impl=impl)
+    x = x + h
+    x = x + L.mlp_block(spec, sp, L.norm(spec, sp, "norm2", x))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / teacher-forced eval)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, spec: ModelSpec, batch) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    x = jnp.take(params["global"]["embed"], tokens, axis=0)
+    if spec.name.startswith("gemma"):
+        x = x * math.sqrt(spec.d_model)
+    if spec.vision_tokens:
+        pe = batch["patch_embeds"]
+        pe = L.rmsnorm(pe, params["global"]["vision_norm"])
+        pe = qdot(pe, params["global"]["vision_proj"]).astype(x.dtype)
+        nv = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, nv:]], axis=1)
+    return x
+
+
+def _encoder_forward(params, spec: ModelSpec, frames, impl, remat) -> jnp.ndarray:
+    x = frames
+    ep = params["encoder"]
+    positions = jnp.arange(x.shape[1])[None]
+
+    def body(carry, pslice):
+        y, _ = _layer_forward(spec, "enc_attn", pslice, carry, positions,
+                              None, None, impl, None)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = _scan(body, x, ep)
+    g = params["global"]
+    if spec.norm == "layernorm":
+        x = L.layernorm(x, g["enc_final_norm"], g["enc_final_norm_b"])
+    else:
+        x = L.rmsnorm(x, g["enc_final_norm"])
+    return x
+
+
+def _lm_head(params, spec: ModelSpec, x) -> jnp.ndarray:
+    g = params["global"]
+    x = L.norm(spec, g, "final_norm", x)
+    if spec.tie_embeddings:
+        emb = g["embed"]
+        from repro.quant.qlinear import dequant_param
+        return jnp.dot(x, dequant_param(emb).astype(x.dtype).T)
+    return qdot(x, g["head"])
+
+
+def forward(params, spec: ModelSpec, batch, *, impl: str = "auto",
+            remat: bool = True, qat_cfg=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced forward over the full sequence -> (logits, aux_loss)."""
+    x = _embed_inputs(params, spec, batch)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None]
+    enc_out = None
+    if spec.encoder_layers:
+        enc_out = _encoder_forward(params, spec, batch["frames"], impl, remat)
+    shared_p = params.get("shared_block")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for g, gp in zip(group_plan(spec), params["groups"]):
+        def body(carry, pslice, _kind=g.kind):
+            y, aux = _layer_forward(spec, _kind, pslice, carry, positions,
+                                    enc_out, shared_p, impl, qat_cfg)
+            return y, aux
+
+        if remat:
+            body = jax.checkpoint(body, policy=None)
+        x, auxes = _scan(body, x, gp)
+        aux_total = aux_total + jnp.sum(auxes)
+
+    logits = _lm_head(params, spec, x)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent cache
+# ---------------------------------------------------------------------------
+
+def init_cache(spec: ModelSpec, batch: int, max_seq: int,
+               dtype=jnp.float32) -> Params:
+    """Cache layout: one dict of state arrays PER LAYER (list per group).
+
+    Per-layer buffers (instead of a stacked (n_layers, ...) array) keep
+    decode updates strictly per-buffer: a stacked cache forces every
+    layer's dynamic_update_slice to produce the full stacked array, which
+    both defeats donation-aliasing analysis and inflates the HLO memory
+    term ~n_layers-fold (§Perf iteration 3).
+    """
+    cache: Params = {"pos": jnp.zeros((), jnp.int32), "groups": []}
+    for g in group_plan(spec):
+        base = _base_kind(g.kind)
+        shapes = blocks.layer_state_shapes(spec, "ssm" if base == "ssm" else base,
+                                           batch, max_seq)
+        layers = []
+        for _ in range(g.n):
+            entry: Dict[str, jnp.ndarray] = {}
+            for name, shape in shapes.items():
+                dt = jnp.float32 if base in ("ssm", "mlstm", "slstm") else dtype
+                fill = -jnp.inf if name in ("m", "m_") else 0.0
+                entry[name] = jnp.full(shape, fill, dt)
+            if g.kind == "ssm_shared":
+                kv_shape = (batch, max_seq, spec.num_kv_heads, spec.head_dim)
+                entry["shared_k"] = jnp.zeros(kv_shape, dtype)
+                entry["shared_v"] = jnp.zeros(kv_shape, dtype)
+            if spec.cross_attention and base.startswith("attn"):
+                ck = (batch, spec.encoder_seq, spec.num_kv_heads, spec.head_dim)
+                entry["cross_k"] = jnp.zeros(ck, dtype)
+                entry["cross_v"] = jnp.zeros(ck, dtype)
+            layers.append(entry)
+        cache["groups"].append(layers)
+    return cache
+
+
+def _attn_prefill_kv(spec, p, xn, positions):
+    B, S = xn.shape[:2]
+    KV, D = spec.num_kv_heads, spec.head_dim
+    k = qdot(xn, p["wk"]).reshape(B, S, KV, D)
+    v = qdot(xn, p["wv"]).reshape(B, S, KV, D)
+    k = L.rope(k, positions, spec.rope_theta)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward + cache construction
+# ---------------------------------------------------------------------------
+
+def prefill(params, spec: ModelSpec, batch, *, max_seq: Optional[int] = None,
+            impl: str = "auto", cache_dtype=None) -> Tuple[jnp.ndarray, Params]:
+    """Run the prompt, return (last-position logits, filled cache)."""
+    x = _embed_inputs(params, spec, batch)
+    B, S = x.shape[:2]
+    max_seq = max_seq or S
+    dtype = cache_dtype or x.dtype
+    positions = jnp.arange(S)[None]
+    enc_out = None
+    if spec.encoder_layers:
+        enc_out = _encoder_forward(params, spec, batch["frames"], impl, False)
+    shared_p = params.get("shared_block")
+    cache = init_cache(spec, B, max_seq, dtype)
+    cache["pos"] = jnp.array(S, jnp.int32)
+
+    for gi, (g, gp) in enumerate(zip(group_plan(spec), params["groups"])):
+        base = _base_kind(g.kind)
+
+        def body(carry, pslice, _kind=g.kind, _base=base):
+            y0 = carry
+            xn = L.norm(spec, pslice, "norm1", y0)
+            out: Dict[str, jnp.ndarray] = {}
+            if _base.startswith("attn"):
+                k, v = _attn_prefill_kv(spec, pslice, xn, positions)
+                y, _ = _layer_forward(spec, _kind, pslice, y0, positions,
+                                      enc_out, shared_p, impl, None)
+                if _base == "attn_local" and spec.sliding_window and \
+                        max_seq == spec.sliding_window:
+                    # ring layout: slot j holds the unique p ≡ j (mod W)
+                    # within the final window [S-W, S)
+                    W = max_seq
+                    if S >= W:
+                        sel = (S - W) + jnp.mod(jnp.arange(W) - (S - W), W)
+                        out["k"], out["v"] = k[:, sel], v[:, sel]
+                    else:
+                        pad = W - S
+                        out["k"] = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                        out["v"] = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                else:
+                    pad = max_seq - S
+                    out["k"] = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    out["v"] = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                if spec.cross_attention:
+                    KV, D = spec.num_kv_heads, spec.head_dim
+                    Se = enc_out.shape[1]
+                    out["cross_k"] = qdot(enc_out, pslice["cross_wk"]).reshape(
+                        B, Se, KV, D)
+                    out["cross_v"] = qdot(enc_out, pslice["cross_wv"]).reshape(
+                        B, Se, KV, D)
+            elif _base == "ssm":
+                y, st = _mamba_prefill(spec, pslice, y0)
+                out.update(st)
+                if _kind == "ssm_shared":
+                    xn2 = L.norm(spec, shared_p, "norm1", y)
+                    k, v = _attn_prefill_kv(spec, shared_p, xn2, positions)
+                    pad = max_seq - S
+                    out["shared_k"] = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    out["shared_v"] = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    y = _shared_block_forward(spec, shared_p, y, positions, impl)
+            elif _base == "mlstm":
+                y, st = _mlstm_prefill(spec, pslice, y0)
+                out.update(st)
+            else:                                   # slstm
+                y, st = _slstm_prefill(spec, pslice, y0)
+                out.update(st)
+            return y, out
+
+        x, outs = _scan(body, x, gp)
+        for li in range(len(cache["groups"][gi])):
+            entry = cache["groups"][gi][li]
+            for k_, v_ in outs.items():
+                if k_ in entry:
+                    entry[k_] = v_[li].astype(entry[k_].dtype)
+                else:
+                    entry[k_] = v_[li]
+
+    logits = _lm_head(params, spec, x[:, -1:])
+    return logits, cache
+
+
+def _mamba_prefill(spec, p, x0):
+    xn = L.norm(spec, p, "norm1", x0)
+    y, st = R.mamba2_forward(spec, p, xn, return_state=True)
+    return x0 + y, st
+
+
+def _mlstm_prefill(spec, p, x0):
+    xn = L.norm(spec, p, "norm1", x0)
+    y, st = R.mlstm_forward(spec, p, xn, return_state=True)
+    return x0 + y, st
+
+
+def _slstm_prefill(spec, p, x0):
+    xn = L.norm(spec, p, "norm1", x0)
+    y, st = R.slstm_forward(spec, p, xn, return_state=True)
+    return x0 + y, st
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def _attn_decode(spec, p, x, pos, kv, *, kind, prefix="") -> Tuple[jnp.ndarray, Dict]:
+    B = x.shape[0]
+    H, KV, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    S = kv["k"].shape[1]
+    q = qdot(x, p[prefix + "wq"]).reshape(B, 1, H, D)
+    k = qdot(x, p[prefix + "wk"]).reshape(B, 1, KV, D)
+    v = qdot(x, p[prefix + "wv"]).reshape(B, 1, KV, D)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = L.rope(q, posb, spec.rope_theta)
+    k = L.rope(k, posb, spec.rope_theta)
+    ring = kind == "attn_local" and spec.sliding_window and S == spec.sliding_window
+    slot = jnp.mod(pos, S) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice(kv["k"], k.astype(kv["k"].dtype),
+                                           (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(kv["v"], v.astype(kv["v"].dtype),
+                                           (0, slot, 0, 0))
+    window = spec.sliding_window if kind == "attn_local" else 0
+    o = L.decode_attention(q, k_cache, v_cache, pos, window=window, ring=bool(ring))
+    out = qdot(o.reshape(B, 1, H * D), p[prefix + "wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def decode_step(params, spec: ModelSpec, cache, tokens) -> Tuple[jnp.ndarray, Params]:
+    """One decoding step for the whole batch. tokens: (B, 1) int32.
+
+    Decode unrolls a python loop over layers with PER-LAYER cache buffers:
+    stacked caches force each layer's update op to produce the whole
+    stacked array (defeating donation aliasing and inflating the HLO
+    memory term ~n_layers-fold — §Perf iterations 2-3).  Decode layer
+    bodies are small, so the unrolled compile stays cheap.
+    """
+    pos = cache["pos"]
+    x = jnp.take(params["global"]["embed"], tokens, axis=0)
+    if spec.name.startswith("gemma"):
+        x = x * math.sqrt(spec.d_model)
+    shared_p = params.get("shared_block")
+    new_groups = []
+
+    for g, gp, cg in zip(group_plan(spec), params["groups"], cache["groups"]):
+        base = _base_kind(g.kind)
+
+        def body(y0, pslice, cslice, _kind=g.kind, _base=base):
+            xn = L.norm(spec, pslice, "norm1", y0)
+            new_c = dict(cslice)
+            if _base.startswith("attn"):
+                h, kv_new = _attn_decode(spec, pslice, xn, pos, cslice, kind=_base)
+                y = y0 + h
+                new_c.update(kv_new)
+                if spec.cross_attention:
+                    xc = L.norm(spec, pslice, "norm_cross", y)
+                    B, H, KV, D = y.shape[0], spec.num_heads, spec.num_kv_heads, spec.head_dim
+                    qc = qdot(xc, pslice["cross_wq"]).reshape(B, 1, H, D)
+                    oc = L.decode_attention(qc, cslice["cross_k"],
+                                            cslice["cross_v"],
+                                            cslice["cross_k"].shape[1] - 1)
+                    y = y + qdot(oc.reshape(B, 1, H * D), pslice["cross_wo"])
+                y2 = L.norm(spec, pslice, "norm2", y)
+                if "router_w" in pslice:
+                    h2, _ = L.moe_block(spec, pslice, y2, group_size=y2.shape[0])
+                else:
+                    h2 = L.mlp_block(spec, pslice, y2)
+                y = y + h2
+            elif _base == "ssm":
+                h, st = R.mamba2_decode_step(
+                    spec, pslice, xn,
+                    {"ssm_state": cslice["ssm_state"],
+                     "conv_state": cslice["conv_state"]})
+                y = y0 + h
+                new_c.update(st)
+                if _kind == "ssm_shared":
+                    xn2 = L.norm(spec, shared_p, "norm1", y)
+                    h2, kv_new = _attn_decode(
+                        spec, shared_p, xn2, pos,
+                        {"k": cslice["shared_k"], "v": cslice["shared_v"]},
+                        kind="attn")
+                    y = y + h2
+                    new_c["shared_k"] = kv_new["k"]
+                    new_c["shared_v"] = kv_new["v"]
+                    y = y + L.mlp_block(spec, shared_p,
+                                        L.norm(spec, shared_p, "norm2", y))
+            elif _base == "mlstm":
+                h, st = R.mlstm_decode_step(
+                    spec, pslice, xn,
+                    {"C": cslice["C"], "n": cslice["n"], "m": cslice["m"]})
+                y = y0 + h
+                new_c.update(st)
+            else:
+                h, st = R.slstm_decode_step(
+                    spec, pslice, xn,
+                    {"c": cslice["c"], "h": cslice["h"],
+                     "n_": cslice["n_"], "m_": cslice["m_"]})
+                y = y0 + h
+                new_c.update(st)
+            return y, {k: new_c[k].astype(cslice[k].dtype) for k in cslice}
+
+        new_layers = []
+        for li, cslice in enumerate(cg):
+            pslice = jax.tree_util.tree_map(lambda v: v[li], gp)
+            x, nc = body(x, pslice, cslice)
+            new_layers.append(nc)
+        new_groups.append(new_layers)
+
+    logits = _lm_head(params, spec, x)
+    new_cache = {"pos": pos + 1, "groups": new_groups}
+    return logits, new_cache

@@ -1,0 +1,306 @@
+"""Recurrent blocks: Mamba2 (chunked SSD scan), mLSTM, sLSTM.
+
+Mamba2 trains with the chunkwise-parallel SSD form (quadratic within a
+chunk, linear across chunks) and decodes with the O(1) recurrent step —
+the two are property-tested against each other.  xLSTM blocks use the
+recurrent form (lax.scan over time) for training and single-step decode;
+a chunkwise mLSTM is a recorded §Perf candidate.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model_config import ModelSpec
+from repro.models.layers import rmsnorm
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+def _ssm_dims(spec: ModelSpec):
+    s = spec.ssm
+    d_inner = s.expand * spec.d_model
+    nh = s.num_heads or d_inner // s.head_dim
+    return s, d_inner, nh
+
+
+def _segsum(log_a: jnp.ndarray) -> jnp.ndarray:
+    """log_a (..., C) -> (..., C, C) with L[i, j] = sum_{j<k<=i} log_a[k]
+    for i >= j, -inf otherwise."""
+    C = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]                     # sum_(j,i]
+    i = jnp.arange(C)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_forward(spec: ModelSpec, p: Params, x: jnp.ndarray,
+                   return_state: bool = False):
+    """Chunked SSD forward. x: (B, S, d) -> (B, S, d)[, final decode state]."""
+    s, d_inner, nh = _ssm_dims(spec)
+    B, S, d = x.shape
+    C = min(s.chunk, S)
+    if S % C:
+        C = math.gcd(S, C) or 1
+    N = S // C
+    hd, st = s.head_dim, s.state_dim
+
+    zxbcdt = x @ p["ssm_in_proj"].astype(x.dtype)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + st, 2 * d_inner + 2 * st],
+        axis=-1)
+    # depthwise causal conv over (xs, B, C)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    w = p["ssm_conv_w"].astype(x.dtype)                            # (cw, conv_dim)
+    cw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + S] * w[i] for i in range(cw))
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + st], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["ssm_dt_bias"].astype(jnp.float32))   # (B,S,nh)
+    A = -jnp.exp(p["ssm_A_log"].astype(jnp.float32))               # (nh,)
+    log_a = dt * A                                                 # (B,S,nh)
+    xh = xs.reshape(B, S, nh, hd).astype(jnp.float32)
+    xdt = xh * dt[..., None]                                       # fold dt into x
+    Bf = Bm.astype(jnp.float32)                                    # (B,S,st) group=1
+    Cf = Cm.astype(jnp.float32)
+
+    # chunk
+    la = log_a.reshape(B, N, C, nh)
+    xc = xdt.reshape(B, N, C, nh, hd)
+    Bc = Bf.reshape(B, N, C, st)
+    Cc = Cf.reshape(B, N, C, st)
+
+    # intra-chunk (quadratic within chunk):
+    # y[b,n,c,h,p] = sum_{l<=c} scores[b,n,c,l] * L[b,n,h,c,l] * xc[b,n,l,h,p]
+    Lm = jnp.exp(_segsum(la.transpose(0, 1, 3, 2)))                # (B,N,nh,C,C)
+    scores = jnp.einsum("bncs,bnls->bncl", Cc, Bc)                 # (B,N,C,C)
+    y_intra = jnp.einsum("bncl,bnhcl,bnlhp->bnchp", scores, Lm, xc)
+
+    # chunk-final states: S_n = sum_l exp(sum_{l<k<=C} la) * B_l ⊗ x_l
+    acum = jnp.cumsum(la, axis=2)
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)              # (B,N,C,nh)
+    states = jnp.einsum("bnls,bnlh,bnlhp->bnhps", Bc, decay_to_end, xc)
+
+    # inter-chunk recurrence over N chunks
+    chunk_decay = jnp.exp(acum[:, :, -1, :])                       # (B,N,nh)
+
+    def scan_fn(h, inp):
+        st_n, dec = inp                                            # (B,nh,hd,st),(B,nh)
+        h_new = h * dec[..., None, None] + st_n
+        return h_new, h
+
+    h0 = jnp.zeros((B, nh, hd, st), jnp.float32)
+    h_final, h_prev = jax.lax.scan(scan_fn, h0,
+                                   (states.transpose(1, 0, 2, 3, 4),
+                                    chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                       # (B,N,nh,hd,st)
+
+    decay_from_start = jnp.exp(acum)                               # (B,N,C,nh)
+    y_inter = jnp.einsum("bncs,bnhps,bnch->bnchp", Cc, h_prev, decay_from_start)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    y = y + xh * p["ssm_D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y.astype(x.dtype), p["ssm_gate_norm"]) * jax.nn.silu(z)
+    out = y @ p["ssm_out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    cw = p["ssm_conv_w"].shape[0]
+    raw = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))   # guard S < cw-1
+    conv_state = raw[:, raw.shape[1] - (cw - 1):, :].astype(jnp.float32)
+    return out, {"ssm_state": h_final, "conv_state": conv_state}
+
+
+def mamba2_init_state(spec: ModelSpec, batch: int):
+    s, d_inner, nh = _ssm_dims(spec)
+    return {
+        "ssm_state": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+        "conv_state": jnp.zeros((batch, s.conv_width - 1, d_inner + 2 * s.state_dim),
+                                jnp.float32),
+    }
+
+
+def mamba2_decode_step(spec: ModelSpec, p: Params, x: jnp.ndarray,
+                       state: Dict[str, jnp.ndarray]):
+    """x: (B, 1, d). Returns (y (B,1,d), new_state)."""
+    s, d_inner, nh = _ssm_dims(spec)
+    B = x.shape[0]
+    hd, st = s.head_dim, s.state_dim
+    zxbcdt = x[:, 0] @ p["ssm_in_proj"].astype(x.dtype)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + st, 2 * d_inner + 2 * st],
+        axis=-1)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1).astype(jnp.float32)
+    conv_buf = jnp.concatenate([state["conv_state"], xbc[:, None]], axis=1)
+    w = p["ssm_conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("bcf,cf->bf", conv_buf, w)
+    conv = jax.nn.silu(conv)
+    new_conv_state = conv_buf[:, 1:]
+    xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + st], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["ssm_dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["ssm_A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                            # (B,nh)
+    xh = xs.reshape(B, nh, hd)
+    h = state["ssm_state"] * a[..., None, None] + jnp.einsum(
+        "bhp,bs,bh->bhps", xh, Bm, dt)
+    y = jnp.einsum("bhps,bs->bhp", h, Cm)
+    y = y + xh * p["ssm_D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, d_inner)
+    y = rmsnorm(y.astype(x.dtype), p["ssm_gate_norm"]) * jax.nn.silu(z)
+    y = y @ p["ssm_out_proj"].astype(x.dtype)
+    return y[:, None], {"ssm_state": h, "conv_state": new_conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM) — recurrent form
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(spec: ModelSpec):
+    x = spec.xlstm
+    inner = int(x.proj_factor * spec.d_model)
+    qk = int(x.qk_dim_factor * inner)
+    nh = spec.num_heads
+    return inner, qk, nh
+
+
+def mlstm_init_state(spec: ModelSpec, batch: int):
+    inner, qk, nh = _mlstm_dims(spec)
+    return {"C": jnp.zeros((batch, nh, qk // nh, inner // nh), jnp.float32),
+            "n": jnp.zeros((batch, nh, qk // nh), jnp.float32),
+            "m": jnp.full((batch, nh), -jnp.inf, jnp.float32)}
+
+
+def _mlstm_step(carry, qkvif):
+    """One stabilized mLSTM recurrence step.
+    q,k: (B,nh,dk); v: (B,nh,dv); i,f: (B,nh) raw gate preacts."""
+    C, n, m = carry
+    q, k, v, ig, fg = qkvif
+    logf = -jax.nn.softplus(-fg)                   # log sigmoid(f)
+    m_new = jnp.maximum(logf + m, ig)
+    fquot = jnp.exp(logf + m - m_new)              # (B,nh)
+    iquot = jnp.exp(ig - m_new)
+    C_new = fquot[..., None, None] * C + iquot[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = fquot[..., None] * n + iquot[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C_new)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", q, n_new))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    y = num / den[..., None]
+    return (C_new, n_new, m_new), y
+
+
+def mlstm_forward(spec: ModelSpec, p: Params, x: jnp.ndarray,
+                  return_state: bool = False):
+    """Recurrent mLSTM block. x: (B,S,d)."""
+    inner, qk, nh = _mlstm_dims(spec)
+    B, S, d = x.shape
+    up = x @ p["ml_up"].astype(x.dtype)
+    h, z = jnp.split(up, 2, axis=-1)                # (B,S,inner) each
+    q = (h @ p["ml_q"].astype(x.dtype)).reshape(B, S, nh, qk // nh)
+    k = (h @ p["ml_k"].astype(x.dtype)).reshape(B, S, nh, qk // nh)
+    v = (h @ p["ml_v"].astype(x.dtype)).reshape(B, S, nh, inner // nh)
+    ig = h @ p["ml_igate"].astype(x.dtype)          # (B,S,nh)
+    fg = h @ p["ml_fgate"].astype(x.dtype)
+    k = k / math.sqrt(qk // nh)
+
+    def scan_body(carry, t):
+        return _mlstm_step(carry, t)
+
+    init = (jnp.zeros((B, nh, qk // nh, inner // nh), jnp.float32),
+            jnp.zeros((B, nh, qk // nh), jnp.float32),
+            jnp.full((B, nh), -jnp.inf, jnp.float32))
+    xs = (q.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          ig.transpose(1, 0, 2).astype(jnp.float32),
+          fg.transpose(1, 0, 2).astype(jnp.float32))
+    carry, ys = jax.lax.scan(scan_body, init, xs)   # (S,B,nh,dv)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, inner).astype(x.dtype)
+    y = rmsnorm(y, p["ml_onorm"]) * jax.nn.silu(z)
+    out = y @ p["ml_down"].astype(x.dtype)
+    if not return_state:
+        return out
+    C, n, m = carry
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode_step(spec: ModelSpec, p: Params, x: jnp.ndarray, state):
+    inner, qk, nh = _mlstm_dims(spec)
+    B = x.shape[0]
+    up = x[:, 0] @ p["ml_up"].astype(x.dtype)
+    h, z = jnp.split(up, 2, axis=-1)
+    q = (h @ p["ml_q"].astype(x.dtype)).reshape(B, nh, qk // nh)
+    k = (h @ p["ml_k"].astype(x.dtype)).reshape(B, nh, qk // nh) / math.sqrt(qk // nh)
+    v = (h @ p["ml_v"].astype(x.dtype)).reshape(B, nh, inner // nh)
+    ig = h @ p["ml_igate"].astype(x.dtype)
+    fg = h @ p["ml_fgate"].astype(x.dtype)
+    (C, n, m), y = _mlstm_step(
+        (state["C"], state["n"], state["m"]),
+        (q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+         ig.astype(jnp.float32), fg.astype(jnp.float32)))
+    y = y.reshape(B, inner).astype(x.dtype)
+    y = rmsnorm(y, p["ml_onorm"]) * jax.nn.silu(z)
+    y = y @ p["ml_down"].astype(x.dtype)
+    return y[:, None], {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar-memory LSTM with exponential gating
+# ---------------------------------------------------------------------------
+
+def slstm_init_state(spec: ModelSpec, batch: int):
+    d = spec.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "h": z, "n_": z, "m_": jnp.full((batch, d), -jnp.inf, jnp.float32)}
+
+
+def _slstm_step(spec: ModelSpec, p: Params, carry, x_t):
+    c, h, n, m = carry
+    pre = (x_t @ p["sl_wx"].astype(x_t.dtype)
+           + h.astype(x_t.dtype) @ p["sl_wr"].astype(x_t.dtype)
+           + p["sl_bias"].astype(x_t.dtype)).astype(jnp.float32)
+    i_, f_, z_, o_ = jnp.split(pre, 4, axis=-1)
+    logf = -jax.nn.softplus(-f_)
+    m_new = jnp.maximum(logf + m, i_)
+    fq = jnp.exp(logf + m - m_new)
+    iq = jnp.exp(i_ - m_new)
+    c_new = fq * c + iq * jnp.tanh(z_)
+    n_new = fq * n + iq
+    h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, h_new, n_new, m_new), h_new
+
+
+def slstm_forward(spec: ModelSpec, p: Params, x: jnp.ndarray,
+                  return_state: bool = False):
+    B, S, d = x.shape
+    init = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+            jnp.zeros((B, d), jnp.float32), jnp.full((B, d), -jnp.inf, jnp.float32))
+
+    def body(carry, x_t):
+        return _slstm_step(spec, p, carry, x_t)
+
+    carry, hs = jax.lax.scan(body, init, x.transpose(1, 0, 2))
+    out = hs.transpose(1, 0, 2).astype(x.dtype)
+    if not return_state:
+        return out
+    c, h, n, m = carry
+    return out, {"c": c, "h": h, "n_": n, "m_": m}
+
+
+def slstm_decode_step(spec: ModelSpec, p: Params, x: jnp.ndarray, state):
+    carry = (state["c"], state["h"], state["n_"], state["m_"])
+    carry, h = _slstm_step(spec, p, carry, x[:, 0])
+    c, hh, n, m = carry
+    return h[:, None].astype(x.dtype), {"c": c, "h": hh, "n_": n, "m_": m}

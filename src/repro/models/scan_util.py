@@ -1,0 +1,28 @@
+"""Scan wrapper with dry-run unrolling.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, so scanned layer stacks under-report FLOPs/bytes/collectives by
+~L x microbatches.  The dry-run sets REPRO_UNROLL_SCANS=1 to fully unroll
+structural scans (layer groups, microbatch accumulation, KV-chunk loops),
+making cost_analysis() and the HLO collective parser exact.  Time-step
+recurrences (sLSTM/mLSTM token loops) stay rolled — their HLO cost is
+corrected analytically and flagged in the roofline table (DESIGN.md §7).
+
+Training/serving runs leave the env unset and get compact scanned HLO.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def unrolling_enabled() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def scan(body, init, xs, *, structural: bool = True, unroll_hint: int = 1):
+    """lax.scan that fully unrolls structural loops in dry-run mode."""
+    if structural and unrolling_enabled():
+        return jax.lax.scan(body, init, xs, unroll=True)
+    return jax.lax.scan(body, init, xs, unroll=unroll_hint)

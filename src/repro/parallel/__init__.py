@@ -1,0 +1,2 @@
+from repro.parallel.sharding import ShardingRules, dp_axes
+from repro.parallel.compress import compressed_allreduce, init_residual

@@ -1,0 +1,17 @@
+"""Quantization substrate (paper §II): sym/asym x tensor/channel/group,
+INT8/INT4, nibble packing, QAT fake-quant, weight-only serving."""
+from repro.quant.qtypes import (A8_ASYM_TENSOR, A8_SYM_TENSOR, QuantConfig,
+                                QuantizedTensor, W4_SYM_GROUP, W8_SYM_CHANNEL)
+from repro.quant.quantize import (dequantize, fake_quant, pack_int4,
+                                  quantization_mse, quantize, quantize_values,
+                                  unpack_int4)
+from repro.quant.qlinear import (dequant_param, maybe_fake_quant, qdot,
+                                 quantize_params, weight_cfg)
+
+__all__ = [
+    "QuantConfig", "QuantizedTensor", "W8_SYM_CHANNEL", "W4_SYM_GROUP",
+    "A8_ASYM_TENSOR", "A8_SYM_TENSOR", "dequantize", "fake_quant",
+    "pack_int4", "quantization_mse", "quantize", "quantize_values",
+    "unpack_int4", "dequant_param", "maybe_fake_quant", "qdot",
+    "quantize_params", "weight_cfg",
+]

@@ -1,0 +1,109 @@
+"""Quantized linear application + weight-pytree quantization for serving.
+
+``quantize_params`` walks a model parameter pytree and converts matmul
+weights to QuantizedTensor (per-channel INT8 or group INT4 symmetric —
+the paper's recommended weight scheme); norms/scales/embeddings stay in
+float.  ``qdot`` applies x @ W for float or quantized W transparently.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.quant.qtypes import (QuantConfig, QuantizedTensor, W4_SYM_GROUP,
+                                W8_SYM_CHANNEL)
+from repro.quant.quantize import dequantize, fake_quant, quantize
+
+# param-name substrings that stay float (norms, router, biases, embeddings)
+_SKIP_SUBSTR = ("norm", "bias", "gate", "scale", "embed", "router", "conv")
+
+
+def weight_cfg(precision: str) -> Optional[QuantConfig]:
+    return {"int8": W8_SYM_CHANNEL, "int4": W4_SYM_GROUP,
+            "int8_w8a8": W8_SYM_CHANNEL}.get(precision)
+
+
+def _quantizable(name: str, x) -> bool:
+    if not hasattr(x, "ndim") or x.ndim < 2:
+        return False
+    low = name.lower()
+    if any(s in low for s in _SKIP_SUBSTR):
+        return False
+    # group-32 int4 needs contraction dim % 64 (pack+group); callers keep
+    # dims MXU-aligned so this holds for every assigned arch
+    return True
+
+
+def quantize_params(params: Dict[str, Any], precision: str) -> Dict[str, Any]:
+    """Weight-only quantization of a (possibly nested) param dict."""
+    cfg = weight_cfg(precision)
+    if cfg is None:
+        return params
+
+    div = cfg.group_size * 2 if cfg.bits == 4 else 1
+
+    def _quantize_stacked(w):
+        if w.shape[1] % div:
+            return w
+        qs = [quantize(w[i], cfg) for i in range(w.shape[0])]
+        return QuantizedTensor(q=jnp.stack([t.q for t in qs]),
+                               scale=jnp.stack([t.scale for t in qs]),
+                               zero=None, config=cfg)
+
+    def walk(prefix: str, tree):
+        if isinstance(tree, dict):
+            return {k: walk(f"{prefix}/{k}", v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(f"{prefix}/{i}", v) for i, v in enumerate(tree))
+        if _quantizable(prefix, tree):
+            if tree.ndim == 3:           # stacked scan layers / experts
+                return _quantize_stacked(tree)
+            if tree.shape[0] % div:
+                return tree              # leave non-divisible weights float
+            return quantize(tree, cfg)
+        return tree
+
+    return walk("", params)
+
+
+def qdot(x: jnp.ndarray, w, *, impl: str = "auto", out_dtype=None) -> jnp.ndarray:
+    """x @ w where w is a float array or a QuantizedTensor.
+
+    Collapses leading dims of x to a 2-D matmul for the kernel.
+    """
+    if not isinstance(w, QuantizedTensor):
+        return jnp.dot(x, w.astype(x.dtype) if hasattr(w, "astype") else w)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    # pad rows to the kernel block if needed
+    pad = (-M) % 128
+    if impl != "ref" and pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    if impl == "ref" or x2.shape[0] % 128 or K % 128 or w.shape[1] % 128:
+        out = kops.quant_matmul(x.reshape(-1, K), w, impl="ref",
+                                out_dtype=out_dtype)
+        return out.reshape(*lead, w.shape[1])
+    out = kops.quant_matmul(x2, w, impl=impl, out_dtype=out_dtype)
+    if pad:
+        out = out[:M]
+    return out.reshape(*lead, w.shape[1])
+
+
+def dequant_param(w):
+    return dequantize(w) if isinstance(w, QuantizedTensor) else w
+
+
+def maybe_fake_quant(w: jnp.ndarray, cfg: Optional[QuantConfig]) -> jnp.ndarray:
+    """QAT hook: fake-quantize a weight inside the training step (eq. 6)."""
+    if cfg is None or w.ndim < 2:
+        return w
+    if w.shape[-2] % (cfg.group_size if cfg.granularity == "group" else 1):
+        return w
+    if w.ndim == 3:
+        return jax.vmap(lambda m: fake_quant(m, cfg))(w)
+    return fake_quant(w, cfg)

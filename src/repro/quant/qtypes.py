@@ -1,0 +1,87 @@
+"""Quantization configuration taxonomy (paper §II-A).
+
+symmetric vs asymmetric x per-tensor vs per-channel vs per-group, at
+8 or 4 bits.  The paper's recommended serving combo — per-channel
+symmetric weights + per-tensor asymmetric activations — is the default.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 8                       # 8 or 4
+    symmetric: bool = True              # eq. (1)/(2) vs eq. (3)/(4)
+    granularity: str = "channel"        # tensor | channel | group
+    group_size: int = 32                # for granularity == "group"
+    axis: int = -1                      # channel axis (output features)
+
+    def __post_init__(self):
+        assert self.bits in (4, 8), "INT8/INT4 only (paper scope)"
+        assert self.granularity in ("tensor", "channel", "group")
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1      # 127 / 7
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))         # -128 / -8
+
+    @property
+    def storage_dtype(self):
+        return jnp.int8                        # int4 packs 2 nibbles/int8
+
+
+# Common presets
+W8_SYM_CHANNEL = QuantConfig(bits=8, symmetric=True, granularity="channel")
+W4_SYM_GROUP = QuantConfig(bits=4, symmetric=True, granularity="group", group_size=32)
+A8_ASYM_TENSOR = QuantConfig(bits=8, symmetric=False, granularity="tensor")
+A8_SYM_TENSOR = QuantConfig(bits=8, symmetric=True, granularity="tensor")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QuantizedTensor:
+    """Dequantizable container: values (int8, possibly nibble-packed),
+    scale, optional zero-point.
+
+    Registered as a pytree (children: q/scale/zero; aux: config) so that
+    stacked per-layer weights slice correctly under ``lax.scan`` and ride
+    inside ordinary param dicts through jit/pjit.
+    """
+    q: object                # int8 ndarray (packed along dim -2 if bits==4)
+    scale: object            # f32 scale, broadcastable after unpack
+    zero: Optional[object]   # None for symmetric
+    config: QuantConfig
+
+    @property
+    def shape(self) -> tuple:
+        """Logical (unpacked) shape."""
+        s = list(self.q.shape)
+        if self.config.bits == 4:
+            s[-2] *= 2
+        return tuple(s)
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    def tree_flatten(self):
+        if self.zero is None:
+            return (self.q, self.scale), (self.config, False)
+        return (self.q, self.scale, self.zero), (self.config, True)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        config, has_zero = aux
+        if has_zero:
+            q, scale, zero = children
+        else:
+            (q, scale), zero = children, None
+        return cls(q=q, scale=scale, zero=zero, config=config)

@@ -1,0 +1,156 @@
+"""Quantize / dequantize / fake-quant primitives (paper §II eqs 1-6).
+
+Pure-jnp implementations: these are the reference semantics for the
+Pallas kernels (kernels/ref.py re-exports from here) and the QAT path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.qtypes import QuantConfig, QuantizedTensor
+
+
+def _reduce_axes(x: jnp.ndarray, cfg: QuantConfig) -> Tuple[int, ...]:
+    if cfg.granularity == "tensor":
+        return tuple(range(x.ndim))
+    axis = cfg.axis % x.ndim
+    return tuple(i for i in range(x.ndim) if i != axis)
+
+
+def _group_reshape(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """group quant: split the *contraction* dim (axis 0 for (in,out) weights)
+    into groups of cfg.group_size."""
+    g = cfg.group_size
+    assert x.shape[0] % g == 0, f"dim {x.shape[0]} not divisible by group {g}"
+    return x.reshape(x.shape[0] // g, g, *x.shape[1:])
+
+
+def compute_scale_zero(x: jnp.ndarray, cfg: QuantConfig):
+    """Scale (and zero point for asymmetric) per eq. (1)/(3)."""
+    if cfg.granularity == "group":
+        xg = _group_reshape(x, cfg)
+        red = (1,)
+        if cfg.symmetric:
+            amax = jnp.max(jnp.abs(xg), axis=red, keepdims=True)
+            scale = jnp.maximum(amax, 1e-8) / cfg.qmax
+            return scale, None
+        lo = jnp.min(xg, axis=red, keepdims=True)
+        hi = jnp.max(xg, axis=red, keepdims=True)
+        scale = jnp.maximum(hi - lo, 1e-8) / (cfg.qmax - cfg.qmin)
+        zero = lo - cfg.qmin * scale
+        return scale, zero
+    red = _reduce_axes(x, cfg)
+    if cfg.symmetric:
+        amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / cfg.qmax
+        return scale, None
+    lo = jnp.min(x, axis=red, keepdims=True)
+    hi = jnp.max(x, axis=red, keepdims=True)
+    scale = jnp.maximum(hi - lo, 1e-8) / (cfg.qmax - cfg.qmin)
+    zero = lo - cfg.qmin * scale
+    return scale, zero
+
+
+def quantize_values(x: jnp.ndarray, cfg: QuantConfig):
+    """x -> (int8 values in [qmin, qmax], scale, zero). eq. (1)/(3)."""
+    scale, zero = compute_scale_zero(x, cfg)
+    xx = _group_reshape(x, cfg) if cfg.granularity == "group" else x
+    if zero is None:
+        q = jnp.round(xx / scale)             # eq. (1)
+    else:
+        q = jnp.round((xx - zero) / scale)    # eq. (3); z maps lo -> qmin
+    q = jnp.clip(q, cfg.qmin, cfg.qmax).astype(jnp.int8)
+    if cfg.granularity == "group":
+        q = q.reshape(x.shape)
+    return q, scale, zero
+
+
+def dequantize_values(q: jnp.ndarray, scale: jnp.ndarray,
+                      zero: Optional[jnp.ndarray], cfg: QuantConfig,
+                      out_dtype=jnp.float32) -> jnp.ndarray:
+    """eq. (2)/(4)."""
+    if cfg.granularity == "group":
+        qg = _group_reshape(q.astype(jnp.float32), cfg)
+        x = qg * scale if zero is None else qg * scale + zero
+        return x.reshape(q.shape).astype(out_dtype)
+    qf = q.astype(jnp.float32)
+    if zero is None:
+        return (qf * scale).astype(out_dtype)  # eq. (2)
+    return (qf * scale + zero).astype(out_dtype)  # eq. (4)
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing: two int4 values per int8 byte along the leading dim
+# ---------------------------------------------------------------------------
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """(2n, ...) int8 in [-8, 7] -> (n, ...) int8, low nibble = even rows."""
+    assert q.shape[0] % 2 == 0
+    lo = q[0::2] & 0x0F
+    hi = (q[1::2] & 0x0F) << 4
+    return (lo | hi).astype(jnp.int8)
+
+
+def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
+    """inverse of pack_int4 (sign-extends nibbles)."""
+    lo = (p & 0x0F).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = ((p >> 4) & 0x0F).astype(jnp.int8)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=1)
+    return out.reshape(p.shape[0] * 2, *p.shape[1:]).astype(jnp.int8)
+
+
+def quantize(x: jnp.ndarray, cfg: QuantConfig, pack: bool = True) -> QuantizedTensor:
+    q, scale, zero = quantize_values(x, cfg)
+    if cfg.bits == 4 and pack:
+        q = pack_int4(q)
+    return QuantizedTensor(q=q, scale=scale, zero=zero, config=cfg)
+
+
+def dequantize(t: QuantizedTensor, out_dtype=jnp.float32) -> jnp.ndarray:
+    if t.q.ndim > 2:                      # stacked layers/experts: map over lead
+        lead = t.q.shape[0]
+        sub = [QuantizedTensor(q=t.q[i], scale=t.scale[i],
+                               zero=None if t.zero is None else t.zero[i],
+                               config=t.config) for i in range(lead)]
+        return jnp.stack([dequantize(s, out_dtype) for s in sub])
+    q = t.q
+    if t.config.bits == 4:
+        q = unpack_int4(q)
+    return dequantize_values(q, t.scale, t.zero, t.config, out_dtype=out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# QAT: fake quantization with straight-through estimator (paper eq. 6)
+# ---------------------------------------------------------------------------
+
+import functools as _functools
+
+
+@_functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    q, scale, zero = quantize_values(x, cfg)
+    return dequantize_values(q, scale, zero, cfg, out_dtype=x.dtype)
+
+
+def _fq_fwd(x, cfg):
+    return fake_quant(x, cfg), None
+
+
+def _fq_bwd(cfg, _, g):
+    return (g,)                          # straight-through estimator
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantization_mse(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """MSE introduced by a quantization scheme (paper §II-A trade-off:
+    symmetric has higher MSE than asymmetric on shifted data)."""
+    q, scale, zero = quantize_values(x, cfg)
+    xhat = dequantize_values(q, scale, zero, cfg)
+    return jnp.mean((x - xhat) ** 2)

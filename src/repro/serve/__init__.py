@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeConfig, generate, load_quantized, make_prefill_step, make_serve_step

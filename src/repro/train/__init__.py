@@ -1,0 +1,3 @@
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update, warmup_cosine
+from repro.train.train_step import TrainConfig, cross_entropy, make_train_step
+from repro.train.loop import LoopConfig, SimulatedPreemption, train

@@ -1,0 +1,111 @@
+"""Training step: loss, gradient accumulation, remat, QAT, optimizer.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+suitable for jax.jit with in/out shardings from ShardingRules.  Gradient
+accumulation scans microbatches, deferring the (GSPMD-inserted) DP grad
+all-reduce to the single optimizer boundary — the standard overlap trick.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.model_config import ModelSpec
+from repro.models import lm
+from repro.models.scan_util import scan as _scan
+from repro.quant.qtypes import QuantConfig
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                   clip_by_global_norm)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: AdamWConfig = field(default_factory=AdamWConfig)
+    microbatches: int = 1           # grad accumulation steps per train step
+    remat: bool = True
+    aux_loss_coef: float = 0.01     # MoE load-balance loss
+    qat: Optional[QuantConfig] = None
+    attention_impl: str = "auto"
+    lr_schedule: Optional[Callable] = None
+    z_loss: float = 1e-4            # logit norm regularizer (stability)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_size: int, z_loss: float = 0.0):
+    """Masked CE over the padded vocab. labels < 0 are masked."""
+    vpad = logits.shape[-1]
+    if vpad > vocab_size:
+        neg = jnp.full((vpad - vocab_size,), -1e30, logits.dtype)
+        logits = logits.at[..., vocab_size:].set(neg)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    if z_loss:
+        loss = loss + z_loss * jnp.sum(jnp.square(lse) * mask) / jnp.maximum(
+            jnp.sum(mask), 1.0)
+    return loss
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    def sp(x):
+        B = x.shape[0]
+        assert B % n == 0, f"batch {B} not divisible by microbatches {n}"
+        return x.reshape(n, B // n, *x.shape[1:])
+    return {k: sp(v) for k, v in batch.items()}
+
+
+def make_loss_fn(spec: ModelSpec, cfg: TrainConfig):
+    def loss_fn(params, mb):
+        logits, aux = lm.forward(params, spec, mb, impl=cfg.attention_impl,
+                                 remat=cfg.remat, qat_cfg=cfg.qat)
+        loss = cross_entropy(logits, mb["labels"], spec.vocab_size,
+                             z_loss=cfg.z_loss)
+        total = loss + cfg.aux_loss_coef * aux
+        return total, {"loss": loss, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(spec: ModelSpec, cfg: TrainConfig):
+    loss_fn = make_loss_fn(spec, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        n = cfg.microbatches
+        if n > 1:
+            mbs = _split_microbatches(batch, n)
+
+            def accum(carry, mb):
+                gsum = carry
+                (_, metrics), grads = grad_fn(params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+                return gsum, metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, metrics = _scan(accum, zeros, mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / n, gsum)
+            metrics = jax.tree_util.tree_map(lambda m: jnp.mean(m), metrics)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, cfg.optimizer.grad_clip)
+        lr = (cfg.lr_schedule(opt_state.step) if cfg.lr_schedule
+              else jnp.asarray(cfg.optimizer.lr, jnp.float32))
+        new_params, new_opt = adamw_update(cfg.optimizer, grads, opt_state,
+                                           params, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,135 @@
+"""Core analytical model: paper equations, generalized analysis, exactness
+against the actual JAX model parameters."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES
+from repro.configs.edge_models import EDGE_MODELS
+from repro.core import analytical, blocks
+from repro.core.model_config import ModelSpec, ShapeSpec
+from repro.core.precision import get as get_precision
+from repro.models import lm
+
+
+def test_eq7_param_count():
+    # P = L·4H² + L·2HI + 2VH
+    assert analytical.paper_param_count(22, 2048, 5632, 32000) == \
+        22 * 4 * 2048 ** 2 + 22 * 2 * 2048 * 5632 + 2 * 32000 * 2048
+
+
+def test_eq8_flops_per_token():
+    L, H, I, S = 16, 1024, 4096, 2048
+    expected = L * (6 * H * H + 4 * H * S + 4 * H * I + 4 * I * H + 9 * H)
+    assert analytical.paper_flops_per_token(L, H, I, S) == expected
+
+
+def test_eq9_memory():
+    P, B, S, H, L = 1.1e9, 2.0, 2048, 2048, 22
+    assert analytical.paper_memory(P, B, S, H, L) == pytest.approx(
+        P * B + S * H * B + 2 * L * S * H * B)
+
+
+def test_eq8_vs_generalized_accounting():
+    """Paper eq. 8 uses idiosyncratic accounting (6H² for QKVO where the
+    standard 2-FLOPs/MAC count gives 8H²; 4HI+4IH=8HI for the FF block
+    where standard gives 4HI).  The generalized model uses the standard
+    count; this test pins BOTH: the attention-context term (4HS) agrees
+    exactly, and the known over/under-counts bound the total ratio.
+    (Documented in DESIGN.md §1.)"""
+    spec = ModelSpec(name="vanilla", family="dense", num_layers=8,
+                     d_model=1024, num_heads=16, num_kv_heads=16,
+                     d_ff=4096, vocab_size=32000, vocab_pad_multiple=1,
+                     act="gelu")
+    S = 2048
+    ours = sum(blocks.layer_flops_per_token(spec, "attn", S)
+               for _ in range(spec.num_layers))
+    paper = analytical.paper_flops_per_token(
+        spec.num_layers, spec.d_model, spec.d_ff, S)
+    # attention-context term identical in both accountings (minus our
+    # explicit softmax flops, which the paper folds into the 9H term)
+    H = spec.d_model
+    assert blocks.attention_flops_per_token(spec, S) - (
+        2 * H * spec.q_dim + 4 * H * spec.kv_dim + 2 * spec.q_dim * H) \
+        - 7 * spec.num_heads * S == pytest.approx(4 * H * S, rel=0.01)
+    # paper over-counts FF 2x, under-counts QKVO -> ratio in a known band
+    assert 0.6 < ours / paper < 0.9
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_param_count_matches_model_init(name):
+    """Analytical parameter count is exact vs the materialized model."""
+    spec = ASSIGNED[name].scaled_down(layers=4, width=64, vocab=128)
+    params = lm.init(jax.random.PRNGKey(0), spec)
+    assert lm.param_count_actual(params) == blocks.param_count(spec, padded=True)
+
+
+def test_moe_active_params():
+    spec = ASSIGNED["qwen2-moe-a2.7b"]
+    active = blocks.active_param_count(spec)
+    assert 2.4e9 < active < 3.0e9          # "A2.7B"
+    assert blocks.param_count(spec, padded=False) > 14e9
+
+
+def test_llama4_scout_totals():
+    spec = ASSIGNED["llama4-scout-17b-a16e"]
+    assert 16e9 < blocks.active_param_count(spec) < 18e9       # "17B"
+    assert 100e9 < blocks.param_count(spec, padded=False) < 115e9
+
+
+def test_decode_vs_train_model_flops():
+    spec = ASSIGNED["glm4-9b"]
+    prec = get_precision("bf16")
+    tr = analytical.analyze(spec, SHAPES["train_4k"], prec)
+    de = analytical.analyze(spec, SHAPES["decode_32k"], prec)
+    # train: 6·N·tokens ; decode: 2·N·batch
+    assert tr.model_flops == pytest.approx(6 * tr.params * SHAPES["train_4k"].tokens)
+    assert de.model_flops == pytest.approx(2 * de.params * 128)
+
+
+def test_kv_cache_scaling():
+    spec = ASSIGNED["glm4-9b"]
+    c1 = blocks.cache_bytes(spec, batch=1, max_seq=1024)
+    c2 = blocks.cache_bytes(spec, batch=1, max_seq=2048)
+    assert c2 == pytest.approx(2 * c1)
+
+
+def test_sliding_window_caps_cache():
+    g = ASSIGNED["gemma3-4b"]
+    long_cache = blocks.cache_bytes(g, batch=1, max_seq=524_288)
+    # local layers hold only the window: way below full-attention cost
+    full = (g.num_layers * 2 * 524_288 * g.kv_dim * 2)
+    assert long_cache < 0.25 * full
+
+
+def test_ssm_cache_constant_in_seq():
+    x = ASSIGNED["xlstm-350m"]
+    assert blocks.cache_bytes(x, 1, 1024) == blocks.cache_bytes(x, 1, 524_288)
+
+
+def test_collective_terms_scale_with_dp():
+    spec = ASSIGNED["granite-3-8b"]
+    prec = get_precision("bf16")
+    a1 = analytical.analyze(spec, SHAPES["train_4k"], prec,
+                            mesh=analytical.MeshShape(dp=16, tp=16))
+    a2 = analytical.analyze(spec, SHAPES["train_4k"], prec,
+                            mesh=analytical.MeshShape(dp=16, tp=16, pods=2))
+    # more DP -> (n-1)/n grows slightly, per-device grad bytes unchanged
+    assert a2.collectives.dp_grad > a1.collectives.dp_grad
+
+
+def test_memory_fits_v5e_train():
+    """Per-device training memory of the largest model must fit 16 GiB HBM
+    under the production sharding. 109B params need FSDP (2-D weight
+    sharding over model x data) on top of TP/EP — plain TP16 leaves
+    13.7 GB of bf16 weights per chip."""
+    spec = ASSIGNED["llama4-scout-17b-a16e"]
+    prec = get_precision("bf16")
+    dense = analytical.analyze(spec, SHAPES["train_4k"], prec,
+                               mesh=analytical.MeshShape(dp=16, tp=16),
+                               microbatch=1)
+    assert dense.memory.total > 16 * 1024 ** 3        # TP-only does NOT fit
+    fs = analytical.analyze(spec, SHAPES["train_4k"], prec,
+                            mesh=analytical.MeshShape(dp=16, tp=16),
+                            microbatch=1, fsdp=True)
+    assert fs.memory.total < 16 * 1024 ** 3           # FSDP fits

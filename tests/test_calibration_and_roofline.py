@@ -1,0 +1,84 @@
+"""Calibration fitting + HLO analysis + roofline assembly units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.edge_models import LLAMA32_1B, TINYLLAMA
+from repro.core import hardware as hw_mod
+from repro.core.calibration import Observation, calibrate
+from repro.core.hlo_analysis import (CollectiveStats, parse_collective_bytes,
+                                     extract_cost)
+from repro.core.latency import roofline_terms
+from repro.core.roofline import CellResult
+
+
+def test_calibrate_fits_paper_numbers():
+    """Fitting U factors to the paper's two RPi4 end-to-end numbers lands
+    within 10% of both simultaneously."""
+    obs = [Observation(LLAMA32_1B, "fp32", 15.4),
+           Observation(LLAMA32_1B, "int8", 3.9)]
+    fitted, report = calibrate(hw_mod.RPI4, obs, iters=10)
+    assert abs(report["pred_llama3.2-1b_fp32"] - 15.4) / 15.4 < 0.10
+    assert abs(report["pred_llama3.2-1b_int8"] - 3.9) / 3.9 < 0.10
+    for f in ("u_compute", "u_memory", "u_storage"):
+        assert 0.05 <= report[f] <= 1.0
+
+
+def test_parse_collective_bytes_symbol_table():
+    hlo = """
+HloModule test
+ENTRY %main (a: f32[128,64]) -> f32[128,64] {
+  %a = f32[128,64]{1,0} parameter(0)
+  %add = f32[128,64]{1,0} add(%a, %a)
+  %ar = f32[128,64]{1,0} all-reduce(%add), replica_groups={}, to_apply=%sum
+  %ag = f32[256,64]{1,0} all-gather(%ar), dimensions={0}
+  ROOT %out = f32[128,64]{1,0} slice(%ag), slice={[0:128], [0:64]}
+}
+"""
+    stats = parse_collective_bytes(hlo)
+    assert stats.bytes_by_kind["all-reduce"] == 128 * 64 * 4
+    assert stats.bytes_by_kind["all-gather"] == 128 * 64 * 4  # operand size
+    assert stats.total_count == 2
+
+
+def test_parse_collective_async_pairs_counted_once():
+    hlo = """
+  %x = bf16[1024]{0} parameter(0)
+  %s = bf16[1024]{0} all-reduce-start(%x)
+  %d = bf16[1024]{0} all-reduce-done(%s)
+"""
+    stats = parse_collective_bytes(hlo)
+    assert stats.count_by_kind.get("all-reduce", 0) == 1
+    assert stats.total_bytes == 1024 * 2
+
+
+def test_roofline_terms_and_dominance():
+    hw = hw_mod.TPU_V5E
+    t = roofline_terms(197e12, 819e9, 0.0, hw)       # 1s compute, 1s memory
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    t2 = roofline_terms(1e12, 819e9 * 10, 0.0, hw)
+    assert t2.dominant == "memory"
+
+
+def test_cell_result_roundtrip(tmp_path):
+    c = CellResult(arch="glm4-9b", shape="train_4k", mesh="16x16",
+                   num_devices=256, hlo_flops=1e14, hlo_bytes=1e12,
+                   collective_bytes=1e10, model_flops_total=2.4e16,
+                   analytic_flops=9e13, analytic_hbm=5e9,
+                   analytic_collective=8e9)
+    p = c.save(tmp_path)
+    c2 = CellResult.load(p)
+    assert c2.arch == c.arch
+    assert c2.terms().dominant == c.terms().dominant
+    assert 0 < c2.roofline_fraction <= 1.0
+    assert c2.useful_ratio == pytest.approx(2.4e16 / 256 / 1e14)
+
+
+def test_extract_cost_on_compiled():
+    f = jax.jit(lambda x: x @ x)
+    compiled = f.lower(jnp.ones((64, 64))).compile()
+    cost = extract_cost(compiled)
+    # 2*M*N*K = 524288 flops
+    assert cost["flops"] == pytest.approx(2 * 64 ** 3, rel=0.01)
