@@ -2,13 +2,40 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (one per benchmark), then a
 detail block per benchmark.
+
+``--tier1`` instead runs the repo's gate (the make-equivalent CI entry
+point): the tier-1 pytest command plus the serve-throughput smoke.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
+
+
+def tier1() -> None:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    steps = [
+        [sys.executable, "-m", "pytest", "-x", "-q"],
+        [sys.executable, os.path.join(root, "benchmarks",
+                                      "serve_throughput.py"), "--smoke"],
+    ]
+    for cmd in steps:
+        print("+", " ".join(cmd), flush=True)
+        r = subprocess.run(cmd, cwd=root, env=env)
+        if r.returncode != 0:
+            raise SystemExit(r.returncode)
+    print("tier1 OK")
 
 
 def main() -> None:
+    if "--tier1" in sys.argv:
+        tier1()
+        return
     from benchmarks import (device_table, fig4_latency, kernel_bench,
                             roofline_report, table2_quant)
     results = []

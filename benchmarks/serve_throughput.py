@@ -1,0 +1,171 @@
+"""Continuous batching vs static ``generate`` on a mixed-length workload.
+
+The experiment the scheduler exists for: N requests with prompts spread
+over 32-512 tokens and varied decode budgets.  Static batching pads
+every batch member to the longest prompt and decodes until the LAST
+member finishes; continuous batching admits each request at its own
+(bucketed) length and refills slots the moment one finishes.  Useful
+tokens (requested generations only — padding and overrun don't count)
+per wall-clock second for both, plus the analytical model's prediction
+of the same ratio (``core.latency.predict_serve_throughput``).
+
+Both engines run the workload twice; the second (compile-warm) pass is
+timed.  ``--smoke`` shrinks the workload for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+def _build(width: int = 64, layers: int = 2, vocab: int = 256):
+    import jax
+    from repro.configs import ASSIGNED
+    from repro.models import lm
+    spec = ASSIGNED["granite-3-8b"].scaled_down(
+        layers=layers, width=width, vocab=vocab)
+    params = lm.init(jax.random.PRNGKey(0), spec)
+    return spec, params
+
+
+def _workload(n: int, prompt_buckets, new_lo: int, new_hi: int, vocab: int,
+              seed: int = 0):
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.choice(prompt_buckets))
+        nnew = int(rng.integers(new_lo, new_hi + 1))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        reqs.append(Request(i, prompt, nnew))
+    return reqs
+
+
+def _run_static(params, spec, reqs, batch: int, max_seq: int) -> int:
+    """Static batching: FCFS batches of ``batch``, prompts padded to the
+    batch max, decode until the batch max request finishes."""
+    import jax.numpy as jnp
+    from repro.serve.engine import ServeConfig, jitted_generate
+    cfg = ServeConfig(max_seq=max_seq, attention_impl="naive")
+    gen = jitted_generate(spec, cfg)
+    useful = 0
+    for at in range(0, len(reqs), batch):
+        chunk = reqs[at:at + batch]
+        pad = max(len(r.prompt) for r in chunk)
+        steps = max(r.max_new_tokens for r in chunk)
+        toks = np.zeros((len(chunk), pad), np.int32)
+        for j, r in enumerate(chunk):
+            toks[j, :len(r.prompt)] = r.prompt
+        out = gen(params, {"tokens": jnp.asarray(toks)}, steps - 1)
+        out["tokens"].block_until_ready()
+        useful += sum(r.max_new_tokens for r in chunk)
+    return useful
+
+
+def _run_continuous(params, spec, reqs, slots: int, max_seq: int,
+                    device_bytes: float) -> Tuple[int, Dict[str, int]]:
+    """Continuous batching with the KV budget derived from the analytical
+    MemoryBreakdown (what weights + activations leave free)."""
+    from repro.core.analytical import MeshShape, analyze
+    from repro.core.model_config import ShapeSpec
+    from repro.core import precision
+    from repro.serve.scheduler import (ContinuousBatchingEngine,
+                                       SchedulerConfig)
+    from repro.serve.paged_cache import make_layout
+    an = analyze(spec, ShapeSpec("serve", seq_len=max_seq,
+                                 global_batch=slots, kind="decode"),
+                 precision.get("fp32"), MeshShape())
+    layout = make_layout(spec, max_seq=max_seq, page_size=16,
+                         device_bytes=device_bytes, mem=an.memory)
+    cfg = SchedulerConfig(max_slots=slots, page_size=16, max_seq=max_seq,
+                          num_pages=layout.num_pages)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    done = eng.run(list(reqs))
+    assert len(done) == len(reqs)
+    return sum(len(c.tokens) for c in done), eng.stats
+
+
+def _predicted(spec, slots, avg_prompt, avg_new, max_seq) -> Dict[str, float]:
+    from repro.core import hardware, precision
+    from repro.core.latency import predict_serve_throughput
+    from repro.serve.paged_cache import make_layout, plan_for_layout
+    hw = hardware.get("rpi5")
+    layout = make_layout(spec, max_seq=max_seq, page_size=16,
+                         num_pages=max(2, slots * max_seq // 16 + 1))
+    plan = plan_for_layout(spec, layout)
+    return predict_serve_throughput(spec, hw, precision.get("fp32"), plan,
+                                    slots=slots, avg_prompt=avg_prompt,
+                                    avg_new=avg_new)
+
+
+def run(smoke: bool = False):
+    if smoke:
+        n, slots, buckets, new_lo, new_hi = 6, 4, [32, 64, 128], 8, 24
+        max_seq, width, layers = 160, 64, 2
+    else:
+        n, slots, buckets, new_lo, new_hi = 24, 8, [32, 64, 128, 256, 512], 16, 96
+        # big enough that decode compute (not per-iteration dispatch)
+        # dominates — the regime the scheduler targets
+        max_seq, width, layers = 640, 192, 4
+    spec, params = _build(width=width, layers=layers)
+    reqs = _workload(n, buckets, new_lo, new_hi, vocab=256)
+    device_bytes = 256e6
+
+    results = {}
+    for name, fn in (
+            ("static", lambda: _run_static(params, spec, reqs, slots, max_seq)),
+            ("continuous", lambda: _run_continuous(
+                params, spec, reqs, slots, max_seq, device_bytes))):
+        fn()                                  # warm pass: compiles
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        useful = out[0] if isinstance(out, tuple) else out
+        results[name] = {"useful_tokens": useful, "seconds": dt,
+                         "tokens_per_s": useful / dt}
+
+    speedup = (results["continuous"]["tokens_per_s"]
+               / results["static"]["tokens_per_s"])
+    pred = _predicted(spec, slots,
+                      float(np.mean([len(r.prompt) for r in reqs])),
+                      float(np.mean([r.max_new_tokens for r in reqs])),
+                      max_seq)
+    rows = [
+        {"engine": "static", **results["static"]},
+        {"engine": "continuous", **results["continuous"]},
+        {"engine": "measured_speedup", "speedup": speedup},
+        {"engine": "analytical", **pred},
+    ]
+    us = results["continuous"]["seconds"] * 1e6
+    return "serve_throughput", us, rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small workload for CI")
+    args = ap.parse_args()
+    name, us, rows = run(smoke=args.smoke)
+    print(f"## {name}")
+    for r in rows:
+        print(r)
+    speedup = next(r["speedup"] for r in rows
+                   if r["engine"] == "measured_speedup")
+    if args.smoke:
+        # toy-scale smoke is dispatch-bound (the fused static scan wins on
+        # a 64-wide model by construction): correctness/plumbing check
+        # only, the ratio is informational
+        print(f"SMOKE OK: continuous/static = {speedup:.2f}x (informational)")
+        return
+    floor = 1.3
+    status = "PASS" if speedup >= floor else "FAIL"
+    print(f"{status}: continuous/static = {speedup:.2f}x (floor {floor}x)")
+    if speedup < floor:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,94 @@ class Analysis:
         }
 
 
+# ---------------------------------------------------------------------------
+# Paged-KV serving: cache sizing + mixed prefill/decode iteration model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PagedCachePlan:
+    """Sizing of a block-table paged KV cache inside a byte budget.
+
+    One logical page covers ``page_size`` token positions across ALL
+    attention layers (each layer owns its own k/v pool slice of the
+    page), so ``page_bytes`` already sums over layers.  Page 0 is the
+    reserved null page inactive slots point at, hence ``usable_pages``.
+    """
+    page_size: int
+    num_pages: int
+    page_bytes: float              # bytes per page across all attn layers
+    bytes_per_token: float         # page_bytes / page_size
+
+    @property
+    def usable_pages(self) -> int:
+        return max(0, self.num_pages - 1)
+
+    @property
+    def max_tokens(self) -> int:
+        return self.usable_pages * self.page_size
+
+    @property
+    def total_bytes(self) -> float:
+        return self.num_pages * self.page_bytes
+
+
+def page_bytes(spec: ModelSpec, page_size: int, bytes_per: float = 2.0,
+               quantized_scales: bool = False) -> float:
+    """Bytes of one page across all attention layers (k and v pools).
+
+    ``bytes_per`` is the stored element width (1.0 for int8 pages);
+    ``quantized_scales`` adds the per-token-per-head f32 scale arrays
+    the int8 layout carries.  The single source of truth for the paged
+    layout's footprint — budget fitting and layout-matching plans both
+    derive from it.
+    """
+    row = spec.num_kv_heads * spec.head_dim * bytes_per
+    if quantized_scales:
+        row += spec.num_kv_heads * 4.0
+    return 2.0 * spec.num_attention_layers() * page_size * row
+
+
+def plan_paged_cache(spec: ModelSpec, budget_bytes: float,
+                     page_size: int = 16, bytes_per: float = 2.0,
+                     quantized_scales: bool = False) -> PagedCachePlan:
+    """Fit the largest page pool into ``budget_bytes``."""
+    pb = page_bytes(spec, page_size, bytes_per, quantized_scales)
+    num_pages = int(budget_bytes // pb)
+    if num_pages < 2:
+        raise ValueError(
+            f"KV budget {budget_bytes:.0f} B < 2 pages "
+            f"({pb:.0f} B/page) for {spec.name}")
+    return PagedCachePlan(page_size=page_size, num_pages=num_pages,
+                          page_bytes=pb, bytes_per_token=pb / page_size)
+
+
+def kv_budget(device_bytes: float, mem: MemoryBreakdown,
+              reserve_frac: float = 0.05) -> float:
+    """KV byte budget left after weights + activations (+ safety margin),
+    the paper's §IV deployment constraint expressed for the serve path."""
+    free = device_bytes * (1.0 - reserve_frac) - mem.weights - mem.activations
+    if free <= 0:
+        raise ValueError(
+            f"no KV budget: weights+activations {mem.weights + mem.activations:.0f} B "
+            f"exceed device {device_bytes:.0f} B")
+    return free
+
+
+def mixed_iteration_flops(spec: ModelSpec, prefill_tokens: int,
+                          decode_slots: int, avg_context: float) -> float:
+    """Useful FLOPs of ONE continuous-batching iteration that prefills
+    ``prefill_tokens`` prompt tokens and decodes one token for each of
+    ``decode_slots`` live slots at mean context ``avg_context``."""
+    fl = 0.0
+    if prefill_tokens:
+        fl += blocks.forward_flops_per_token(
+            spec, prefill_tokens // 2) * prefill_tokens
+    if decode_slots:
+        fl += blocks.forward_flops_per_token(
+            spec, int(avg_context)) * decode_slots
+    return fl
+
+
 @dataclass(frozen=True)
 class MeshShape:
     """Logical parallelism degrees used for per-device accounting."""

@@ -12,9 +12,24 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _compiler_params(*, dimension_semantics):
+    """Version-portable ``pltpu`` compiler params.
+
+    The class was renamed ``TPUCompilerParams`` -> ``CompilerParams`` across
+    JAX releases; the installed JAX may have either.  Every kernel in this
+    package goes through this one helper so the compat shim lives in exactly
+    one place.
+    """
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics)
+
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
 from repro.kernels.quantize_kernel import quantize_rowwise_pallas
 from repro.quant.qtypes import QuantizedTensor
@@ -59,6 +74,25 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return flash_attention_pallas(q, k, v, causal=causal, window=window,
                                   scale=scale, bq=bq, bk=bk,
                                   interpret=_default_interpret())
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    window: int = 0, scale: Optional[float] = None,
+                    k_scale=None, v_scale=None, impl: str = "auto"):
+    """Paged decode attention: q (B, H, D) against a page pool.
+
+    auto -> Pallas (scalar-prefetch block-table kernel) on TPU, gather
+    reference elsewhere.  int8 pages (k_scale/v_scale given) always run
+    the reference dequant-after-gather path — the float kernel is the
+    TPU hot loop."""
+    if impl == "ref" or k_scale is not None or v_scale is not None or \
+            (impl == "auto" and _default_interpret()):
+        return ref.paged_attention_ref(
+            q, k_pages, v_pages, block_tables, lengths, window=window,
+            scale=scale, k_scale=k_scale, v_scale=v_scale)
+    return paged_attention_pallas(
+        q, k_pages, v_pages, block_tables, lengths, window=window,
+        scale=scale, interpret=_default_interpret())
 
 
 def quantize_rowwise(x, *, bits: int = 8, impl: str = "auto", bm: int = 128):

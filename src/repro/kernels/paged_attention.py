@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: paged decode attention (one query token per slot).
+
+The serve scheduler stores KV in fixed-size pages owned by a block
+table per slot (vLLM-style), so decode never touches padding beyond a
+slot's live context.  The kernel streams one page per grid step along
+the 'arbitrary' dim; the block table and per-slot lengths ride in as
+scalar-prefetch operands so the K/V index maps can chase page ids
+(``bt_ref[b, p]``) when scheduling DMAs.
+
+Online softmax carries (m, l, acc) scratch across pages, exactly like
+``flash_attention.py`` — a fully-masked slot (length 0) emits zeros.
+GQA folds query heads onto kv heads inside the kernel ((KV, G, D)
+layout), so K/V pages are fetched once per kv head group.
+
+int8 pages take the pure-jnp reference path in ``ops.paged_attention``
+(dequant-after-gather); this kernel is the float hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, page: int,
+                  n_pages: int, window: int, kv_heads: int, grp: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    q = q_ref[0].astype(jnp.float32) * scale              # (H, D)
+    k = k_ref[0].astype(jnp.float32)                      # (page, KV, D)
+    D = q.shape[-1]
+    qg = q.reshape(kv_heads, grp, D)
+    s = jnp.einsum("kgd,tkd->kgt", qg, k,
+                   preferred_element_type=jnp.float32)    # (KV, G, page)
+
+    tok = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    valid = tok < length
+    if window:
+        valid &= tok > (length - 1 - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (KV, G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    e = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(e, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.einsum(
+        "kgt,tkd->kgd", e, v_ref[0].astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _done():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).reshape(
+            kv_heads * grp, D).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                           lengths: jnp.ndarray, *, window: int = 0,
+                           scale: float | None = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, D); k_pages/v_pages: (P, page, KV, D);
+    block_tables: (B, pages_per_slot) int32; lengths: (B,) int32."""
+    B, H, D = q.shape
+    page, KV = k_pages.shape[1], k_pages.shape[2]
+    n_pages = block_tables.shape[1]
+    grp = H // KV
+    sc = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # block_tables, lengths
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, D),
+                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, grp, 1), jnp.float32),        # running max
+            pltpu.VMEM((KV, grp, 1), jnp.float32),        # running denom
+            pltpu.VMEM((KV, grp, D), jnp.float32),        # accumulator
+        ],
+    )
+    kernel = functools.partial(
+        _paged_kernel, scale=sc, page=page, n_pages=n_pages,
+        window=window, kv_heads=KV, grp=grp)
+    from repro.kernels.ops import _compiler_params  # lazy: avoid import cycle
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        compiler_params=_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="paged_attention_decode",
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, k_pages, v_pages)

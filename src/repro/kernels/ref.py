@@ -44,6 +44,49 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.astype(q.dtype)
 
 
+def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                        lengths: jnp.ndarray, *, window: int = 0,
+                        scale: Optional[float] = None,
+                        k_scale: Optional[jnp.ndarray] = None,
+                        v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Gather-based paged decode attention (one query token per slot).
+
+    q: (B, H, D); k_pages/v_pages: (P, page, KV, D); block_tables:
+    (B, pages_per_slot) page ids into the pool; lengths: (B,) number of
+    valid context tokens per slot (the current token's k/v already
+    written).  Fully-masked slots (length 0) return zeros.  For int8
+    pages pass k_scale/v_scale (P, page, KV, 1) f32; pages are
+    dequantized after the gather.
+    """
+    B, H, D = q.shape
+    page, KV = k_pages.shape[1], k_pages.shape[2]
+    G = H // KV
+    sc = scale if scale is not None else 1.0 / (D ** 0.5)
+    k = k_pages[block_tables].astype(jnp.float32)      # (B, n, page, KV, D)
+    v = v_pages[block_tables].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[block_tables]
+    if v_scale is not None:
+        v = v * v_scale[block_tables]
+    S = block_tables.shape[1] * page
+    k = k.reshape(B, S, KV, D)
+    v = v.reshape(B, S, KV, D)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32) * sc
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k)           # (B, KV, G, S)
+    idx = jnp.arange(S)[None]
+    valid = idx < lengths[:, None]
+    if window:
+        valid &= idx > (lengths[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m) * valid[:, None, None]
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
 def quantize_rowwise_ref(x: jnp.ndarray, bits: int = 8):
     """Per-row symmetric quantization of a 2-D tensor -> (q, scale)."""
     from repro.quant.qtypes import QuantConfig

@@ -256,8 +256,66 @@ def forward(params, spec: ModelSpec, batch, *, impl: str = "auto",
 # KV / recurrent cache
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Paged KV layout for the continuous-batching serve path.
+
+    ``num_pages`` physical pages of ``page_size`` tokens each, shared by
+    up to ``batch`` slots via per-slot block tables of
+    ``pages_per_slot`` entries.  Page 0 is reserved as the null page
+    that inactive slots' block tables point at.
+    """
+    num_pages: int
+    page_size: int = 16
+    pages_per_slot: int = 0          # 0 -> derive from max_seq
+
+    def slots_pages(self, max_seq: int) -> int:
+        return self.pages_per_slot or -(-max_seq // self.page_size)
+
+
+def init_paged_cache(spec: ModelSpec, batch: int, max_seq: int,
+                     layout: PagedLayout, dtype=jnp.float32) -> Params:
+    """Paged serve cache: per-layer page pools + per-slot block tables.
+
+    Supported for attention-only stacks (attn / attn_local /
+    attn_global); recurrent state (ssm/xlstm) and cross-attention have
+    no paged representation yet.  ``dtype=jnp.int8`` stores quantized
+    pages with per-token-per-head f32 scales (``k_scale``/``v_scale``).
+    ``pos`` is a PER-SLOT length vector, not a scalar.
+    """
+    for kind in spec.layer_kinds():
+        if _base_kind(kind) not in ("attn", "attn_local", "attn_global"):
+            raise NotImplementedError(
+                f"paged cache: unsupported layer kind {kind!r}")
+    if spec.cross_attention or spec.encoder_layers:
+        raise NotImplementedError("paged cache: cross-attention/encoder")
+    pps = layout.slots_pages(max_seq)
+    cache: Params = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "block_tables": jnp.zeros((batch, pps), jnp.int32),
+        "groups": [],
+    }
+    KV, D = spec.num_kv_heads, spec.head_dim
+    pool = (layout.num_pages, layout.page_size, KV, D)
+    for g in group_plan(spec):
+        layers = []
+        for _ in range(g.n):
+            entry: Dict[str, jnp.ndarray] = {
+                "k_pages": jnp.zeros(pool, dtype),
+                "v_pages": jnp.zeros(pool, dtype),
+            }
+            if dtype == jnp.int8:
+                sshape = (layout.num_pages, layout.page_size, KV, 1)
+                entry["k_scale"] = jnp.zeros(sshape, jnp.float32)
+                entry["v_scale"] = jnp.zeros(sshape, jnp.float32)
+            layers.append(entry)
+        cache["groups"].append(layers)
+    return cache
+
+
 def init_cache(spec: ModelSpec, batch: int, max_seq: int,
-               dtype=jnp.float32) -> Params:
+               dtype=jnp.float32, *,
+               paged: Optional[PagedLayout] = None) -> Params:
     """Cache layout: one dict of state arrays PER LAYER (list per group).
 
     Per-layer buffers (instead of a stacked (n_layers, ...) array) keep
@@ -265,7 +323,12 @@ def init_cache(spec: ModelSpec, batch: int, max_seq: int,
     layer's dynamic_update_slice to produce the full stacked array, which
     both defeats donation-aliasing analysis and inflates the HLO memory
     term ~n_layers-fold (§Perf iteration 3).
+
+    With ``paged`` set, returns the block-table paged layout instead
+    (see ``init_paged_cache``).
     """
+    if paged is not None:
+        return init_paged_cache(spec, batch, max_seq, paged, dtype)
     cache: Params = {"pos": jnp.zeros((), jnp.int32), "groups": []}
     for g in group_plan(spec):
         base = _base_kind(g.kind)
@@ -305,8 +368,17 @@ def _attn_prefill_kv(spec, p, xn, positions):
 # ---------------------------------------------------------------------------
 
 def prefill(params, spec: ModelSpec, batch, *, max_seq: Optional[int] = None,
-            impl: str = "auto", cache_dtype=None) -> Tuple[jnp.ndarray, Params]:
-    """Run the prompt, return (last-position logits, filled cache)."""
+            impl: str = "auto", cache_dtype=None,
+            true_len=None) -> Tuple[jnp.ndarray, Params]:
+    """Run the prompt, return (last-position logits, filled cache).
+
+    ``true_len`` (traced scalar) supports bucket-padded prompts: tokens
+    at positions >= true_len are padding — causal masking keeps them
+    from influencing earlier positions, the returned logits come from
+    position ``true_len - 1``, and ``cache["pos"]`` is set to
+    ``true_len`` so decode overwrites the padding k/v.  One XLA compile
+    per bucket length instead of one per prompt length.
+    """
     x = _embed_inputs(params, spec, batch)
     B, S = x.shape[:2]
     max_seq = max_seq or S
@@ -317,7 +389,8 @@ def prefill(params, spec: ModelSpec, batch, *, max_seq: Optional[int] = None,
         enc_out = _encoder_forward(params, spec, batch["frames"], impl, False)
     shared_p = params.get("shared_block")
     cache = init_cache(spec, B, max_seq, dtype)
-    cache["pos"] = jnp.array(S, jnp.int32)
+    cache["pos"] = (jnp.array(S, jnp.int32) if true_len is None
+                    else jnp.asarray(true_len, jnp.int32))
 
     for gi, (g, gp) in enumerate(zip(group_plan(spec), params["groups"])):
         base = _base_kind(g.kind)
@@ -380,7 +453,12 @@ def prefill(params, spec: ModelSpec, batch, *, max_seq: Optional[int] = None,
                 else:
                     entry[k_] = v_[li]
 
-    logits = _lm_head(params, spec, x[:, -1:])
+    if true_len is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(
+            x, jnp.asarray(true_len, jnp.int32) - 1, 1, axis=1)
+    logits = _lm_head(params, spec, x_last)
     return logits, cache
 
 
@@ -428,6 +506,89 @@ def _attn_decode(spec, p, x, pos, kv, *, kind, prefix="") -> Tuple[jnp.ndarray, 
     return out, {"k": k_cache, "v": v_cache}
 
 
+def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
+                       kind) -> Tuple[jnp.ndarray, Dict]:
+    """Paged-cache decode attention for one layer.
+
+    ``pos`` is the per-slot context length vector (B,) — the new token's
+    absolute position.  Writes the new k/v row into each slot's current
+    page (pages are uniquely owned, so the batched scatter never
+    collides), then attends over the slot's block table via the
+    gather-based paged attention op.
+    """
+    from repro.kernels import ops as kops
+    from repro.quant.quantize import quantize_kv_int8
+    B = x.shape[0]
+    H, KV, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    page = kv["k_pages"].shape[1]
+    q = qdot(x, p["wq"]).reshape(B, 1, H, D)
+    k = qdot(x, p["wk"]).reshape(B, 1, KV, D)
+    v = qdot(x, p["wv"]).reshape(B, 1, KV, D)
+    posb = pos[:, None]
+    q = L.rope(q, posb, spec.rope_theta)
+    k = L.rope(k, posb, spec.rope_theta)
+
+    slot_page = block_tables[jnp.arange(B), pos // page]
+    off = pos % page
+    new_kv = dict(kv)
+    quantized = "k_scale" in kv
+    for name, row in (("k", k[:, 0]), ("v", v[:, 0])):
+        pages = kv[name + "_pages"]
+        if quantized:
+            qrow, srow = quantize_kv_int8(row)
+            new_kv[name + "_pages"] = pages.at[slot_page, off].set(qrow)
+            new_kv[name + "_scale"] = kv[name + "_scale"].at[
+                slot_page, off].set(srow)
+        else:
+            new_kv[name + "_pages"] = pages.at[slot_page, off].set(
+                row.astype(pages.dtype))
+
+    window = spec.sliding_window if kind == "attn_local" else 0
+    o = kops.paged_attention(
+        q[:, 0], new_kv["k_pages"], new_kv["v_pages"], block_tables,
+        pos + 1, window=window,
+        k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
+    out = qdot(o.reshape(B, 1, H * D), p["wo"])
+    return out, new_kv
+
+
+def decode_step_paged(params, spec: ModelSpec, cache,
+                      tokens) -> Tuple[jnp.ndarray, Params]:
+    """One decode step over a PAGED cache (per-slot positions).
+
+    Same layer unroll as ``decode_step`` but attention reads/writes go
+    through block tables, so slots at wildly different context lengths
+    batch into one step without padding every slot to the longest —
+    the continuous-batching scheduler's inner loop.
+    """
+    pos = cache["pos"]
+    bt = cache["block_tables"]
+    x = jnp.take(params["global"]["embed"], tokens, axis=0)
+    if spec.name.startswith("gemma"):
+        x = x * math.sqrt(spec.d_model)
+    new_groups = []
+    for g, gp, cg in zip(group_plan(spec), params["groups"], cache["groups"]):
+        base = _base_kind(g.kind)
+        new_layers = []
+        for li, cslice in enumerate(cg):
+            pslice = jax.tree_util.tree_map(lambda v: v[li], gp)
+            xn = L.norm(spec, pslice, "norm1", x)
+            h, kv_new = _attn_decode_paged(spec, pslice, xn, pos, cslice,
+                                           bt, kind=base)
+            y = x + h
+            y2 = L.norm(spec, pslice, "norm2", y)
+            if "router_w" in pslice:
+                h2, _ = L.moe_block(spec, pslice, y2, group_size=y2.shape[0])
+            else:
+                h2 = L.mlp_block(spec, pslice, y2)
+            x = y + h2
+            new_layers.append(kv_new)
+        new_groups.append(new_layers)
+    logits = _lm_head(params, spec, x)
+    new_cache = {"pos": pos + 1, "block_tables": bt, "groups": new_groups}
+    return logits, new_cache
+
+
 def decode_step(params, spec: ModelSpec, cache, tokens) -> Tuple[jnp.ndarray, Params]:
     """One decoding step for the whole batch. tokens: (B, 1) int32.
 
@@ -436,7 +597,12 @@ def decode_step(params, spec: ModelSpec, cache, tokens) -> Tuple[jnp.ndarray, Pa
     stacked array (defeating donation aliasing and inflating the HLO
     memory term ~n_layers-fold — §Perf iterations 2-3).  Decode layer
     bodies are small, so the unrolled compile stays cheap.
+
+    A paged cache (built with ``init_cache(..., paged=...)``) dispatches
+    to ``decode_step_paged``.
     """
+    if "block_tables" in cache:
+        return decode_step_paged(params, spec, cache, tokens)
     pos = cache["pos"]
     x = jnp.take(params["global"]["embed"], tokens, axis=0)
     if spec.name.startswith("gemma"):

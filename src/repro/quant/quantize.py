@@ -82,6 +82,19 @@ def dequantize_values(q: jnp.ndarray, scale: jnp.ndarray,
     return (qf * scale + zero).astype(out_dtype)  # eq. (4)
 
 
+def quantize_kv_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 over the last (head_dim) axis for KV-cache rows.
+
+    x (..., D) -> (q int8 (..., D), scale f32 (..., 1)); dequant is
+    ``q * scale``.  One scale per cached token per kv head keeps the
+    paged int8 cache error independent of sequence length.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
 # ---------------------------------------------------------------------------
 # int4 nibble packing: two int4 values per int8 byte along the leading dim
 # ---------------------------------------------------------------------------

@@ -1,1 +1,4 @@
 from repro.serve.engine import ServeConfig, generate, load_quantized, make_prefill_step, make_serve_step
+from repro.serve.paged_cache import PageAllocator, make_layout, pages_needed, plan_for_layout
+from repro.serve.scheduler import (Completion, ContinuousBatchingEngine,
+                                   Request, SchedulerConfig)

@@ -6,6 +6,28 @@ same decode_step runs with QuantizedTensor weights (qdot dispatches to
 the Pallas dequant-matmul on TPU).  The KV cache can itself be held in
 int8 (``cache_precision="int8"``) — a beyond-paper memory-roofline
 optimization measured in §Perf.
+
+Two serving modes live in this package:
+
+* **Static batching** (this module): one ``generate()`` call prefills a
+  fixed batch padded to the longest prompt and scan-decodes a fixed
+  number of steps.  Simple, fully jitted, and the right tool for
+  offline eval — but every padded prompt token and every decode step
+  past a request's completion is wasted work on the memory-bound edge
+  decode roofline the analytical model identifies.
+
+* **Continuous batching** (``scheduler.ContinuousBatchingEngine``):
+  iteration-level scheduling over a block-table paged KV cache
+  (``paged_cache.py``).  Requests admit into slots as pages free up,
+  prompts prefill at their own (bucketed) length, and each iteration
+  decodes one token for all live slots through the gather-based paged
+  attention op (``kernels/paged_attention.py``).  Slots free their
+  pages the moment a request finishes, so mixed-length workloads keep
+  the batch full — ``benchmarks/serve_throughput.py`` measures the
+  tokens/sec win over ``generate()``.  The paged layout is also the
+  base for prefix caching (share read-only prompt pages between
+  requests) and multi-device serving (shard the page pool) in later
+  PRs.
 """
 from __future__ import annotations
 
@@ -60,6 +82,22 @@ def generate(params: Any, spec: ModelSpec, batch: Dict[str, jnp.ndarray],
     (cache, _), toks = jax.lax.scan(step, (cache, tok0), keys)
     out = jnp.concatenate([tok0[:, None], toks.T], axis=1)[:, :num_steps + 1]
     return {"tokens": out, "cache_pos": cache["pos"]}
+
+
+_GEN_JIT_CACHE: Dict[Any, Any] = {}
+
+
+def jitted_generate(spec: ModelSpec, cfg: ServeConfig):
+    """jit-compiled ``generate`` closure, cached per (spec, cfg) so repeated
+    workloads (benchmark passes, serving loops) share compiles.  Returns
+    ``fn(params, batch, num_steps)`` with ``num_steps`` static."""
+    key = (spec, cfg.max_seq, cfg.temperature, cfg.weight_precision,
+           str(cfg.cache_dtype), cfg.attention_impl)
+    if key not in _GEN_JIT_CACHE:
+        def fn(params, batch, num_steps):
+            return generate(params, spec, batch, num_steps, cfg)
+        _GEN_JIT_CACHE[key] = jax.jit(fn, static_argnums=(2,))
+    return _GEN_JIT_CACHE[key]
 
 
 def make_serve_step(spec: ModelSpec):

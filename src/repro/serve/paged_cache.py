@@ -1,0 +1,183 @@
+"""Block-table paged KV cache for the continuous-batching serve engine.
+
+The device side is a plain pytree built by ``models.lm.init_paged_cache``
+(per-layer page pools + per-slot block tables) so it jits/donates like
+any other cache.  This module owns the HOST side: a ``PageAllocator``
+tracking which physical page belongs to which request (page 0 is the
+reserved null page), budget-driven sizing via
+``core.analytical.plan_paged_cache`` / ``MemoryBreakdown``, and the
+prompt-ingest routine that scatters a contiguous prefill cache into a
+slot's pages.
+
+int8 pages (``cache_dtype="int8"``) store per-token-per-head f32 scales
+next to the pools — the paper's KV-memory roofline term drops 2x vs
+bf16 and 4x vs f32 at <2% logit error on the scaled-down models.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.analytical import (MemoryBreakdown, PagedCachePlan,
+                                   kv_budget, page_bytes, plan_paged_cache)
+from repro.core.model_config import ModelSpec
+from repro.models import lm
+from repro.quant.quantize import quantize_kv_int8
+
+NULL_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list page allocator with ownership tracking.
+
+    Invariants (asserted by ``check``, fuzzed in
+    tests/test_serve_scheduler.py): every page except the null page is
+    either free or owned by exactly one request; alloc never hands out
+    the null page or an owned page; free returns pages exactly once.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._owner: Dict[int, int] = {}        # page -> request uid
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int, uid: int) -> List[int]:
+        if not self.can_alloc(n):
+            raise MemoryError(f"paged KV OOM: want {n} pages, "
+                              f"have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = uid
+        return pages
+
+    def free(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            if p == NULL_PAGE or p not in self._owner:
+                raise ValueError(f"double/foreign free of page {p}")
+            del self._owner[p]
+            self._free.append(p)
+
+    def check(self) -> None:
+        free = set(self._free)
+        owned = set(self._owner)
+        assert NULL_PAGE not in free and NULL_PAGE not in owned
+        assert not (free & owned), f"pages both free and owned: {free & owned}"
+        assert len(free) == len(self._free), "duplicate pages in free list"
+        assert free | owned == set(range(1, self.num_pages)), \
+            "leaked pages: " + str(set(range(1, self.num_pages)) - free - owned)
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    return -(-tokens // page_size)
+
+
+def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
+                num_pages: Optional[int] = None,
+                kv_budget_bytes: Optional[float] = None,
+                device_bytes: Optional[float] = None,
+                mem: Optional[MemoryBreakdown] = None,
+                cache_dtype: str = "fp32",
+                max_slots: Optional[int] = None) -> lm.PagedLayout:
+    """Size the page pool: explicit ``num_pages``, a raw byte budget, or
+    a ``MemoryBreakdown`` + device size (budget = what weights and
+    activations leave free, eq. (9)'s residual term).  With ``max_slots``
+    the pool is capped at the addressable maximum (every slot full plus
+    the null page) — a bigger pool is pure scatter/donation overhead."""
+    pps = pages_needed(max_seq, page_size)
+    if num_pages is None:
+        if kv_budget_bytes is None:
+            if device_bytes is None or mem is None:
+                raise ValueError("need num_pages, kv_budget_bytes, or "
+                                 "device_bytes + mem")
+            kv_budget_bytes = kv_budget(device_bytes, mem)
+        plan = plan_paged_cache(
+            spec, kv_budget_bytes, page_size=page_size,
+            bytes_per=1.0 if cache_dtype == "int8" else 4.0,
+            quantized_scales=cache_dtype == "int8")
+        num_pages = plan.num_pages
+    if max_slots is not None:
+        num_pages = min(num_pages, max_slots * pps + 1)
+    return lm.PagedLayout(num_pages=num_pages, page_size=page_size,
+                          pages_per_slot=pps)
+
+
+def plan_for_layout(spec: ModelSpec, layout: lm.PagedLayout,
+                    cache_dtype: str = "fp32") -> PagedCachePlan:
+    """The analytical plan matching an instantiated layout (for the
+    profiler's throughput prediction)."""
+    pb = page_bytes(spec, layout.page_size,
+                    bytes_per=1.0 if cache_dtype == "int8" else 4.0,
+                    quantized_scales=cache_dtype == "int8")
+    return PagedCachePlan(page_size=layout.page_size,
+                          num_pages=layout.num_pages,
+                          page_bytes=pb,
+                          bytes_per_token=pb / layout.page_size)
+
+
+def scatter_prompt_pages(cache_groups, prefill_groups, pv: jnp.ndarray,
+                         page: int):
+    """Scatter the first ``len(pv)`` pages of KV rows from a contiguous
+    (single-sequence) prefill cache into the page pools.  The one copy of
+    the pool-write logic — both the standalone ``write_prompt`` and the
+    scheduler's fused jitted admission go through it.  int8 pools
+    quantize rows and fill the scale pools alongside."""
+    n = pv.shape[0]
+    new_groups = []
+    for cg, pg in zip(cache_groups, prefill_groups):
+        new_layers = []
+        for entry, src in zip(cg, pg):
+            new_entry = dict(entry)
+            for name in ("k", "v"):
+                rows = src[name][0, :n * page]          # (n*page, KV, D)
+                rows = rows.reshape(n, page, *rows.shape[1:])
+                pool = entry[name + "_pages"]
+                if name + "_scale" in entry:
+                    qrows, srows = quantize_kv_int8(rows)
+                    new_entry[name + "_pages"] = pool.at[pv].set(qrows)
+                    new_entry[name + "_scale"] = entry[name + "_scale"].at[
+                        pv].set(srows)
+                else:
+                    new_entry[name + "_pages"] = pool.at[pv].set(
+                        rows.astype(pool.dtype))
+            new_layers.append(new_entry)
+        new_groups.append(new_layers)
+    return new_groups
+
+
+def write_prompt(cache, spec: ModelSpec, slot: int, pages: Sequence[int],
+                 prefill_cache, true_len: int):
+    """Scatter a contiguous prefill cache (one sequence, max_seq padded
+    to a page multiple) into ``pages`` and point ``slot``'s block table
+    at them.  Returns the updated paged-cache pytree (functional)."""
+    page = cache["groups"][0][0]["k_pages"].shape[1]
+    pv = jnp.asarray(list(pages), jnp.int32)
+    new_groups = scatter_prompt_pages(cache["groups"],
+                                      prefill_cache["groups"], pv, page)
+    bt = cache["block_tables"]
+    row = jnp.full((bt.shape[1],), NULL_PAGE, jnp.int32)
+    row = row.at[:len(pages)].set(pv)
+    return {
+        "pos": cache["pos"].at[slot].set(jnp.int32(true_len)),
+        "block_tables": bt.at[slot].set(row),
+        "groups": new_groups,
+    }
+
+
+def release_slot(cache, slot: int):
+    """Reset a finished slot's block table/pos to the null page (device
+    side only — the allocator frees the physical pages)."""
+    return {
+        "pos": cache["pos"].at[slot].set(0),
+        "block_tables": cache["block_tables"].at[slot].set(NULL_PAGE),
+        "groups": cache["groups"],
+    }

@@ -2,6 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-dev.txt); "
+           "property tests run where dev deps are present")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 

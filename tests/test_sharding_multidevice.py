@@ -34,8 +34,8 @@ from repro.models import lm
 from repro.parallel.sharding import ShardingRules
 from repro.train.optimizer import AdamWState, adamw_init
 from repro.train.train_step import TrainConfig, make_train_step
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 def sds(tree, sh):
     return jax.tree_util.tree_map(
         lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
@@ -136,8 +136,8 @@ def test_pod_axis_composes_with_data():
     out = _run("""
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
 x = jax.ShapeDtypeStruct((8, 16), jnp.float32,
                          sharding=NamedSharding(mesh, P(("pod", "data"), None)))
 w = jax.ShapeDtypeStruct((16, 16), jnp.float32,

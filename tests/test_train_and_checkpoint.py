@@ -148,8 +148,8 @@ def test_warmup_cosine_schedule():
 def test_compressed_allreduce_error_feedback():
     """int8 error-feedback compression: mean of per-rank grads recovered
     within quantization error per step; residual carries the bias."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("data",))
     from jax.sharding import PartitionSpec as P
     g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(16,)),
                           jnp.float32)}
@@ -158,9 +158,9 @@ def test_compressed_allreduce_error_feedback():
     def f(gv, rv):
         return compressed_allreduce({"w": gv}, {"w": rv}, "data")
 
-    fn = jax.shard_map(lambda a, b: f(a, b), mesh=mesh,
-                       in_specs=(P(), P()), out_specs=(P(), P()),
-                       check_vma=False)
+    from repro.parallel.compress import shard_map_compat
+    fn = shard_map_compat(lambda a, b: f(a, b), mesh=mesh,
+                          in_specs=(P(), P()), out_specs=(P(), P()))
     (synced, res) = fn(g["w"], r["w"])
     # single rank: synced == dequantized(g); residual == g - synced
     np.testing.assert_allclose(np.asarray(synced["w"] + res["w"]),
