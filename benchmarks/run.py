@@ -23,6 +23,9 @@ def tier1() -> None:
         [sys.executable, "-m", "pytest", "-x", "-q"],
         [sys.executable, os.path.join(root, "benchmarks",
                                       "serve_throughput.py"), "--smoke"],
+        [sys.executable, os.path.join(root, "benchmarks",
+                                      "serve_throughput.py"), "--prefix",
+         "--smoke"],
     ]
     for cmd in steps:
         print("+", " ".join(cmd), flush=True)

@@ -1,13 +1,22 @@
-"""Continuous batching vs static ``generate`` on a mixed-length workload.
+"""Continuous batching vs static ``generate``, plus the shared-prefix gate.
 
-The experiment the scheduler exists for: N requests with prompts spread
-over 32-512 tokens and varied decode budgets.  Static batching pads
-every batch member to the longest prompt and decodes until the LAST
-member finishes; continuous batching admits each request at its own
-(bucketed) length and refills slots the moment one finishes.  Useful
-tokens (requested generations only — padding and overrun don't count)
-per wall-clock second for both, plus the analytical model's prediction
-of the same ratio (``core.latency.predict_serve_throughput``).
+Two experiments:
+
+* default — N requests with prompts spread over 32-512 tokens and
+  varied decode budgets.  Static batching pads every batch member to
+  the longest prompt and decodes until the LAST member finishes;
+  continuous batching admits each request at its own (bucketed) length
+  and refills slots the moment one finishes.  Useful tokens (requested
+  generations only — padding and overrun don't count) per wall-clock
+  second for both, plus the analytical model's prediction of the same
+  ratio (``core.latency.predict_serve_throughput``).
+
+* ``--prefix`` — the prefix-caching gate: requests drawn from a few
+  shared system-prompt templates (the multi-tenant / templated-prompt
+  scenario) run with the prefix store ON and OFF.  Asserts outputs are
+  token-for-token identical, prefill tokens drop >= 30%, and reports
+  admitted-occupancy plus the analytical prediction
+  (``analytical.prefix_hit_rate`` -> ``predict_serve_throughput``).
 
 Both engines run the workload twice; the second (compile-warm) pass is
 timed.  ``--smoke`` shrinks the workload for CI.
@@ -101,6 +110,97 @@ def _predicted(spec, slots, avg_prompt, avg_new, max_seq) -> Dict[str, float]:
                                     avg_new=avg_new)
 
 
+def _shared_prefix_workload(n: int, n_templates: int, template_len: int,
+                            suffix_lo: int, suffix_hi: int, new_lo: int,
+                            new_hi: int, vocab: int, seed: int = 0):
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    templates = [rng.integers(0, vocab, size=template_len).astype(np.int32)
+                 for _ in range(n_templates)]
+    reqs = []
+    for i in range(n):
+        t = templates[i % n_templates]
+        suffix = rng.integers(
+            0, vocab, size=int(rng.integers(suffix_lo, suffix_hi + 1))
+        ).astype(np.int32)
+        reqs.append(Request(i, np.concatenate([t, suffix]),
+                            int(rng.integers(new_lo, new_hi + 1))))
+    return reqs
+
+
+def run_prefix(smoke: bool = False):
+    """Shared-prefix workload, prefix store ON vs OFF: identical outputs,
+    prefill-tokens-skipped, admitted occupancy, analytical prediction."""
+    from repro.core import hardware, precision
+    from repro.core.analytical import prefix_hit_rate
+    from repro.core.latency import predict_serve_throughput
+    from repro.serve.paged_cache import plan_for_layout
+    from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                       SchedulerConfig)
+    if smoke:
+        n, n_templates, template_len = 8, 4, 64
+        suffix_lo, suffix_hi, new_lo, new_hi = 8, 16, 4, 8
+        max_seq, slots, width, layers = 160, 4, 64, 2
+    else:
+        n, n_templates, template_len = 48, 4, 128
+        suffix_lo, suffix_hi, new_lo, new_hi = 16, 48, 8, 32
+        max_seq, slots, width, layers = 256, 8, 128, 2
+    spec, params = _build(width=width, layers=layers)
+    reqs = _shared_prefix_workload(n, n_templates, template_len, suffix_lo,
+                                   suffix_hi, new_lo, new_hi, vocab=256)
+
+    results = {}
+    for on in (False, True):
+        cfg = SchedulerConfig(max_slots=slots, page_size=16, max_seq=max_seq,
+                              kv_budget_bytes=64e6, enable_prefix_cache=on)
+
+        def pass_once():
+            eng = ContinuousBatchingEngine(params, spec, cfg)
+            done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                            for r in reqs])
+            eng.alloc.check()
+            return eng, done
+
+        pass_once()                           # warm pass: compiles
+        t0 = time.perf_counter()
+        eng, done = pass_once()
+        dt = time.perf_counter() - t0
+        results[on] = {"engine": eng, "done": done, "seconds": dt}
+
+    for a, b in zip(results[False]["done"], results[True]["done"]):
+        if not np.array_equal(a.tokens, b.tokens):
+            raise SystemExit(f"FAIL: prefix-cache output mismatch uid {a.uid}")
+    s_off = results[False]["engine"].stats
+    s_on = results[True]["engine"].stats
+    assert s_on["prefix_hit_tokens"] > 0, "no prefix hits on shared workload"
+    reduction = 1.0 - s_on["prefill_tokens"] / s_off["prefill_tokens"]
+    occ = {on: results[on]["engine"].stats["occupancy_sum"]
+           / max(1, results[on]["engine"].stats["iterations"])
+           for on in (False, True)}
+
+    eng = results[True]["engine"]
+    plan = plan_for_layout(spec, eng.layout)
+    avg_prompt = float(np.mean([len(r.prompt) for r in reqs]))
+    hr = prefix_hit_rate(n, n_templates, template_len, avg_prompt, 16)
+    pred = predict_serve_throughput(
+        spec, hardware.get("rpi5"), precision.get("fp32"), plan,
+        slots=slots, avg_prompt=avg_prompt,
+        avg_new=float(np.mean([r.max_new_tokens for r in reqs])),
+        prefix_hit_rate=hr)
+    rows = [
+        {"engine": "prefix_off", "prefill_tokens": s_off["prefill_tokens"],
+         "seconds": results[False]["seconds"], "occupancy": occ[False]},
+        {"engine": "prefix_on", "prefill_tokens": s_on["prefill_tokens"],
+         "prefix_hit_tokens": s_on["prefix_hit_tokens"],
+         "cow_copies": s_on["cow_copies"],
+         "preemptions": s_on["preemptions"],
+         "seconds": results[True]["seconds"], "occupancy": occ[True]},
+        {"engine": "measured", "prefill_token_reduction": reduction},
+        {"engine": "analytical", "predicted_hit_rate": hr, **pred},
+    ]
+    return "serve_prefix_cache", results[True]["seconds"] * 1e6, rows
+
+
 def run(smoke: bool = False):
     if smoke:
         n, slots, buckets, new_lo, new_hi = 6, 4, [32, 64, 128], 8, 24
@@ -147,7 +247,24 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="small workload for CI")
+    ap.add_argument("--prefix", action="store_true",
+                    help="shared-prefix (prefix-caching) gate instead of "
+                         "the mixed-length throughput comparison")
     args = ap.parse_args()
+    if args.prefix:
+        name, us, rows = run_prefix(smoke=args.smoke)
+        print(f"## {name}")
+        for r in rows:
+            print(r)
+        red = next(r["prefill_token_reduction"] for r in rows
+                   if r["engine"] == "measured")
+        floor = 0.3
+        status = "PASS" if red >= floor else "FAIL"
+        print(f"{status}: prefill-token reduction = {red:.1%} "
+              f"(floor {floor:.0%}, outputs identical)")
+        if red < floor:
+            raise SystemExit(1)
+        return
     name, us, rows = run(smoke=args.smoke)
     print(f"## {name}")
     for r in rows:

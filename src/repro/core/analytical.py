@@ -168,18 +168,90 @@ def kv_budget(device_bytes: float, mem: MemoryBreakdown,
 
 
 def mixed_iteration_flops(spec: ModelSpec, prefill_tokens: int,
-                          decode_slots: int, avg_context: float) -> float:
+                          decode_slots: int, avg_context: float,
+                          cached_prefix_tokens: int = 0) -> float:
     """Useful FLOPs of ONE continuous-batching iteration that prefills
     ``prefill_tokens`` prompt tokens and decodes one token for each of
-    ``decode_slots`` live slots at mean context ``avg_context``."""
+    ``decode_slots`` live slots at mean context ``avg_context``.
+
+    ``cached_prefix_tokens`` models prefix-cache hits: those tokens run
+    NO projections/MLP (their KV is read from shared pages), while the
+    prefilled suffix tokens attend over a context that starts at the
+    cached length — so hits remove the per-token matmul FLOPs entirely
+    and shift the suffix attention span, exactly what
+    ``models.lm.prefill_paged`` executes.
+    """
     fl = 0.0
     if prefill_tokens:
-        fl += blocks.forward_flops_per_token(
-            spec, prefill_tokens // 2) * prefill_tokens
+        mean_ctx = cached_prefix_tokens + prefill_tokens // 2
+        fl += blocks.forward_flops_per_token(spec, mean_ctx) * prefill_tokens
     if decode_slots:
         fl += blocks.forward_flops_per_token(
             spec, int(avg_context)) * decode_slots
     return fl
+
+
+# ---------------------------------------------------------------------------
+# Prefix caching + admission occupancy (serve accounting)
+# ---------------------------------------------------------------------------
+
+def expected_prefix_hit_tokens(num_requests: int, num_templates: int,
+                               template_tokens: int, page_size: int) -> float:
+    """Expected cached-prefix tokens per request for a templated
+    workload: ``num_requests`` prompts drawn from ``num_templates``
+    shared prefixes of ``template_tokens`` tokens each.
+
+    The first request per template prefills it (cold); every later
+    request hits the template's FULL pages.  Sharing is page-granular:
+    a template's mid-page remainder sits in a page alongside each
+    request's own suffix, so it only reuses on an exact-prompt
+    extension (copy-on-write), never across requests with differing
+    suffixes — hence the floor to ``page_size``.
+    """
+    if num_requests <= 0:
+        return 0.0
+    full = (template_tokens // page_size) * page_size
+    warm = max(0, num_requests - num_templates)
+    return full * warm / num_requests
+
+
+def prefix_hit_rate(num_requests: int, num_templates: int,
+                    template_tokens: int, avg_prompt: float,
+                    page_size: int) -> float:
+    """Fraction of prompt tokens served from the prefix store (the
+    knob ``predict_serve_throughput`` takes)."""
+    hit = expected_prefix_hit_tokens(num_requests, num_templates,
+                                     template_tokens, page_size)
+    return min(1.0, hit / max(1.0, avg_prompt))
+
+
+def mean_pages_held(avg_prompt: float, avg_new: float, page_size: int,
+                    admission: str = "lazy") -> float:
+    """Mean pages a request holds over its lifetime.
+
+    ``conservative`` admission reserves pages for prompt+max_new up
+    front and holds them until completion; ``lazy`` allocation holds
+    pages(prompt + generated so far), which averages half the decode
+    span — the occupancy headroom that lets the lazy scheduler admit
+    more concurrent requests into the same pool (preemption keeps the
+    FCFS head live when the gamble loses).
+    """
+    def pages(t: float) -> float:
+        return -(-t // page_size)
+    if admission == "conservative":
+        return pages(avg_prompt + avg_new)
+    if admission != "lazy":
+        raise ValueError(f"admission {admission!r}")
+    return pages(avg_prompt) + (pages(avg_prompt + avg_new)
+                                - pages(avg_prompt)) / 2.0
+
+
+def effective_slots(plan: "PagedCachePlan", slots: int, avg_prompt: float,
+                    avg_new: float, admission: str = "lazy") -> float:
+    """Concurrent requests the pool sustains: the slot count capped by
+    usable pages over the admission policy's mean held pages."""
+    held = mean_pages_held(avg_prompt, avg_new, plan.page_size, admission)
+    return min(float(slots), plan.usable_pages / max(1.0, held))
 
 
 @dataclass(frozen=True)

@@ -12,7 +12,7 @@ from dataclasses import dataclass
 from typing import Dict
 
 from repro.core.analytical import (Analysis, PagedCachePlan,
-                                   mixed_iteration_flops)
+                                   effective_slots, mixed_iteration_flops)
 from repro.core.hardware import HardwareSpec
 from repro.core.model_config import ModelSpec
 from repro.core.precision import PrecisionSpec
@@ -90,7 +90,7 @@ class IterationCost:
 def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
                          precision: PrecisionSpec, plan: PagedCachePlan, *,
                          prefill_tokens: int, decode_slots: int,
-                         avg_context: float,
+                         avg_context: float, cached_prefix_tokens: int = 0,
                          params: float | None = None) -> IterationCost:
     """Analytical cost of one scheduler iteration — predicts continuous
     batching throughput from the same roofline terms as ``breakdown()``.
@@ -98,14 +98,18 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
     Memory term: weights stream once per iteration (shared by every slot
     in the batch — the whole point of iteration-level batching) plus the
     paged KV actually touched: ``avg_context`` tokens per live decode
-    slot and the prefill tokens written once.
+    slot and the prefill tokens written once.  ``cached_prefix_tokens``
+    are prefix-cache hits: their projections/MLP are skipped entirely
+    (see ``mixed_iteration_flops``) and their KV is READ from shared
+    pages instead of recomputed and written — the per-token page bytes
+    move once either way, so only the FLOP term drops.
     """
     from repro.core import blocks
     P = params if params is not None else blocks.param_count(spec, padded=False)
     flops = mixed_iteration_flops(spec, prefill_tokens, decode_slots,
-                                  avg_context)
+                                  avg_context, cached_prefix_tokens)
     kv_bytes = plan.bytes_per_token * (
-        decode_slots * avg_context + prefill_tokens)
+        decode_slots * avg_context + prefill_tokens + cached_prefix_tokens)
     weight_bytes = P * precision.bytes_per_param
     t_comp = flops / (hw.flops_at(precision.name) * hw.u_compute)
     t_mem = (weight_bytes + kv_bytes) / (hw.mem_bw * hw.u_memory)
@@ -115,21 +119,31 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
 def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
                              precision: PrecisionSpec, plan: PagedCachePlan,
                              *, slots: int, avg_prompt: float,
-                             avg_new: float) -> Dict[str, float]:
+                             avg_new: float, prefix_hit_rate: float = 0.0,
+                             admission: str = "lazy") -> Dict[str, float]:
     """Steady-state continuous batching vs static-batch throughput.
 
     Static batching pads every slot to the batch max and holds slots
     until the LAST request finishes; continuous batching refills slots
-    immediately, so its steady state keeps all ``slots`` live at the
-    mean context.  Returns tokens/sec for both plus the ratio — the
+    immediately, so its steady state keeps its live slots at the mean
+    context.  ``prefix_hit_rate`` is the fraction of prompt tokens
+    served from the prefix store (``analytical.prefix_hit_rate``) —
+    those skip prefill FLOPs; ``admission`` ("lazy" | "conservative")
+    sets how many slots the page pool actually sustains
+    (``analytical.effective_slots``) — lazy allocation holds only the
+    pages written so far, so the same pool carries more concurrent
+    requests.  Returns tokens/sec for both plus the ratio — the
     analytical counterpart of ``benchmarks/serve_throughput.py``.
     """
     avg_ctx = avg_prompt + avg_new / 2
+    live = effective_slots(plan, slots, avg_prompt, avg_new, admission)
+    hit = avg_prompt * min(1.0, max(0.0, prefix_hit_rate))
     # continuous: amortized one prefill per finished request per avg_new steps
     cont = mixed_iteration_cost(
         spec, hw, precision, plan,
-        prefill_tokens=int(avg_prompt * slots / max(1.0, avg_new)),
-        decode_slots=slots, avg_context=avg_ctx)
+        prefill_tokens=int((avg_prompt - hit) * live / max(1.0, avg_new)),
+        decode_slots=int(round(live)), avg_context=avg_ctx,
+        cached_prefix_tokens=int(hit * live / max(1.0, avg_new)))
     # static: same decode roofline but slots idle in the drain tail --
     # useful-token rate scales by mean/max occupancy (~avg/(2*avg) for a
     # uniform length spread) and every context pads to the batch max.
@@ -140,7 +154,9 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     static_tps = stat.tokens_per_s * 0.5
     return {"continuous_tokens_per_s": cont.tokens_per_s,
             "static_tokens_per_s": static_tps,
-            "speedup": cont.tokens_per_s / max(1e-12, static_tps)}
+            "speedup": cont.tokens_per_s / max(1e-12, static_tps),
+            "effective_slots": live,
+            "prefix_hit_rate": min(1.0, max(0.0, prefix_hit_rate))}
 
 
 @dataclass

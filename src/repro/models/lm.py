@@ -552,6 +552,134 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
     return out, new_kv
 
 
+def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
+                       tgt_page, tgt_off, *, kind):
+    """Attention for a prompt SUFFIX against cached prefix pages.
+
+    The prefix-cache admission path: the first ``prefix_len`` context
+    tokens already live in the page pool (shared read-only from the
+    prefix store), so only the suffix runs projections.  Gathers the
+    prefix K/V rows (dequantizing int8 pages), attends causally over
+    [prefix ; suffix], and scatters the suffix K/V into the slot's own
+    pages.  Padding needs no mask here: padded KEYS sit causally after
+    every true query, and padded rows are routed to the null page by
+    ``tgt_page`` (computed from ``true_len`` in ``prefill_paged``),
+    whose content is never read.
+    """
+    from repro.quant.quantize import quantize_kv_int8
+    B, S = xn.shape[:2]
+    H, KV, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    page = kv["k_pages"].shape[1]
+    npr = pref_pages.shape[0] * page
+    q = qdot(xn, p["wq"]).reshape(B, S, H, D)
+    k = qdot(xn, p["wk"]).reshape(B, S, KV, D)
+    v = qdot(xn, p["wv"]).reshape(B, S, KV, D)
+    q = L.rope(q, positions, spec.rope_theta)
+    k = L.rope(k, positions, spec.rope_theta)
+
+    quantized = "k_scale" in kv
+    kp = kv["k_pages"][pref_pages].astype(jnp.float32)   # (n, page, KV, D)
+    vp = kv["v_pages"][pref_pages].astype(jnp.float32)
+    if quantized:
+        kp = kp * kv["k_scale"][pref_pages]
+        vp = vp * kv["v_scale"][pref_pages]
+    kp = kp.reshape(1, npr, KV, D)
+    vp = vp.reshape(1, npr, KV, D)
+    k_all = jnp.concatenate([kp.astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([vp.astype(v.dtype), v], axis=1)
+
+    s = L._grouped_scores(q, k_all) / math.sqrt(D)       # (B,KV,G,S,T)
+    if spec.attn_logit_softcap:
+        s = jnp.tanh(s / spec.attn_logit_softcap) * spec.attn_logit_softcap
+    i_abs = positions[0][:, None]                        # (S, 1)
+    k_abs = jnp.concatenate([jnp.arange(npr), positions[0]])
+    is_suffix = jnp.concatenate([jnp.zeros((npr,), bool),
+                                 jnp.ones((S,), bool)])
+    valid = (k_abs[None, :] <= i_abs) & \
+            ((k_abs[None, :] < prefix_len) | is_suffix[None, :])
+    window = spec.sliding_window if kind == "attn_local" else 0
+    if window:
+        valid &= (i_abs - k_abs[None, :]) < window
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = L._grouped_out(prob, v_all).astype(q.dtype)
+    out = qdot(o.reshape(B, S, H * D), p["wo"])
+
+    new_kv = dict(kv)
+    for name, rows in (("k", k[0]), ("v", v[0])):        # rows: (S, KV, D)
+        pool = kv[name + "_pages"]
+        if quantized:
+            qrow, srow = quantize_kv_int8(rows)
+            new_kv[name + "_pages"] = pool.at[tgt_page, tgt_off].set(qrow)
+            new_kv[name + "_scale"] = kv[name + "_scale"].at[
+                tgt_page, tgt_off].set(srow)
+        else:
+            new_kv[name + "_pages"] = pool.at[tgt_page, tgt_off].set(
+                rows.astype(pool.dtype))
+    return out, new_kv
+
+
+def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
+                  prefix_len, true_len, *,
+                  n_prefix_pages: int) -> Tuple[jnp.ndarray, Params]:
+    """Prefill a prompt SUFFIX directly into a paged cache slot whose
+    first ``prefix_len`` tokens are already cached (prefix-cache hit).
+
+    ``tokens`` is the (1, S) bucket-padded suffix; ``true_len`` (traced)
+    its real length; ``prefix_len`` (traced) the cached context length;
+    ``n_prefix_pages`` (static) how many block-table entries to gather
+    for the prefix — rows past ``prefix_len`` are masked, so a
+    power-of-two bucket keeps compile variants low.  Returns the logits
+    of the last true suffix token and the updated cache with
+    ``pos[slot] = prefix_len + true_len`` and the slot's block table set
+    to ``bt_row``.  The FLOPs this skips relative to a full prefill are
+    what ``core.analytical.mixed_iteration_flops(cached_prefix_tokens=)``
+    accounts for.
+    """
+    page = cache["groups"][0][0]["k_pages"].shape[1]
+    S = tokens.shape[1]
+    positions = prefix_len + jnp.arange(S)[None]         # (1, S) absolute
+    pref_pages = bt_row[:n_prefix_pages]
+    abs_pos = prefix_len + jnp.arange(S)
+    page_idx = jnp.minimum(abs_pos // page, bt_row.shape[0] - 1)
+    tgt_page = jnp.where(jnp.arange(S) < true_len, bt_row[page_idx], 0)
+    tgt_off = abs_pos % page
+
+    x = jnp.take(params["global"]["embed"], tokens, axis=0)
+    if spec.name.startswith("gemma"):
+        x = x * math.sqrt(spec.d_model)
+    new_groups = []
+    for g, gp, cg in zip(group_plan(spec), params["groups"], cache["groups"]):
+        base = _base_kind(g.kind)
+        new_layers = []
+        for li, cslice in enumerate(cg):
+            pslice = jax.tree_util.tree_map(lambda v: v[li], gp)
+            xn = L.norm(spec, pslice, "norm1", x)
+            h, kv_new = _suffix_attn_paged(
+                spec, pslice, xn, positions, cslice, pref_pages, prefix_len,
+                tgt_page, tgt_off, kind=base)
+            y = x + h
+            y2 = L.norm(spec, pslice, "norm2", y)
+            if "router_w" in pslice:
+                h2, _ = L.moe_block(spec, pslice, y2)
+            else:
+                h2 = L.mlp_block(spec, pslice, y2)
+            x = y + h2
+            new_layers.append(kv_new)
+        new_groups.append(new_layers)
+
+    x_last = jax.lax.dynamic_slice_in_dim(
+        x, jnp.asarray(true_len, jnp.int32) - 1, 1, axis=1)
+    logits = _lm_head(params, spec, x_last)
+    new_cache = {
+        "pos": cache["pos"].at[slot].set(
+            jnp.asarray(prefix_len + true_len, jnp.int32)),
+        "block_tables": cache["block_tables"].at[slot].set(bt_row),
+        "groups": new_groups,
+    }
+    return logits, new_cache
+
+
 def decode_step_paged(params, spec: ModelSpec, cache,
                       tokens) -> Tuple[jnp.ndarray, Params]:
     """One decode step over a PAGED cache (per-slot positions).

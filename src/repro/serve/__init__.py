@@ -1,4 +1,6 @@
 from repro.serve.engine import ServeConfig, generate, load_quantized, make_prefill_step, make_serve_step
-from repro.serve.paged_cache import PageAllocator, make_layout, pages_needed, plan_for_layout
+from repro.serve.paged_cache import (PageAllocator, PrefixCache, PrefixMatch,
+                                     copy_page, make_layout, pages_needed,
+                                     plan_for_layout)
 from repro.serve.scheduler import (Completion, ContinuousBatchingEngine,
                                    Request, SchedulerConfig)

@@ -18,16 +18,20 @@ Two serving modes live in this package:
 
 * **Continuous batching** (``scheduler.ContinuousBatchingEngine``):
   iteration-level scheduling over a block-table paged KV cache
-  (``paged_cache.py``).  Requests admit into slots as pages free up,
-  prompts prefill at their own (bucketed) length, and each iteration
-  decodes one token for all live slots through the gather-based paged
-  attention op (``kernels/paged_attention.py``).  Slots free their
-  pages the moment a request finishes, so mixed-length workloads keep
-  the batch full — ``benchmarks/serve_throughput.py`` measures the
-  tokens/sec win over ``generate()``.  The paged layout is also the
-  base for prefix caching (share read-only prompt pages between
-  requests) and multi-device serving (shard the page pool) in later
-  PRs.
+  (``paged_cache.py``) with REFCOUNTED pages.  Prompts are matched
+  against a hash-indexed prefix store first — cached system-prompt /
+  template pages are shared read-only across requests (copy-on-write
+  when a shared prefix ends mid-page) and only the uncached suffix
+  prefills (``lm.prefill_paged``); admission allocates prompt pages
+  only (lazy), decode slots grab pages on demand, and under pressure
+  the scheduler evicts unshared store pages then preempts the newest
+  slot (greedy recompute, prefix pages retained by refcount).  Each
+  iteration decodes one token for all live slots through the
+  gather-based paged attention op (``kernels/paged_attention.py``).
+  ``benchmarks/serve_throughput.py`` measures the tokens/sec win over
+  ``generate()`` and (``--prefix``) the prefill-token reduction on
+  templated workloads.  The paged layout is also the base for
+  multi-device serving (shard the page pool) in later PRs.
 """
 from __future__ import annotations
 

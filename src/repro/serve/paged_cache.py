@@ -1,13 +1,33 @@
-"""Block-table paged KV cache for the continuous-batching serve engine.
+"""Block-table paged KV cache: refcounted pages + hash-indexed prefix store.
 
 The device side is a plain pytree built by ``models.lm.init_paged_cache``
 (per-layer page pools + per-slot block tables) so it jits/donates like
-any other cache.  This module owns the HOST side: a ``PageAllocator``
-tracking which physical page belongs to which request (page 0 is the
-reserved null page), budget-driven sizing via
-``core.analytical.plan_paged_cache`` / ``MemoryBreakdown``, and the
-prompt-ingest routine that scatters a contiguous prefill cache into a
-slot's pages.
+any other cache.  This module owns the HOST side:
+
+* ``PageAllocator`` — refcounted ownership of physical pages (page 0 is
+  the reserved null page).  A page is FREE xor referenced (refcount >= 1);
+  ``alloc`` hands out fresh pages at refcount 1, ``share`` lets a second
+  holder (another request, or the prefix store) pin an already-live page
+  read-only, and ``free`` releases one reference per call, returning the
+  page to the free list exactly when the last holder lets go.  The
+  invariants are asserted by ``check()`` and fuzzed (hypothesis + numpy
+  interleavings) in tests/test_prefix_cache.py.
+
+* ``PrefixCache`` — page-granular prompt reuse.  Prompts are chunked
+  into pages and keyed by (length, blake2b-128) of ALL tokens up to the
+  chunk's end (cumulative, so a hit guarantees the whole prefix
+  matches to cryptographic collision odds; lookups stream one
+  incremental hasher over the prompt, entries store no token bytes).
+  Full pages are shared read-only across requests via refcounts; a
+  cached prefix that ends mid-page is reused by COPY-ON-WRITE — the
+  sharer gets a fresh page with the cached rows copied in
+  (``copy_page``), because it will append its own suffix/decode KV into
+  that page.  Entries hold one reference each and are evicted LRU when
+  the allocator runs dry (only entries no request is sharing can drop).
+
+* budget-driven sizing via ``core.analytical.plan_paged_cache`` /
+  ``MemoryBreakdown``, plus the prompt-ingest routine that scatters a
+  contiguous prefill cache into a slot's pages.
 
 int8 pages (``cache_dtype="int8"``) store per-token-per-head f32 scales
 next to the pools — the paper's KV-memory roofline term drops 2x vs
@@ -15,9 +35,15 @@ bf16 and 4x vs f32 at <2% logit error on the scaled-down models.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+import functools
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.analytical import (MemoryBreakdown, PagedCachePlan,
                                    kv_budget, page_bytes, plan_paged_cache)
@@ -29,12 +55,14 @@ NULL_PAGE = 0
 
 
 class PageAllocator:
-    """Free-list page allocator with ownership tracking.
+    """Refcounted free-list page allocator.
 
     Invariants (asserted by ``check``, fuzzed in
-    tests/test_serve_scheduler.py): every page except the null page is
-    either free or owned by exactly one request; alloc never hands out
-    the null page or an owned page; free returns pages exactly once.
+    tests/test_prefix_cache.py): every page except the null page is
+    either free or referenced with refcount >= 1, never both; alloc
+    never hands out the null page or a live page; a page returns to the
+    free list exactly when its refcount hits zero (one ``free`` per
+    outstanding reference); releasing a free page raises.
     """
 
     def __init__(self, num_pages: int):
@@ -42,7 +70,7 @@ class PageAllocator:
             raise ValueError("need >= 2 pages (page 0 is reserved)")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._owner: Dict[int, int] = {}        # page -> request uid
+        self._ref: Dict[int, int] = {}          # page -> refcount >= 1
 
     @property
     def free_pages(self) -> int:
@@ -51,35 +79,219 @@ class PageAllocator:
     def can_alloc(self, n: int) -> bool:
         return n <= len(self._free)
 
-    def alloc(self, n: int, uid: int) -> List[int]:
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def alloc(self, n: int) -> List[int]:
         if not self.can_alloc(n):
             raise MemoryError(f"paged KV OOM: want {n} pages, "
                               f"have {len(self._free)}")
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
-            self._owner[p] = uid
+            self._ref[p] = 1
         return pages
 
-    def free(self, pages: Sequence[int]) -> None:
+    def share(self, pages: Sequence[int]) -> None:
+        """Add one reference to each (already live) page."""
         for p in pages:
-            if p == NULL_PAGE or p not in self._owner:
-                raise ValueError(f"double/foreign free of page {p}")
-            del self._owner[p]
-            self._free.append(p)
+            if p == NULL_PAGE or p not in self._ref:
+                raise ValueError(f"cannot share free/null page {p}")
+        for p in pages:
+            self._ref[p] += 1
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Release one reference per page; recycle at refcount zero."""
+        for p in pages:
+            if p == NULL_PAGE or p not in self._ref:
+                raise ValueError(f"over-release of page {p}")
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                del self._ref[p]
+                self._free.append(p)
 
     def check(self) -> None:
         free = set(self._free)
-        owned = set(self._owner)
-        assert NULL_PAGE not in free and NULL_PAGE not in owned
-        assert not (free & owned), f"pages both free and owned: {free & owned}"
+        live = set(self._ref)
+        assert NULL_PAGE not in free and NULL_PAGE not in live
+        assert all(c >= 1 for c in self._ref.values()), \
+            "zero/negative refcount retained: " + str(self._ref)
+        assert not (free & live), f"pages both free and live: {free & live}"
         assert len(free) == len(self._free), "duplicate pages in free list"
-        assert free | owned == set(range(1, self.num_pages)), \
-            "leaked pages: " + str(set(range(1, self.num_pages)) - free - owned)
+        assert free | live == set(range(1, self.num_pages)), \
+            "leaked pages: " + str(set(range(1, self.num_pages)) - free - live)
 
 
 def pages_needed(tokens: int, page_size: int) -> int:
     return -(-tokens // page_size)
 
+
+# ---------------------------------------------------------------------------
+# Prefix store
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PrefixEntry:
+    page: int
+    n_tokens: int                   # valid KV rows in the page
+
+
+@dataclass
+class PrefixMatch:
+    """Result of a prompt lookup against the prefix store.
+
+    ``full_pages`` are whole cached pages the request can share
+    read-only; ``partial`` (page, n_tokens) is an optional cached chunk
+    that ends mid-page and must be copy-on-write'd because the sharer
+    will append into it.  ``tokens`` counts every matched prompt token
+    (full + partial) — always <= len(prompt) - 1 so at least one token
+    remains to prefill (its logits seed sampling).
+    """
+    full_pages: List[int]
+    partial: Optional[Tuple[int, int]]
+    tokens: int
+
+
+class PrefixCache:
+    """Hash-indexed, LRU-evicted store of read-only prompt pages.
+
+    Keys are (prefix_length, blake2b-128(prefix token bytes)) — the
+    cumulative digest of EVERY token up to the chunk's end, so a hit
+    guarantees (to 128-bit collision odds, keyed by exact length) that
+    the whole prefix matches; entries store no token bytes, keeping the
+    host side O(1) per page, and ``lookup`` streams the prompt through
+    ONE incremental hasher so the page walk costs O(page) per probe
+    rather than re-hashing the prefix from scratch.  Each entry pins
+    its page with one allocator reference, so pages survive their
+    original request and are reclaimed only by ``evict`` (and only once
+    no live request shares them).  Content written by a page's original
+    owner at offsets >= ``n_tokens`` (its own decode tokens) is
+    harmless: full pages are immutable, and partial entries are
+    consumed via copy-on-write where the sharer overwrites everything
+    past ``n_tokens`` before reading it.
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        self.alloc = alloc
+        self.page_size = page_size
+        self._entries: "OrderedDict[Tuple[int, bytes], PrefixEntry]" = \
+            OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _digest(prefix: np.ndarray) -> bytes:
+        return hashlib.blake2b(
+            np.ascontiguousarray(prefix, np.int32).tobytes(),
+            digest_size=16).digest()
+
+    def _get(self, key: Tuple[int, bytes]) -> Optional[PrefixEntry]:
+        ent = self._entries.get(key)
+        if ent is not None:
+            self._entries.move_to_end(key)    # LRU touch
+        return ent
+
+    def lookup(self, prompt: np.ndarray) -> PrefixMatch:
+        """Longest cached prefix of ``prompt``, capped at len(prompt)-1."""
+        page = self.page_size
+        plen = len(prompt)
+        buf = np.ascontiguousarray(prompt, np.int32).tobytes()
+        h = hashlib.blake2b(digest_size=16)
+        full: List[int] = []
+        while (len(full) + 1) * page <= plen - 1:
+            hn = h.copy()
+            hn.update(buf[len(full) * page * 4:(len(full) + 1) * page * 4])
+            ent = self._get(((len(full) + 1) * page, hn.digest()))
+            if ent is None:
+                break
+            h = hn
+            full.append(ent.page)
+        matched = len(full) * page
+        partial: Optional[Tuple[int, int]] = None
+        # longest mid-page chunk extending the full match (CoW path):
+        # extend the clean hasher one token at a time, probe longest-first
+        cands: List[Tuple[int, bytes]] = []
+        for t in range(1, min(page - 1, plen - 1 - matched) + 1):
+            h.update(buf[(matched + t - 1) * 4:(matched + t) * 4])
+            cands.append((t, h.digest()))
+        for t, d in reversed(cands):
+            ent = self._get((matched + t, d))
+            if ent is not None:
+                partial = (ent.page, t)
+                matched += t
+                break
+        if matched:
+            self.hits += 1
+        else:
+            self.misses += 1
+        return PrefixMatch(full, partial, matched)
+
+    def _insert_key(self, key: Tuple[int, bytes], page: int,
+                    n_tokens: int) -> bool:
+        if key in self._entries:
+            return False
+        self.alloc.share([page])
+        self._entries[key] = PrefixEntry(page, n_tokens)
+        return True
+
+    def insert(self, prefix: np.ndarray, page: int, n_tokens: int) -> bool:
+        """Register ``page`` as holding the KV of ``prefix`` (whose last
+        ``n_tokens`` tokens live in this page).  Takes one allocator
+        reference; no-op if the key is already present."""
+        return self._insert_key((len(prefix), self._digest(prefix)),
+                                page, n_tokens)
+
+    def register_prompt(self, prompt: np.ndarray, pages: Sequence[int]) -> int:
+        """Register every chunk of an admitted prompt (full pages plus
+        the mid-page tail) in one pass, streaming a single incremental
+        hasher instead of re-digesting the prefix per entry.  Chunks
+        whose key already exists (prior hits, concurrent twins) no-op.
+        Returns the number of new entries."""
+        page = self.page_size
+        plen = len(prompt)
+        buf = np.ascontiguousarray(prompt, np.int32).tobytes()
+        h = hashlib.blake2b(digest_size=16)
+        new = 0
+        for pi in range(plen // page):
+            h.update(buf[pi * page * 4:(pi + 1) * page * 4])
+            new += self._insert_key(((pi + 1) * page, h.digest()),
+                                    pages[pi], page)
+        tail = plen % page
+        if tail:
+            h.update(buf[(plen - tail) * 4:])
+            new += self._insert_key((plen, h.digest()), pages[-1], tail)
+        return new
+
+    def evict(self, n_pages: int) -> int:
+        """Drop LRU entries until ``n_pages`` pages return to the free
+        list.  Entries whose page a live request still shares
+        (refcount > 1) are SKIPPED and kept: dropping them would lose
+        the cache without freeing anything — the page only becomes
+        reclaimable once its sharers finish."""
+        freed = 0
+        for key in list(self._entries):
+            if freed >= n_pages:
+                break
+            ent = self._entries[key]
+            if self.alloc.refcount(ent.page) > 1:
+                continue
+            del self._entries[key]
+            self.alloc.free([ent.page])
+            freed += 1
+        return freed
+
+    def flush(self) -> None:
+        """Release every cached page reference (tests / shutdown)."""
+        for ent in self._entries.values():
+            self.alloc.free([ent.page])
+        self._entries.clear()
+
+
+# ---------------------------------------------------------------------------
+# Layout sizing
+# ---------------------------------------------------------------------------
 
 def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
                 num_pages: Optional[int] = None,
@@ -124,6 +336,10 @@ def plan_for_layout(spec: ModelSpec, layout: lm.PagedLayout,
                           bytes_per_token=pb / layout.page_size)
 
 
+# ---------------------------------------------------------------------------
+# Device-side page plumbing
+# ---------------------------------------------------------------------------
+
 def scatter_prompt_pages(cache_groups, prefill_groups, pv: jnp.ndarray,
                          page: int):
     """Scatter the first ``len(pv)`` pages of KV rows from a contiguous
@@ -152,6 +368,29 @@ def scatter_prompt_pages(cache_groups, prefill_groups, pv: jnp.ndarray,
             new_layers.append(new_entry)
         new_groups.append(new_layers)
     return new_groups
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page_fn(cache, src, dst):
+    new_groups = []
+    for cg in cache["groups"]:
+        new_layers = []
+        for entry in cg:
+            new_entry = dict(entry)
+            for name in new_entry:
+                pool = entry[name]
+                new_entry[name] = pool.at[dst].set(pool[src])
+            new_layers.append(new_entry)
+        new_groups.append(new_layers)
+    return {"pos": cache["pos"], "block_tables": cache["block_tables"],
+            "groups": new_groups}
+
+
+def copy_page(cache, src_page: int, dst_page: int):
+    """Copy one physical page (all layers, k/v and scales) — the
+    copy-on-write step when a request reuses a cached prefix that ends
+    mid-page and must append into its own private copy."""
+    return _copy_page_fn(cache, jnp.int32(src_page), jnp.int32(dst_page))
 
 
 def write_prompt(cache, spec: ModelSpec, slot: int, pages: Sequence[int],

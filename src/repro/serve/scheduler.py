@@ -1,4 +1,5 @@
-"""Continuous-batching serve scheduler (iteration-level batching).
+"""Continuous-batching serve scheduler: lazy paged allocation, refcounted
+prefix caching, and recompute-preemption.
 
 The static ``engine.generate`` path pads every request in a batch to the
 longest prompt, decodes until the LAST request finishes, and cannot
@@ -6,20 +7,35 @@ admit work mid-flight — on the memory-bound edge decode roofline
 (paper §III) all of that padding is wasted HBM traffic.  This scheduler
 runs the vLLM-style alternative on top of the paged KV cache:
 
-* requests queue host-side; a slot + enough pages for the request's
-  full context (prompt + max_new, conservative admission — no mid-
-  flight preemption needed) admits it;
-* admission prefills the prompt alone (bucket-padded to a power of two
-  so XLA compiles O(log max_seq) prefill shapes, ``true_len`` masking
-  keeps logits exact) and scatters the KV into the slot's pages;
-* every iteration then decodes ONE token for ALL live slots in a single
-  fixed-shape jitted step — mixed context lengths batch without
-  padding because attention walks per-slot block tables;
-* finished slots free their pages immediately and the next queued
-  request takes the slot on the same iteration.
+* requests queue host-side; admission allocates pages for the PROMPT
+  only (lazy allocation — decode pages are grabbed on demand, so the
+  pool runs at high occupancy instead of reserving prompt+max_new up
+  front);
+* prompts are first matched against the refcounted prefix store
+  (``paged_cache.PrefixCache``): cached full pages are shared read-only
+  across requests, a cached chunk ending mid-page is copy-on-write'd,
+  and only the uncached SUFFIX is prefilled (``lm.prefill_paged``
+  attends suffix queries over the gathered prefix KV) — templated /
+  multi-tenant prompts skip most of their prefill FLOPs and KV writes;
+* suffix prefill is bucket-padded to a power of two so XLA compiles
+  O(log max_seq) prefill shapes; ``true_len`` masking keeps logits
+  exact;
+* every iteration decodes ONE token for ALL live slots in a single
+  fixed-shape jitted step; when a slot crosses a page boundary it
+  allocates its next page just-in-time — if the pool is dry the
+  scheduler first evicts unshared prefix-store pages (LRU), then
+  PREEMPTS the newest-admitted slot: its non-shared pages are freed,
+  its prefix-store pages survive by refcount, and the victim re-queues
+  with prompt+generated-so-far as its new prompt (greedy recompute
+  resumes the sequence exactly, and its re-run prefill hits the cached
+  prefix);
+* finished slots free their page references immediately and the next
+  queued request takes the slot on the same iteration.
 
 Greedy decoding matches per-request static ``generate`` token-for-token
-(asserted in tests/test_serve_scheduler.py).
+with prefix caching on or off (asserted in tests/test_prefix_cache.py),
+and the allocator invariants hold under random interleavings
+(hypothesis fuzz ibid.).
 """
 from __future__ import annotations
 
@@ -59,16 +75,22 @@ class SchedulerConfig:
     num_pages: Optional[int] = None
     kv_budget_bytes: Optional[float] = None
     cache_dtype: str = "fp32"      # fp32 | int8
-    attention_impl: str = "naive"  # prefill attention impl
+    # prefill attention impl for COLD admissions; prefix-hit (suffix)
+    # prefills always use the dense-masked path in lm._suffix_attn_paged
+    # — the suffix x [gathered prefix; suffix] mask has no flash lowering
+    attention_impl: str = "naive"
+    enable_prefix_cache: bool = True
 
 
 @dataclass
 class _Slot:
     uid: int
+    prompt: np.ndarray             # prompt THIS incarnation prefilled
     prompt_len: int
-    max_new: int
+    max_new: int                   # remaining budget this incarnation
     pages: List[int]
     last_token: int
+    admit_seq: int                 # recency order for victim selection
     generated: List[int] = field(default_factory=list)
 
     @property
@@ -76,27 +98,55 @@ class _Slot:
         return len(self.generated) >= self.max_new
 
 
+@dataclass
+class _Resume:
+    """Host bookkeeping for a preempted request: tokens generated before
+    eviction (spliced back into its Completion) and the original prompt
+    length (the resumed incarnation's prompt includes prior output)."""
+    orig_prompt_len: int
+    prior: List[int]
+
+
 def _bucket(n: int, page_size: int, max_seq: int) -> int:
-    """Pad a prompt length to the next power-of-two page count."""
+    """Pad a prompt length to the next power-of-two page count.
+
+    The cap is ``max_seq`` rounded UP to a page multiple: the bucket is
+    a page-granular COMPUTE width (admission scatters whole pages), not
+    a context bound, so when ``page_size`` does not divide ``max_seq``
+    the padded width may exceed ``max_seq`` — context limits are
+    enforced at ``submit`` against true lengths.  (Capping at a raw
+    ``max_seq`` used to truncate the scatter page count and drop the
+    tail of prompts whose true pages fit — the ``_bucket``/``max_seq``
+    boundary tests pin this.)
+    """
     pages = pc.pages_needed(n, page_size)
     b = 1
     while b < pages:
         b *= 2
-    return min(b * page_size, max_seq)
+    cap = pc.pages_needed(max_seq, page_size) * page_size
+    return min(b * page_size, cap)
+
+
+def _pow2_pages(n: int, cap: int) -> int:
+    """Static gather width for cached-prefix pages (compile bucketing)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
 
 # Module-level jits (spec/impl static): every engine instance — and every
 # benchmark repetition — shares one compile cache instead of retracing
-# per-instance closures.  Both steps return sampled token ids, not
+# per-instance closures.  All steps return sampled token ids, not
 # logits, so only (B,)-sized arrays ever cross to the host.
 
 @functools.partial(jax.jit, static_argnames=("spec", "impl"),
                    donate_argnums=(2,))
 def _admit_fn(params, batch, cache, slot, true_len, bt_row, *, spec, impl):
-    """Fused admission: prefill the (bucket-padded) prompt, scatter its
-    KV into the slot's pages, install the block-table row, and sample
-    the first token.  One jit call per admission (retraces only per
-    prompt bucket) instead of a chain of eager scatters."""
+    """Fused cold admission (no cached prefix): prefill the
+    (bucket-padded) prompt, scatter its KV into the slot's pages,
+    install the block-table row, and sample the first token.  One jit
+    call per admission (retraces only per prompt bucket)."""
     logits, pre = lm.prefill(params, spec, batch,
                              max_seq=batch["tokens"].shape[1],
                              impl=impl, true_len=true_len)
@@ -112,6 +162,19 @@ def _admit_fn(params, batch, cache, slot, true_len, bt_row, *, spec, impl):
     return jnp.argmax(logits[0, 0]), new_cache
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "n_prefix_pages"),
+                   donate_argnums=(2,))
+def _admit_prefix_fn(params, batch, cache, slot, prefix_len, true_len,
+                     bt_row, *, spec, n_prefix_pages):
+    """Fused warm admission: prefill only the prompt SUFFIX against the
+    slot's cached prefix pages (``lm.prefill_paged``) and sample the
+    first token.  Retraces per (suffix bucket, prefix-page bucket)."""
+    logits, new_cache = lm.prefill_paged(
+        params, spec, batch["tokens"], cache, slot, bt_row, prefix_len,
+        true_len, n_prefix_pages=n_prefix_pages)
+    return jnp.argmax(logits[0, 0]), new_cache
+
+
 @functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(1,))
 def _decode_fn(params, cache, tokens, active, *, spec):
     logits, cache = lm.decode_step(params, spec, cache, tokens)
@@ -122,12 +185,14 @@ def _decode_fn(params, cache, tokens, active, *, spec):
 
 
 class ContinuousBatchingEngine:
-    """Iteration-level scheduler over a paged KV cache.
+    """Iteration-level scheduler over a refcounted paged KV cache.
 
-    ``step()`` = admit-from-queue (prefill) + one batched decode; the
-    device state is a single paged-cache pytree threaded functionally
-    through jitted steps.  Counters (`stats`) feed the throughput
-    benchmark and the analytical model's occupancy inputs.
+    ``step()`` = admit-from-queue (full or suffix prefill) + lazy decode
+    page growth (with prefix-store eviction and preemption under
+    pressure) + one batched decode; the device state is a single paged-
+    cache pytree threaded functionally through jitted steps.  Counters
+    (``stats``) feed the throughput benchmark and the analytical model's
+    occupancy / prefix-hit inputs.
     """
 
     def __init__(self, params: Any, spec: ModelSpec, cfg: SchedulerConfig):
@@ -142,14 +207,22 @@ class ContinuousBatchingEngine:
         self.cache = lm.init_cache(spec, cfg.max_slots, cfg.max_seq,
                                    dtype, paged=layout)
         self.alloc = pc.PageAllocator(layout.num_pages)
+        self.prefix_cache: Optional[pc.PrefixCache] = (
+            pc.PrefixCache(self.alloc, cfg.page_size)
+            if cfg.enable_prefix_cache else None)
         self.slots: List[Optional[_Slot]] = [None] * cfg.max_slots
         self.queue: Deque[Request] = deque()
-        self.stats: Dict[str, int] = {
+        self._resume: Dict[int, _Resume] = {}
+        self._admit_seq = 0
+        self.stats: Dict[str, float] = {
             "iterations": 0, "decode_tokens": 0, "prefill_tokens": 0,
-            "admitted": 0, "finished": 0}
+            "prompt_tokens": 0, "prefix_hit_tokens": 0, "admitted": 0,
+            "finished": 0, "preemptions": 0, "cow_copies": 0,
+            "prefix_evicted_pages": 0, "occupancy_sum": 0.0}
 
-        self._admit_one = functools.partial(_admit_fn, spec=spec,
-                                            impl=cfg.attention_impl)
+        self._admit_full = functools.partial(_admit_fn, spec=spec,
+                                             impl=cfg.attention_impl)
+        self._admit_prefix = functools.partial(_admit_prefix_fn, spec=spec)
         self._decode = functools.partial(_decode_fn, spec=spec)
 
     # -- queue ------------------------------------------------------------
@@ -161,7 +234,8 @@ class ContinuousBatchingEngine:
                              f"max_seq {self.cfg.max_seq}")
         n_pages = pc.pages_needed(total, self.cfg.page_size)
         if n_pages > self.layout.num_pages - 1:
-            # would never admit: run() would spin on the FCFS head forever
+            # would never admit even running SOLO with the whole store
+            # evicted: run() would spin on the FCFS head forever
             raise ValueError(
                 f"request {req.uid}: needs {n_pages} pages but the pool "
                 f"only has {self.layout.num_pages - 1} usable")
@@ -173,37 +247,173 @@ class ContinuousBatchingEngine:
     def num_active(self) -> int:
         return sum(s is not None for s in self.slots)
 
+    # -- page pressure ----------------------------------------------------
+
+    def _reserve(self, n: int) -> bool:
+        """Make ``n`` pages allocatable, evicting unshared prefix-store
+        pages (LRU) if the free list is short.  Never preempts — that is
+        the decode-growth path's escalation."""
+        if self.alloc.can_alloc(n):
+            return True
+        if self.prefix_cache is not None:
+            self.stats["prefix_evicted_pages"] += self.prefix_cache.evict(
+                n - self.alloc.free_pages)
+        return self.alloc.can_alloc(n)
+
+    def _pick_victim(self) -> Optional[int]:
+        """Newest-admitted live slot (FCFS: the head of the line is the
+        last to be preempted)."""
+        best, best_seq = None, -1
+        for i, slot in enumerate(self.slots):
+            if slot is not None and slot.admit_seq > best_seq:
+                best, best_seq = i, slot.admit_seq
+        return best
+
+    def _preempt(self, idx: int) -> None:
+        """Evict a slot: free its page references (prefix-store pages
+        survive by refcount), splice its output so far into the resume
+        record, and re-queue prompt+generated as a recompute request at
+        the queue head."""
+        slot = self.slots[idx]
+        assert slot is not None and not slot.done
+        res = self._resume.get(slot.uid)
+        prior = (res.prior if res else []) + slot.generated
+        orig_plen = res.orig_prompt_len if res else slot.prompt_len
+        self._resume[slot.uid] = _Resume(orig_plen, prior)
+        remaining = slot.max_new - len(slot.generated)
+        new_prompt = np.concatenate(
+            [slot.prompt, np.asarray(slot.generated, np.int32)])
+        self.alloc.free(slot.pages)
+        self.cache = pc.release_slot(self.cache, idx)
+        self.slots[idx] = None
+        self.queue.appendleft(Request(slot.uid, new_prompt, remaining))
+        self.stats["preemptions"] += 1
+
     # -- one iteration ----------------------------------------------------
 
     def _admit(self) -> None:
+        page = self.cfg.page_size
+        row_len = self.layout.slots_pages(self.cfg.max_seq)
         for i, slot in enumerate(self.slots):
             if slot is not None or not self.queue:
                 continue
             req = self.queue[0]
-            n_pages = pc.pages_needed(len(req.prompt) + req.max_new_tokens,
-                                      self.cfg.page_size)
-            if not self.alloc.can_alloc(n_pages):
-                break                     # FCFS: don't starve the head
-            self.queue.popleft()
-            pages = self.alloc.alloc(n_pages, req.uid)
             plen = len(req.prompt)
-            spad = _bucket(plen, self.cfg.page_size, self.cfg.max_seq)
-            padded = np.zeros((1, spad), np.int32)
-            padded[0, :plen] = req.prompt
-            # the block-table row carries ALL owned pages (prompt +
-            # reserved decode growth) so position // page_size always
-            # resolves without mid-flight allocation
-            row = np.full((self.layout.slots_pages(self.cfg.max_seq),),
-                          pc.NULL_PAGE, np.int32)
+            n_prompt_pages = pc.pages_needed(plen, page)
+            match = (self.prefix_cache.lookup(req.prompt)
+                     if self.prefix_cache is not None
+                     else pc.PrefixMatch([], None, 0))
+            # Try the richest reuse first; with live slots a failed
+            # reserve just WAITS (they finish and free pages, and the
+            # matched entries survive for the retry).  With NO live
+            # slots nothing will ever free pages, so waiting would
+            # livelock when the pins themselves make the last needed
+            # pages unevictable — degrade instead: dropping the
+            # partial, then the full match, releases those pins so
+            # `_reserve` can evict them as plain store pages (submit()
+            # guarantees the no-reuse plan fits solo, so the ladder
+            # terminates).
+            attempts = [(match.full_pages, match.partial, match.tokens)]
+            if self.num_active == 0:
+                if match.partial is not None:
+                    attempts.append((match.full_pages, None,
+                                     len(match.full_pages) * page))
+                if match.full_pages:
+                    attempts.append(([], None, 0))
+            # headroom: one page per live slot, so a fresh admission
+            # can't grab the exact pages an older slot's next page-
+            # boundary crossing needs (which would make the newcomer
+            # the immediate preemption victim and burn its prefill)
+            headroom = self.num_active
+            plan = None
+            for full_pages, partial, matched in attempts:
+                pinned = list(full_pages)
+                if partial is not None:
+                    pinned.append(partial[0])
+                if pinned:
+                    self.alloc.share(pinned)
+                fresh_needed = n_prompt_pages - len(full_pages)
+                if self._reserve(fresh_needed + headroom):
+                    plan = (full_pages, partial, matched, fresh_needed)
+                    break
+                if pinned:
+                    self.alloc.free(pinned)
+            if plan is None:
+                break                     # FCFS: don't starve the head
+            full_pages, partial, matched, fresh_needed = plan
+            self.queue.popleft()
+            fresh = self.alloc.alloc(fresh_needed)
+            pages = full_pages + fresh
+            if partial is not None:
+                src, _t = partial
+                self.cache = pc.copy_page(self.cache, src, fresh[0])
+                self.alloc.free([src])    # drop the temporary CoW pin
+                self.stats["cow_copies"] += 1
+
+            row = np.full((row_len,), pc.NULL_PAGE, np.int32)
             row[:len(pages)] = pages
-            tok0, self.cache = self._admit_one(
-                self.params, {"tokens": jnp.asarray(padded)}, self.cache,
-                jnp.int32(i), jnp.int32(plen), jnp.asarray(row))
+            suffix_len = plen - matched
+            if matched == 0:
+                spad = _bucket(plen, page, self.cfg.max_seq)
+                assert spad // page >= n_prompt_pages, \
+                    "bucket narrower than the prompt's pages"
+                padded = np.zeros((1, spad), np.int32)
+                padded[0, :plen] = req.prompt
+                tok0, self.cache = self._admit_full(
+                    self.params, {"tokens": jnp.asarray(padded)}, self.cache,
+                    jnp.int32(i), jnp.int32(plen), jnp.asarray(row))
+            else:
+                spad = _bucket(suffix_len, page, self.cfg.max_seq)
+                padded = np.zeros((1, spad), np.int32)
+                padded[0, :suffix_len] = req.prompt[matched:]
+                npp = _pow2_pages(pc.pages_needed(matched, page), row_len)
+                tok0, self.cache = self._admit_prefix(
+                    self.params, {"tokens": jnp.asarray(padded)}, self.cache,
+                    jnp.int32(i), jnp.int32(matched), jnp.int32(suffix_len),
+                    jnp.asarray(row), n_prefix_pages=npp)
             tok0 = int(tok0)
-            self.slots[i] = _Slot(req.uid, plen, req.max_new_tokens,
-                                  pages, tok0, [tok0])
+            self.slots[i] = _Slot(req.uid, req.prompt, plen,
+                                  req.max_new_tokens, pages, tok0,
+                                  self._admit_seq, [tok0])
+            self._admit_seq += 1
             self.stats["admitted"] += 1
-            self.stats["prefill_tokens"] += plen
+            self.stats["prompt_tokens"] += plen
+            self.stats["prefill_tokens"] += suffix_len
+            self.stats["prefix_hit_tokens"] += matched
+            if self.prefix_cache is not None:
+                self.prefix_cache.register_prompt(req.prompt, pages)
+
+    def _grow(self) -> None:
+        """Lazy decode allocation: give every live slot the page its next
+        KV write lands in, escalating free-list pressure to prefix-store
+        eviction and then preemption of the newest slot."""
+        page = self.cfg.page_size
+        updates: List[tuple] = []           # (slot_row, page_idx, page_id)
+        for i in sorted(range(len(self.slots)),
+                        key=lambda j: (self.slots[j].admit_seq
+                                       if self.slots[j] else -1)):
+            slot = self.slots[i]
+            if slot is None or slot.done:
+                continue
+            write_pos = slot.prompt_len + len(slot.generated) - 1
+            need_idx = write_pos // page
+            while slot is self.slots[i] and need_idx >= len(slot.pages):
+                if self._reserve(1):
+                    new_page = self.alloc.alloc(1)[0]
+                    slot.pages.append(new_page)
+                    updates.append((i, len(slot.pages) - 1, new_page))
+                    continue
+                victim = self._pick_victim()
+                assert victim is not None    # slot i itself is live
+                # drop any block-table updates queued for the victim
+                updates = [u for u in updates if u[0] != victim]
+                self._preempt(victim)
+        if updates:
+            rows = jnp.asarray([u[0] for u in updates], jnp.int32)
+            cols = jnp.asarray([u[1] for u in updates], jnp.int32)
+            vals = jnp.asarray([u[2] for u in updates], jnp.int32)
+            bt = self.cache["block_tables"]
+            self.cache["block_tables"] = bt.at[rows, cols].set(vals)
 
     def _finish(self, completions: List[Completion]) -> None:
         for i, slot in enumerate(self.slots):
@@ -211,20 +421,31 @@ class ContinuousBatchingEngine:
                 continue
             self.alloc.free(slot.pages)
             self.cache = pc.release_slot(self.cache, i)
+            res = self._resume.pop(slot.uid, None)
+            prior = res.prior if res is not None else []
+            plen0 = res.orig_prompt_len if res is not None else slot.prompt_len
+            toks = prior + slot.generated[:slot.max_new]
             completions.append(Completion(
-                slot.uid, slot.prompt_len,
-                np.asarray(slot.generated[:slot.max_new], np.int32)))
+                slot.uid, plen0, np.asarray(toks, np.int32)))
             self.slots[i] = None
             self.stats["finished"] += 1
 
     def step(self) -> List[Completion]:
-        """Admit + decode one token for every live slot; returns the
-        requests that finished this iteration."""
+        """Grow + admit + decode one token for every live slot; returns
+        the requests that finished this iteration.  Growth runs FIRST so
+        existing slots claim their next decode page before a new
+        admission can take it (paired with the admission headroom, this
+        keeps a just-prefilled newcomer from being the instant victim);
+        a second growth pass covers newcomers whose page-aligned prompt
+        makes their first decode write start a fresh page.
+        """
         completions: List[Completion] = []
+        self._grow()                      # may preempt; slots can change
         self._admit()
         self._finish(completions)         # max_new == 1 finishes at prefill
         if self.num_active == 0:
             return completions
+        self._grow()
         B = self.cfg.max_slots
         tokens = np.zeros((B, 1), np.int32)
         active = np.zeros((B,), np.int32)
@@ -232,6 +453,8 @@ class ContinuousBatchingEngine:
             if slot is not None and not slot.done:
                 tokens[i, 0] = slot.last_token
                 active[i] = 1
+        if not active.any():
+            return completions
         nxt, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active))
         nxt = np.asarray(nxt)
@@ -240,6 +463,8 @@ class ContinuousBatchingEngine:
                 slot.last_token = int(nxt[i])
                 slot.generated.append(int(nxt[i]))
                 self.stats["decode_tokens"] += 1
+        usable = self.layout.num_pages - 1
+        self.stats["occupancy_sum"] += (usable - self.alloc.free_pages) / usable
         self.stats["iterations"] += 1
         self._finish(completions)
         return completions

@@ -133,3 +133,60 @@ def test_memory_fits_v5e_train():
                             mesh=analytical.MeshShape(dp=16, tp=16),
                             microbatch=1, fsdp=True)
     assert fs.memory.total < 16 * 1024 ** 3           # FSDP fits
+
+
+def test_prefix_cache_savings_model():
+    """Prefix-hit accounting: hits remove prefill FLOPs, templated-
+    workload hit rates match the page-granular expectation."""
+    spec = ASSIGNED["granite-3-8b"].scaled_down()
+    # 48 requests over 4 templates of 128 tokens: first of each is cold
+    hit = analytical.expected_prefix_hit_tokens(48, 4, 128, 16)
+    assert abs(hit - 128 * 44 / 48) < 1e-9
+    # sharing is page-granular: an unaligned template floors to pages
+    hit = analytical.expected_prefix_hit_tokens(48, 4, 120, 16)
+    assert abs(hit - 112 * 44 / 48) < 1e-9
+    hr = analytical.prefix_hit_rate(48, 4, 128, avg_prompt=160.0,
+                                    page_size=16)
+    assert 0.0 < hr < 1.0
+    base = analytical.mixed_iteration_flops(spec, 128, 4, 200.0)
+    cached = analytical.mixed_iteration_flops(spec, 64, 4, 200.0,
+                                              cached_prefix_tokens=64)
+    assert cached < base                    # hits skip projection FLOPs
+    # cached tokens still shift the suffix attention span
+    assert cached > analytical.mixed_iteration_flops(spec, 64, 4, 200.0)
+
+
+def test_admission_occupancy_model():
+    """Lazy allocation holds fewer pages per request than conservative
+    admission, so the same pool sustains more concurrent requests."""
+    lazy = analytical.mean_pages_held(64, 64, 16, "lazy")
+    cons = analytical.mean_pages_held(64, 64, 16, "conservative")
+    assert lazy < cons
+    plan = analytical.PagedCachePlan(page_size=16, num_pages=33,
+                                     page_bytes=1.0, bytes_per_token=1.0)
+    el = analytical.effective_slots(plan, 16, 64, 64, "lazy")
+    ec = analytical.effective_slots(plan, 16, 64, 64, "conservative")
+    assert el > ec                          # 32 usable pages, 8 vs 6 held
+    assert el <= 16
+    with pytest.raises(ValueError):
+        analytical.mean_pages_held(64, 64, 16, "eager")
+
+
+def test_predict_serve_throughput_prefix_and_admission():
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import predict_serve_throughput
+    spec = ASSIGNED["granite-3-8b"].scaled_down()
+    plan = analytical.PagedCachePlan(page_size=16, num_pages=129,
+                                     page_bytes=4096.0,
+                                     bytes_per_token=256.0)
+    hw, prec = hardware.get("rpi5"), prec_mod.get("fp32")
+    kw = dict(slots=8, avg_prompt=128.0, avg_new=32.0)
+    base = predict_serve_throughput(spec, hw, prec, plan, **kw)
+    warm = predict_serve_throughput(spec, hw, prec, plan,
+                                    prefix_hit_rate=0.75, **kw)
+    cons = predict_serve_throughput(spec, hw, prec, plan,
+                                    admission="conservative", **kw)
+    assert warm["continuous_tokens_per_s"] >= base["continuous_tokens_per_s"]
+    assert warm["prefix_hit_rate"] == 0.75
+    # conservative admission sustains fewer live slots on a tight pool
+    assert cons["effective_slots"] <= base["effective_slots"]

@@ -34,8 +34,9 @@ def _setup(layers=2, width=64, vocab=128):
 # ---------------------------------------------------------------------------
 
 def test_page_allocator_random_admit_evict():
-    """Fuzz alloc/free: after every operation no page is leaked,
-    double-owned, or both free and owned."""
+    """Fuzz alloc/free (single-reference traffic): after every operation
+    no page is leaked, double-owned, or both free and live.  Refcounted
+    share/evict interleavings are fuzzed in tests/test_prefix_cache.py."""
     rng = np.random.default_rng(0)
     alloc = pc.PageAllocator(64)
     live = {}                       # uid -> pages
@@ -47,7 +48,7 @@ def test_page_allocator_random_admit_evict():
         else:
             n = int(rng.integers(1, 5))
             if alloc.can_alloc(n):
-                live[uid] = alloc.alloc(n, uid)
+                live[uid] = alloc.alloc(n)
                 uid += 1
         alloc.check()
     for pages in live.values():
@@ -58,12 +59,12 @@ def test_page_allocator_random_admit_evict():
 
 def test_page_allocator_rejects_double_free():
     alloc = pc.PageAllocator(8)
-    pages = alloc.alloc(2, uid=1)
+    pages = alloc.alloc(2)
     alloc.free(pages)
     with pytest.raises(ValueError):
         alloc.free(pages)
     with pytest.raises(MemoryError):
-        alloc.alloc(99, uid=2)
+        alloc.alloc(99)
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +180,9 @@ def test_scheduler_matches_static_generate_mixed_lengths():
     eng.alloc.check()
     # pool capped at the addressable max (slots * pages_per_slot + null)
     assert eng.layout.num_pages == min(cfg.num_pages, 3 * 8 + 1)
+    # the prefix store retains pages by refcount; flushing returns all
+    eng.prefix_cache.flush()
+    eng.alloc.check()
     assert eng.alloc.free_pages == eng.layout.num_pages - 1
     assert eng.stats["finished"] == len(reqs)
     # 3 slots for 7 requests forces slot reuse across admissions
@@ -223,6 +227,38 @@ def test_prompt_bucketing():
     assert _bucket(17, 16, 512) == 32
     assert _bucket(33, 16, 512) == 64
     assert _bucket(500, 16, 512) == 512
+
+
+def test_prompt_bucketing_unaligned_max_seq():
+    """The bucket cap is max_seq rounded UP to a page multiple: it is a
+    page-granular compute width (the scatter works whole pages), so a
+    raw cap would truncate the page count and drop the prompt tail."""
+    assert _bucket(39, 16, 40) == 48       # 3 true pages must survive
+    assert _bucket(40, 16, 40) == 48
+    assert _bucket(1, 16, 40) == 16        # 1-token prompt: one page
+    assert _bucket(16, 16, 40) == 16       # exact page fill
+    assert _bucket(512, 16, 512) == 512    # aligned cap unchanged
+
+
+def test_scheduler_unaligned_max_seq_boundary():
+    """Prompts whose bucket rounds past an unaligned max_seq but whose
+    true pages fit: the full prompt KV must land in the pages (the seed
+    capped the padded width at raw max_seq, truncating the scatter page
+    count and silently dropping the last partial page's rows)."""
+    spec, params = _setup()
+    rng = np.random.default_rng(7)
+    shapes = [(38, 2), (32, 8), (1, 4)]    # tail page, exact pages, 1 token
+    reqs = [Request(i, rng.integers(0, 128, size=l).astype(np.int32), n)
+            for i, (l, n) in enumerate(shapes)]
+    cfg = SchedulerConfig(max_slots=1, page_size=16, max_seq=40, num_pages=8)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    done = eng.run(list(reqs))
+    scfg = ServeConfig(max_seq=48, attention_impl="naive")
+    for r, c in zip(reqs, done):
+        out = generate(params, spec, {"tokens": jnp.asarray(r.prompt[None])},
+                       r.max_new_tokens - 1, scfg)
+        np.testing.assert_array_equal(np.asarray(out["tokens"][0]), c.tokens)
+    eng.alloc.check()
 
 
 def test_paged_cache_plan_budget():
