@@ -1,5 +1,6 @@
-"""Kernel micro-benchmarks: quant_matmul / flash_attention ref-path
-wall-times on CPU (the TPU-kernel correctness path) + dequant fidelity.
+"""Kernel micro-benchmarks: quant_matmul / flash_attention / paged
+decode attention ref-path wall-times on CPU (the TPU-kernel correctness
+path) + dequant fidelity + paged-page HBM byte accounting.
 On-hardware timings belong to the roofline report; these give the
 us_per_call column for the CSV harness."""
 import time
@@ -22,6 +23,72 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _paged_rows(rng, rows):
+    """Paged decode attention, fp32 vs int8 vs nibble-packed int4 pages
+    across context lengths: ref-path wall time (the CPU lowering), HBM
+    bytes the kernel's page operands move per decode step, the ratio vs
+    fp32 pages (the quantized fast path's whole value proposition on a
+    memory-bound decode roofline), and the TPU-v5e memory-bound time
+    from ``core/roofline.py`` those bytes imply."""
+    from repro.core import roofline
+    from repro.quant.quantize import (pack_int4, quantize_kv_int4,
+                                      quantize_kv_int8)
+
+    B, H, KV, D, page = 4, 8, 2, 64, 16
+    for ctx in (128, 512):
+        pps = ctx // page
+        P = B * pps + 1
+        q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+        kf = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+        vf = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+        bt = jnp.asarray(np.arange(1, P).reshape(B, pps), jnp.int32)
+        lengths = jnp.full((B,), ctx, jnp.int32)
+        k8, ks = quantize_kv_int8(kf)
+        v8, vs = quantize_kv_int8(vf)
+        q4k, ks4 = quantize_kv_int4(kf)
+        q4v, vs4 = quantize_kv_int4(vf)
+        k4, v4 = pack_int4(q4k, axis=1), pack_int4(q4v, axis=1)
+        cases = {
+            "fp32": ((kf, vf), None),
+            "int8": ((k8, v8), (ks, vs)),
+            "int4": ((k4, v4), (ks4, vs4)),
+        }
+        base_bytes = None
+        on_tpu = jax.default_backend() == "tpu"
+        for name, ((kp, vp), sc) in cases.items():
+            kw = {} if sc is None else {"k_scale": sc[0], "v_scale": sc[1]}
+            f = jax.jit(lambda a, k=kp, v=vp, kw=kw: ref.paged_attention_ref(
+                a, k, v, bt, lengths, **kw))
+            us = _time(f, q)
+            # bytes the kernel streams per decode step: every live page
+            # of k and v (+ scale pages when quantized), once.  Logical
+            # bytes — on real TPU the small f32 scale blocks tile-pad
+            # (see KV_CACHE_DTYPES note in core/analytical.py).
+            pages_bytes = B * pps * page * KV * D * 2 * kp.dtype.itemsize
+            if name == "int4":
+                pages_bytes //= 2           # two tokens per byte
+            if sc is not None:
+                pages_bytes += B * pps * page * KV * 2 * 4
+            if base_bytes is None:
+                base_bytes = pages_bytes
+            bound_us = roofline.roofline_terms(
+                0.0, float(pages_bytes), 0.0, roofline.hw_mod.TPU_V5E).memory_s * 1e6
+            row = {
+                "kernel": f"paged_attention_{name}_ref", "M": ctx, "K": KV,
+                "N": D, "us": round(us, 1),
+                "page_bytes_moved": pages_bytes,
+                "bytes_vs_fp32": round(pages_bytes / base_bytes, 3),
+                "tpu_mem_bound_us": round(bound_us, 3),
+                "weight_max_err": 0.0,
+            }
+            if on_tpu:
+                # achieved fraction of the memory-bound roofline — only
+                # meaningful when the measured time is on the same
+                # hardware the bound describes
+                row["bound_fraction"] = round(bound_us / us, 4)
+            rows.append(row)
+
+
 def run():
     rng = np.random.default_rng(0)
     rows = []
@@ -41,6 +108,7 @@ def run():
     f = jax.jit(lambda a, b: ref.flash_attention_ref(a, b, b))
     rows.append({"kernel": "flash_attention_ref", "M": 512, "K": 8, "N": 64,
                  "us": round(_time(f, q, k), 1), "weight_max_err": 0.0})
+    _paged_rows(rng, rows)
     us = (time.perf_counter() - t_total) * 1e6 / max(1, len(rows))
     return "kernel_bench", us, rows
 

@@ -26,6 +26,12 @@ def tier1() -> None:
         [sys.executable, os.path.join(root, "benchmarks",
                                       "serve_throughput.py"), "--prefix",
          "--smoke"],
+        # quantized-page gate: the prefix-cache invariants (identical
+        # outputs ON vs OFF, >=30% prefill-token reduction) must hold
+        # with nibble-packed int4 pages too
+        [sys.executable, os.path.join(root, "benchmarks",
+                                      "serve_throughput.py"), "--prefix",
+         "--smoke", "--cache-dtype", "int4"],
     ]
     for cmd in steps:
         print("+", " ".join(cmd), flush=True)

@@ -19,7 +19,12 @@ Two experiments:
   (``analytical.prefix_hit_rate`` -> ``predict_serve_throughput``).
 
 Both engines run the workload twice; the second (compile-warm) pass is
-timed.  ``--smoke`` shrinks the workload for CI.
+timed.  ``--smoke`` shrinks the workload for CI.  ``--cache-dtype
+{fp32,int8,int4}`` runs the paged cache quantized (int4 =
+nibble-packed pages + per-token-per-head scales); the ``--prefix``
+gate's outputs-identical assertion holds per dtype, so
+``--cache-dtype int4 --prefix`` is the CI smoke that pins the
+quantized prefix/CoW path.
 """
 from __future__ import annotations
 
@@ -75,7 +80,8 @@ def _run_static(params, spec, reqs, batch: int, max_seq: int) -> int:
 
 
 def _run_continuous(params, spec, reqs, slots: int, max_seq: int,
-                    device_bytes: float) -> Tuple[int, Dict[str, int]]:
+                    device_bytes: float,
+                    cache_dtype: str = "fp32") -> Tuple[int, Dict[str, int]]:
     """Continuous batching with the KV budget derived from the analytical
     MemoryBreakdown (what weights + activations leave free)."""
     from repro.core.analytical import MeshShape, analyze
@@ -88,23 +94,27 @@ def _run_continuous(params, spec, reqs, slots: int, max_seq: int,
                                  global_batch=slots, kind="decode"),
                  precision.get("fp32"), MeshShape())
     layout = make_layout(spec, max_seq=max_seq, page_size=16,
-                         device_bytes=device_bytes, mem=an.memory)
+                         device_bytes=device_bytes, mem=an.memory,
+                         cache_dtype=cache_dtype)
     cfg = SchedulerConfig(max_slots=slots, page_size=16, max_seq=max_seq,
-                          num_pages=layout.num_pages)
+                          num_pages=layout.num_pages, cache_dtype=cache_dtype)
     eng = ContinuousBatchingEngine(params, spec, cfg)
     done = eng.run(list(reqs))
     assert len(done) == len(reqs)
     return sum(len(c.tokens) for c in done), eng.stats
 
 
-def _predicted(spec, slots, avg_prompt, avg_new, max_seq) -> Dict[str, float]:
+def _predicted(spec, slots, avg_prompt, avg_new, max_seq,
+               cache_dtype: str = "fp32") -> Dict[str, float]:
     from repro.core import hardware, precision
     from repro.core.latency import predict_serve_throughput
     from repro.serve.paged_cache import make_layout, plan_for_layout
     hw = hardware.get("rpi5")
     layout = make_layout(spec, max_seq=max_seq, page_size=16,
                          num_pages=max(2, slots * max_seq // 16 + 1))
-    plan = plan_for_layout(spec, layout)
+    # plan bytes follow the cache dtype (0.5 B/value + scales for int4),
+    # so the predicted iteration memory term drops with the KV width
+    plan = plan_for_layout(spec, layout, cache_dtype)
     return predict_serve_throughput(spec, hw, precision.get("fp32"), plan,
                                     slots=slots, avg_prompt=avg_prompt,
                                     avg_new=avg_new)
@@ -128,9 +138,12 @@ def _shared_prefix_workload(n: int, n_templates: int, template_len: int,
     return reqs
 
 
-def run_prefix(smoke: bool = False):
+def run_prefix(smoke: bool = False, cache_dtype: str = "fp32"):
     """Shared-prefix workload, prefix store ON vs OFF: identical outputs,
-    prefill-tokens-skipped, admitted occupancy, analytical prediction."""
+    prefill-tokens-skipped, admitted occupancy, analytical prediction.
+    ``cache_dtype`` runs the same gate over quantized pages — int4
+    outputs must still be token-for-token the int4 prefix-off run
+    (both paths read the same quantized pages)."""
     from repro.core import hardware, precision
     from repro.core.analytical import prefix_hit_rate
     from repro.core.latency import predict_serve_throughput
@@ -152,7 +165,8 @@ def run_prefix(smoke: bool = False):
     results = {}
     for on in (False, True):
         cfg = SchedulerConfig(max_slots=slots, page_size=16, max_seq=max_seq,
-                              kv_budget_bytes=64e6, enable_prefix_cache=on)
+                              kv_budget_bytes=64e6, enable_prefix_cache=on,
+                              cache_dtype=cache_dtype)
 
         def pass_once():
             eng = ContinuousBatchingEngine(params, spec, cfg)
@@ -179,7 +193,7 @@ def run_prefix(smoke: bool = False):
            for on in (False, True)}
 
     eng = results[True]["engine"]
-    plan = plan_for_layout(spec, eng.layout)
+    plan = plan_for_layout(spec, eng.layout, cache_dtype)
     avg_prompt = float(np.mean([len(r.prompt) for r in reqs]))
     hr = prefix_hit_rate(n, n_templates, template_len, avg_prompt, 16)
     pred = predict_serve_throughput(
@@ -188,7 +202,8 @@ def run_prefix(smoke: bool = False):
         avg_new=float(np.mean([r.max_new_tokens for r in reqs])),
         prefix_hit_rate=hr)
     rows = [
-        {"engine": "prefix_off", "prefill_tokens": s_off["prefill_tokens"],
+        {"engine": "prefix_off", "cache_dtype": cache_dtype,
+         "prefill_tokens": s_off["prefill_tokens"],
          "seconds": results[False]["seconds"], "occupancy": occ[False]},
         {"engine": "prefix_on", "prefill_tokens": s_on["prefill_tokens"],
          "prefix_hit_tokens": s_on["prefix_hit_tokens"],
@@ -201,7 +216,7 @@ def run_prefix(smoke: bool = False):
     return "serve_prefix_cache", results[True]["seconds"] * 1e6, rows
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, cache_dtype: str = "fp32"):
     if smoke:
         n, slots, buckets, new_lo, new_hi = 6, 4, [32, 64, 128], 8, 24
         max_seq, width, layers = 160, 64, 2
@@ -218,7 +233,8 @@ def run(smoke: bool = False):
     for name, fn in (
             ("static", lambda: _run_static(params, spec, reqs, slots, max_seq)),
             ("continuous", lambda: _run_continuous(
-                params, spec, reqs, slots, max_seq, device_bytes))):
+                params, spec, reqs, slots, max_seq, device_bytes,
+                cache_dtype))):
         fn()                                  # warm pass: compiles
         t0 = time.perf_counter()
         out = fn()
@@ -232,7 +248,7 @@ def run(smoke: bool = False):
     pred = _predicted(spec, slots,
                       float(np.mean([len(r.prompt) for r in reqs])),
                       float(np.mean([r.max_new_tokens for r in reqs])),
-                      max_seq)
+                      max_seq, cache_dtype)
     rows = [
         {"engine": "static", **results["static"]},
         {"engine": "continuous", **results["continuous"]},
@@ -250,9 +266,14 @@ def main():
     ap.add_argument("--prefix", action="store_true",
                     help="shared-prefix (prefix-caching) gate instead of "
                          "the mixed-length throughput comparison")
+    ap.add_argument("--cache-dtype", default="fp32",
+                    choices=["fp32", "int8", "int4"],
+                    help="paged KV page dtype (int4 = nibble-packed pages "
+                         "+ per-token scales)")
     args = ap.parse_args()
     if args.prefix:
-        name, us, rows = run_prefix(smoke=args.smoke)
+        name, us, rows = run_prefix(smoke=args.smoke,
+                                    cache_dtype=args.cache_dtype)
         print(f"## {name}")
         for r in rows:
             print(r)
@@ -265,7 +286,7 @@ def main():
         if red < floor:
             raise SystemExit(1)
         return
-    name, us, rows = run(smoke=args.smoke)
+    name, us, rows = run(smoke=args.smoke, cache_dtype=args.cache_dtype)
     print(f"## {name}")
     for r in rows:
         print(r)

@@ -125,15 +125,40 @@ class PagedCachePlan:
         return self.num_pages * self.page_bytes
 
 
+# Stored bytes per KV value + whether per-token-per-head f32 scales ride
+# along, per paged-cache dtype.  int4 nibble-packs two tokens per byte
+# (0.5 B/value); quantized layouts carry one f32 scale per token per kv
+# head per k/v pool — the overhead that keeps the paper's "4-bit cuts
+# memory 60-70%" claim honest instead of a naive 8x.  These are LOGICAL
+# bytes: on real TPU the (page, KV, 1) f32 scale blocks pad their
+# trailing dims to the (8, 128) tile, so small-KV layouts move more
+# scale traffic than counted here — folding scales into a lane-major
+# layout is flagged future work in the ROADMAP serving section.
+KV_CACHE_DTYPES = {"fp32": (4.0, False), "int8": (1.0, True),
+                   "int4": (0.5, True)}
+
+
+def kv_cache_dtype_bytes(cache_dtype: str):
+    """(bytes per stored KV value, scales present) for a paged-cache
+    dtype name — the one mapping every byte-accounting consumer
+    (layout sizing, iteration model, benchmarks) shares."""
+    try:
+        return KV_CACHE_DTYPES[cache_dtype]
+    except KeyError:
+        raise ValueError(f"cache dtype {cache_dtype!r} "
+                         f"(want {sorted(KV_CACHE_DTYPES)})") from None
+
+
 def page_bytes(spec: ModelSpec, page_size: int, bytes_per: float = 2.0,
                quantized_scales: bool = False) -> float:
     """Bytes of one page across all attention layers (k and v pools).
 
-    ``bytes_per`` is the stored element width (1.0 for int8 pages);
-    ``quantized_scales`` adds the per-token-per-head f32 scale arrays
-    the int8 layout carries.  The single source of truth for the paged
-    layout's footprint — budget fitting and layout-matching plans both
-    derive from it.
+    ``bytes_per`` is the stored element width (1.0 for int8 pages, 0.5
+    for nibble-packed int4); ``quantized_scales`` adds the
+    per-token-per-head f32 scale arrays the quantized layouts carry
+    (see ``KV_CACHE_DTYPES``).  The single source of truth for the
+    paged layout's footprint — budget fitting and layout-matching plans
+    both derive from it.
     """
     row = spec.num_kv_heads * spec.head_dim * bytes_per
     if quantized_scales:

@@ -98,8 +98,13 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
     Memory term: weights stream once per iteration (shared by every slot
     in the batch — the whole point of iteration-level batching) plus the
     paged KV actually touched: ``avg_context`` tokens per live decode
-    slot and the prefill tokens written once.  ``cached_prefix_tokens``
-    are prefix-cache hits: their projections/MLP are skipped entirely
+    slot and the prefill tokens written once.  ``plan.bytes_per_token``
+    carries the cache dtype (``plan_for_layout(..., cache_dtype=)``):
+    int8 pages move ~1/4 and nibble-packed int4 ~1/8 the fp32 bytes
+    (plus per-token-per-head f32 scales — ``analytical.
+    KV_CACHE_DTYPES``), which is exactly the in-kernel-dequant traffic
+    the Pallas paged kernel streams.  ``cached_prefix_tokens`` are
+    prefix-cache hits: their projections/MLP are skipped entirely
     (see ``mixed_iteration_flops``) and their KV is READ from shared
     pages instead of recomputed and written — the per-token page bytes
     move once either way, so only the FLOP term drops.

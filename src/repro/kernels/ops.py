@@ -76,23 +76,40 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                   interpret=_default_interpret())
 
 
+def _resolve_paged_impl(impl: str) -> str:
+    """Dispatch decision for ``paged_attention`` — identical for fp32,
+    int8, and int4 pages: explicit ``impl`` wins; ``auto`` takes the
+    Pallas kernel on TPU and the gather reference elsewhere (interpret-
+    mode grids lower to giant XLA while-loops on CPU)."""
+    if impl in ("ref", "pallas"):
+        return impl
+    if impl != "auto":
+        raise ValueError(f"impl {impl!r} (want auto | pallas | ref)")
+    return "ref" if _default_interpret() else "pallas"
+
+
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     window: int = 0, scale: Optional[float] = None,
                     k_scale=None, v_scale=None, impl: str = "auto"):
     """Paged decode attention: q (B, H, D) against a page pool.
 
-    auto -> Pallas (scalar-prefetch block-table kernel) on TPU, gather
-    reference elsewhere.  int8 pages (k_scale/v_scale given) always run
-    the reference dequant-after-gather path — the float kernel is the
-    TPU hot loop."""
-    if impl == "ref" or k_scale is not None or v_scale is not None or \
-            (impl == "auto" and _default_interpret()):
+    Quantized pages are the FAST path: on TPU ``auto`` dispatches fp32,
+    int8 (``k_scale``/``v_scale`` (P, page, KV, 1) f32), and
+    nibble-packed int4 pages (k/v (P, page//2, KV, D), full-token-dim
+    scales) to the same scalar-prefetch Pallas kernel, which dequantizes
+    int8 and unpacks int4 in VMEM inside the online-softmax loop —
+    ~4x/~8x fewer HBM bytes per page and no fp32 gather
+    materialization.  The reference dequant-after-gather path is the
+    oracle (and the CPU lowering); ``impl="pallas"`` forces the kernel
+    body (interpret-mode off-TPU) for any cache dtype."""
+    if _resolve_paged_impl(impl) == "ref":
         return ref.paged_attention_ref(
             q, k_pages, v_pages, block_tables, lengths, window=window,
             scale=scale, k_scale=k_scale, v_scale=v_scale)
     return paged_attention_pallas(
         q, k_pages, v_pages, block_tables, lengths, window=window,
-        scale=scale, interpret=_default_interpret())
+        scale=scale, k_scale=k_scale, v_scale=v_scale,
+        interpret=_default_interpret())
 
 
 def quantize_rowwise(x, *, bits: int = 8, impl: str = "auto", bm: int = 128):

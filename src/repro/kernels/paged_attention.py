@@ -12,8 +12,23 @@ Online softmax carries (m, l, acc) scratch across pages, exactly like
 GQA folds query heads onto kv heads inside the kernel ((KV, G, D)
 layout), so K/V pages are fetched once per kv head group.
 
-int8 pages take the pure-jnp reference path in ``ops.paged_attention``
-(dequant-after-gather); this kernel is the float hot path.
+Quantized pages are the FAST path, not a fallback: int8 pages stream
+in as int8 plus per-token-per-head f32 scale pages (extra block-table-
+indexed operands) and are dequantized in VMEM inside the online-softmax
+loop; packed-int4 pages (two nibbles per byte along the token dim,
+``quant.quantize.pack_int4(axis=1)`` layout) are unpacked in-kernel.
+Decode is memory-bound on every edge roofline the paper profiles, so
+moving ~4x (int8) / ~8x (int4) fewer HBM bytes per page — with no fp32
+gather materialization — is where the paper's 2-3x quantized speedup
+lives.  ``ops.paged_attention`` dispatches all three cache dtypes here
+on TPU; ``kernels/ref.py`` holds the gather oracle.
+
+Known on-hardware caveat: the (1, page, KV, 1) f32 scale blocks have
+tiny trailing dims that Mosaic pads to the (8, 128) f32 tile, so for
+small-KV models the scale operands can stream more physical bytes than
+the logical KV*4 B/token accounting (``analytical.KV_CACHE_DTYPES``)
+counts.  A lane-major scale layout (scales for many tokens packed into
+one tile) would close that gap and is flagged in the ROADMAP.
 """
 from __future__ import annotations
 
@@ -27,9 +42,31 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *, scale: float, page: int,
-                  n_pages: int, window: int, kv_heads: int, grp: int):
+def _unpack_nibbles(packed: jnp.ndarray, page: int) -> jnp.ndarray:
+    """(page//2, KV, D) packed int8 -> (page, KV, D) f32 in [-8, 7].
+
+    Low nibble = even token, high nibble = odd token (the
+    ``pack_int4(axis=token)`` pool layout).  Sign-extension runs in
+    int32 on the VPU; the stack/reshape interleave only touches the
+    leading (non-tiled) dim, so it lowers on TPU and in interpret mode.
+    """
+    p32 = packed.astype(jnp.int32)
+    lo = p32 & 0x0F
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = (p32 >> 4) & 0x0F
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    inter = jnp.stack([lo, hi], axis=1)            # (page//2, 2, KV, D)
+    return inter.reshape(page, *packed.shape[1:]).astype(jnp.float32)
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, *rest, scale: float, page: int,
+                  n_pages: int, window: int, kv_heads: int, grp: int,
+                  quant: str):
+    if quant == "none":
+        k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        ks_ref = vs_ref = None
+    else:
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
     b = pl.program_id(0)
     p = pl.program_id(1)
 
@@ -41,7 +78,16 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
     length = len_ref[b]
     q = q_ref[0].astype(jnp.float32) * scale              # (H, D)
-    k = k_ref[0].astype(jnp.float32)                      # (page, KV, D)
+    if quant == "none":
+        k = k_ref[0].astype(jnp.float32)                  # (page, KV, D)
+        v = v_ref[0].astype(jnp.float32)
+    elif quant == "int8":
+        # dequant in VMEM: the page crossed HBM as 1 byte/value
+        k = k_ref[0].astype(jnp.float32) * ks_ref[0]
+        v = v_ref[0].astype(jnp.float32) * vs_ref[0]
+    else:                                                 # int4
+        k = _unpack_nibbles(k_ref[0], page) * ks_ref[0]
+        v = _unpack_nibbles(v_ref[0], page) * vs_ref[0]
     D = q.shape[-1]
     qg = q.reshape(kv_heads, grp, D)
     s = jnp.einsum("kgd,tkd->kgt", qg, k,
@@ -59,8 +105,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = alpha * l_ref[...] + jnp.sum(e, axis=-1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jnp.einsum(
-        "kgt,tkd->kgd", e, v_ref[0].astype(jnp.float32),
-        preferred_element_type=jnp.float32)
+        "kgt,tkd->kgd", e, v, preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
     @pl.when(p == n_pages - 1)
@@ -75,25 +120,47 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                            lengths: jnp.ndarray, *, window: int = 0,
                            scale: float | None = None,
+                           k_scale: jnp.ndarray | None = None,
+                           v_scale: jnp.ndarray | None = None,
                            interpret: bool = False) -> jnp.ndarray:
-    """q: (B, H, D); k_pages/v_pages: (P, page, KV, D);
-    block_tables: (B, pages_per_slot) int32; lengths: (B,) int32."""
+    """q: (B, H, D); k_pages/v_pages: (P, page, KV, D) float — or int8
+    with ``k_scale``/``v_scale`` (P, page, KV, 1) f32, or nibble-packed
+    int4 (P, page//2, KV, D) (packing inferred from the scale's token
+    dim); block_tables: (B, pages_per_slot) int32; lengths: (B,) int32."""
     B, H, D = q.shape
-    page, KV = k_pages.shape[1], k_pages.shape[2]
+    KV = k_pages.shape[2]
+    if k_scale is not None:
+        page = k_scale.shape[1]
+        quant = "int8" if k_pages.shape[1] == page else "int4"
+        if quant == "int4" and k_pages.shape[1] * 2 != page:
+            raise ValueError(
+                f"int4 pages {k_pages.shape} do not pack scale token dim "
+                f"{page}")
+    else:
+        page = k_pages.shape[1]
+        quant = "none"
     n_pages = block_tables.shape[1]
     grp = H // KV
     sc = scale if scale is not None else 1.0 / (D ** 0.5)
 
+    q_spec = pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0))
+    kv_spec = pl.BlockSpec((1, k_pages.shape[1], KV, D),
+                           lambda b, p, bt, ln: (bt[b, p], 0, 0, 0))
+    in_specs = [q_spec, kv_spec]
+    operands = [q, k_pages]
+    if quant != "none":
+        s_spec = pl.BlockSpec((1, page, KV, 1),
+                              lambda b, p, bt, ln: (bt[b, p], 0, 0, 0))
+        in_specs += [s_spec, kv_spec, s_spec]
+        operands += [k_scale, v_pages, v_scale]
+    else:
+        in_specs += [kv_spec]
+        operands += [v_pages]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,            # block_tables, lengths
         grid=(B, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0)),
-            pl.BlockSpec((1, page, KV, D),
-                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
-            pl.BlockSpec((1, page, KV, D),
-                         lambda b, p, bt, ln: (bt[b, p], 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((KV, grp, 1), jnp.float32),        # running max
@@ -103,7 +170,7 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     )
     kernel = functools.partial(
         _paged_kernel, scale=sc, page=page, n_pages=n_pages,
-        window=window, kv_heads=KV, grp=grp)
+        window=window, kv_heads=KV, grp=grp, quant=quant)
     from repro.kernels.ops import _compiler_params  # lazy: avoid import cycle
     return pl.pallas_call(
         kernel,
@@ -112,6 +179,6 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-        name="paged_attention_decode",
+        name=f"paged_attention_decode_{quant}",
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pages, v_pages)
+      *operands)

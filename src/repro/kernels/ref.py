@@ -56,11 +56,19 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     (B, pages_per_slot) page ids into the pool; lengths: (B,) number of
     valid context tokens per slot (the current token's k/v already
     written).  Fully-masked slots (length 0) return zeros.  For int8
-    pages pass k_scale/v_scale (P, page, KV, 1) f32; pages are
-    dequantized after the gather.
+    pages pass k_scale/v_scale (P, page, KV, 1) f32; for nibble-packed
+    int4 pages (P, page//2, KV, D) pass the same full-token-dim scales
+    (packing is inferred from the shape mismatch).  Pages are
+    dequantized after the gather — the fp32 materialization the Pallas
+    kernel exists to avoid.
     """
+    from repro.quant.quantize import unpack_int4
     B, H, D = q.shape
-    page, KV = k_pages.shape[1], k_pages.shape[2]
+    KV = k_pages.shape[2]
+    page = k_scale.shape[1] if k_scale is not None else k_pages.shape[1]
+    if k_scale is not None and k_pages.shape[1] != page:     # packed int4
+        k_pages = unpack_int4(k_pages, axis=1)
+        v_pages = unpack_int4(v_pages, axis=1)
     G = H // KV
     sc = scale if scale is not None else 1.0 / (D ** 0.5)
     k = k_pages[block_tables].astype(jnp.float32)      # (B, n, page, KV, D)

@@ -273,15 +273,46 @@ class PagedLayout:
         return self.pages_per_slot or -(-max_seq // self.page_size)
 
 
+def _norm_cache_dtype(dtype) -> str:
+    """Canonical paged-cache dtype name for a string or jnp dtype."""
+    if isinstance(dtype, str):
+        if dtype not in ("fp32", "int8", "int4"):
+            raise ValueError(f"cache dtype {dtype!r} (want fp32|int8|int4)")
+        return dtype
+    return "int8" if dtype == jnp.int8 else "fp32"
+
+
+def paged_page_size(cache) -> int:
+    """Token capacity of one page — from the scale pool for quantized
+    caches (the int4 value pool's token dim is nibble-packed to half)."""
+    entry = cache["groups"][0][0]
+    if "k_scale" in entry:
+        return entry["k_scale"].shape[1]
+    return entry["k_pages"].shape[1]
+
+
+def _paged_quant(entry) -> str:
+    """Quantization of one layer's page pools: none | int8 | int4 —
+    int4 iff the value pool's token dim is half the scale pool's."""
+    if "k_scale" not in entry:
+        return "none"
+    return ("int4" if entry["k_pages"].shape[1] != entry["k_scale"].shape[1]
+            else "int8")
+
+
 def init_paged_cache(spec: ModelSpec, batch: int, max_seq: int,
                      layout: PagedLayout, dtype=jnp.float32) -> Params:
     """Paged serve cache: per-layer page pools + per-slot block tables.
 
     Supported for attention-only stacks (attn / attn_local /
     attn_global); recurrent state (ssm/xlstm) and cross-attention have
-    no paged representation yet.  ``dtype=jnp.int8`` stores quantized
-    pages with per-token-per-head f32 scales (``k_scale``/``v_scale``).
-    ``pos`` is a PER-SLOT length vector, not a scalar.
+    no paged representation yet.  ``dtype`` is a jnp dtype or one of
+    "fp32" | "int8" | "int4": quantized caches store int8 pools with
+    per-token-per-head f32 scales (``k_scale``/``v_scale``); "int4"
+    nibble-packs two adjacent tokens per byte along the pool's token
+    dim ((P, page//2, KV, D), ``quant.quantize.pack_int4(axis=1)``
+    layout) so a page moves ~8x fewer bytes than fp32.  ``pos`` is a
+    PER-SLOT length vector, not a scalar.
     """
     for kind in spec.layer_kinds():
         if _base_kind(kind) not in ("attn", "attn_local", "attn_global"):
@@ -289,6 +320,10 @@ def init_paged_cache(spec: ModelSpec, batch: int, max_seq: int,
                 f"paged cache: unsupported layer kind {kind!r}")
     if spec.cross_attention or spec.encoder_layers:
         raise NotImplementedError("paged cache: cross-attention/encoder")
+    cdt = _norm_cache_dtype(dtype)
+    if cdt == "int4" and layout.page_size % 2:
+        raise ValueError(f"int4 pages need an even page_size, "
+                         f"got {layout.page_size}")
     pps = layout.slots_pages(max_seq)
     cache: Params = {
         "pos": jnp.zeros((batch,), jnp.int32),
@@ -296,15 +331,20 @@ def init_paged_cache(spec: ModelSpec, batch: int, max_seq: int,
         "groups": [],
     }
     KV, D = spec.num_kv_heads, spec.head_dim
-    pool = (layout.num_pages, layout.page_size, KV, D)
+    tok = layout.page_size // 2 if cdt == "int4" else layout.page_size
+    if cdt == "fp32":       # any float dtype passes through (bf16 pools ok)
+        pool_dtype = jnp.float32 if isinstance(dtype, str) else dtype
+    else:
+        pool_dtype = jnp.int8
+    pool = (layout.num_pages, tok, KV, D)
     for g in group_plan(spec):
         layers = []
         for _ in range(g.n):
             entry: Dict[str, jnp.ndarray] = {
-                "k_pages": jnp.zeros(pool, dtype),
-                "v_pages": jnp.zeros(pool, dtype),
+                "k_pages": jnp.zeros(pool, pool_dtype),
+                "v_pages": jnp.zeros(pool, pool_dtype),
             }
-            if dtype == jnp.int8:
+            if cdt != "fp32":
                 sshape = (layout.num_pages, layout.page_size, KV, 1)
                 entry["k_scale"] = jnp.zeros(sshape, jnp.float32)
                 entry["v_scale"] = jnp.zeros(sshape, jnp.float32)
@@ -506,6 +546,47 @@ def _attn_decode(spec, p, x, pos, kv, *, kind, prefix="") -> Tuple[jnp.ndarray, 
     return out, {"k": k_cache, "v": v_cache}
 
 
+def _scatter_kv_rows(kv: Dict, name: str, rows: jnp.ndarray,
+                     tgt_page: jnp.ndarray, tgt_off: jnp.ndarray) -> Dict:
+    """Scatter float KV ``rows`` (N, KV, D) into one pool at token
+    positions (``tgt_page``, ``tgt_off``) (N,), quantizing per the
+    pool's layout.  Returns the updated pool entries ({name}_pages and,
+    when quantized, {name}_scale).
+
+    int4 pools nibble-pack two adjacent tokens per byte, so a token
+    write is a read-modify-write of its byte that must preserve the
+    neighbour's nibble.  Writes run in two parity passes (even offsets,
+    then odd) so the bytes touched within a pass are distinct — the
+    only duplicate targets are rows routed to the null page (padding /
+    inactive slots), whose content is never read.
+    """
+    from repro.quant.quantize import quantize_kv_int4, quantize_kv_int8
+    pool = kv[name + "_pages"]
+    quant = _paged_quant(kv)
+    if quant == "none":
+        return {name + "_pages": pool.at[tgt_page, tgt_off].set(
+            rows.astype(pool.dtype))}
+    if quant == "int8":
+        qrow, srow = quantize_kv_int8(rows)
+        return {name + "_pages": pool.at[tgt_page, tgt_off].set(qrow),
+                name + "_scale": kv[name + "_scale"].at[
+                    tgt_page, tgt_off].set(srow)}
+    qrow, srow = quantize_kv_int4(rows)
+    nib = qrow & jnp.int8(0x0F)
+    byte = tgt_off // 2
+    expand = (slice(None),) + (None,) * (rows.ndim - 1)
+    for parity in (0, 1):
+        m = (tgt_off % 2) == parity
+        tp = jnp.where(m, tgt_page, 0)          # park non-parity rows on null
+        cur = pool[tp, byte]
+        upd = ((cur & jnp.int8(-16)) | nib if parity == 0
+               else (cur & jnp.int8(0x0F)) | (nib << 4))
+        pool = pool.at[tp, byte].set(jnp.where(m[expand], upd, cur))
+    return {name + "_pages": pool,
+            name + "_scale": kv[name + "_scale"].at[
+                tgt_page, tgt_off].set(srow)}
+
+
 def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
                        kind) -> Tuple[jnp.ndarray, Dict]:
     """Paged-cache decode attention for one layer.
@@ -513,14 +594,15 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
     ``pos`` is the per-slot context length vector (B,) — the new token's
     absolute position.  Writes the new k/v row into each slot's current
     page (pages are uniquely owned, so the batched scatter never
-    collides), then attends over the slot's block table via the
-    gather-based paged attention op.
+    collides; int4 pools read-modify-write the shared byte), then
+    attends over the slot's block table via the paged attention op —
+    quantized pools hand the kernel int8/packed-int4 pages plus scale
+    pages, dequantized in-kernel.
     """
     from repro.kernels import ops as kops
-    from repro.quant.quantize import quantize_kv_int8
     B = x.shape[0]
     H, KV, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
-    page = kv["k_pages"].shape[1]
+    page = kv["k_scale"].shape[1] if "k_scale" in kv else kv["k_pages"].shape[1]
     q = qdot(x, p["wq"]).reshape(B, 1, H, D)
     k = qdot(x, p["wk"]).reshape(B, 1, KV, D)
     v = qdot(x, p["wv"]).reshape(B, 1, KV, D)
@@ -531,17 +613,8 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
     slot_page = block_tables[jnp.arange(B), pos // page]
     off = pos % page
     new_kv = dict(kv)
-    quantized = "k_scale" in kv
     for name, row in (("k", k[:, 0]), ("v", v[:, 0])):
-        pages = kv[name + "_pages"]
-        if quantized:
-            qrow, srow = quantize_kv_int8(row)
-            new_kv[name + "_pages"] = pages.at[slot_page, off].set(qrow)
-            new_kv[name + "_scale"] = kv[name + "_scale"].at[
-                slot_page, off].set(srow)
-        else:
-            new_kv[name + "_pages"] = pages.at[slot_page, off].set(
-                row.astype(pages.dtype))
+        new_kv.update(_scatter_kv_rows(kv, name, row, slot_page, off))
 
     window = spec.sliding_window if kind == "attn_local" else 0
     o = kops.paged_attention(
@@ -559,17 +632,18 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
     The prefix-cache admission path: the first ``prefix_len`` context
     tokens already live in the page pool (shared read-only from the
     prefix store), so only the suffix runs projections.  Gathers the
-    prefix K/V rows (dequantizing int8 pages), attends causally over
-    [prefix ; suffix], and scatters the suffix K/V into the slot's own
-    pages.  Padding needs no mask here: padded KEYS sit causally after
-    every true query, and padded rows are routed to the null page by
-    ``tgt_page`` (computed from ``true_len`` in ``prefill_paged``),
-    whose content is never read.
+    prefix K/V rows (dequantizing int8 pages, unpacking int4 nibbles),
+    attends causally over [prefix ; suffix], and scatters the suffix
+    K/V into the slot's own pages.  Padding needs no mask here: padded
+    KEYS sit causally after every true query, and padded rows are
+    routed to the null page by ``tgt_page`` (computed from ``true_len``
+    in ``prefill_paged``), whose content is never read.
     """
-    from repro.quant.quantize import quantize_kv_int8
+    from repro.quant.quantize import unpack_int4
     B, S = xn.shape[:2]
     H, KV, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
-    page = kv["k_pages"].shape[1]
+    quant = _paged_quant(kv)
+    page = kv["k_scale"].shape[1] if quant != "none" else kv["k_pages"].shape[1]
     npr = pref_pages.shape[0] * page
     q = qdot(xn, p["wq"]).reshape(B, S, H, D)
     k = qdot(xn, p["wk"]).reshape(B, S, KV, D)
@@ -577,10 +651,14 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
     q = L.rope(q, positions, spec.rope_theta)
     k = L.rope(k, positions, spec.rope_theta)
 
-    quantized = "k_scale" in kv
-    kp = kv["k_pages"][pref_pages].astype(jnp.float32)   # (n, page, KV, D)
-    vp = kv["v_pages"][pref_pages].astype(jnp.float32)
-    if quantized:
+    kp = kv["k_pages"][pref_pages]                       # (n, page, KV, D)
+    vp = kv["v_pages"][pref_pages]
+    if quant == "int4":
+        kp = unpack_int4(kp, axis=1)
+        vp = unpack_int4(vp, axis=1)
+    kp = kp.astype(jnp.float32)
+    vp = vp.astype(jnp.float32)
+    if quant != "none":
         kp = kp * kv["k_scale"][pref_pages]
         vp = vp * kv["v_scale"][pref_pages]
     kp = kp.reshape(1, npr, KV, D)
@@ -607,15 +685,7 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
 
     new_kv = dict(kv)
     for name, rows in (("k", k[0]), ("v", v[0])):        # rows: (S, KV, D)
-        pool = kv[name + "_pages"]
-        if quantized:
-            qrow, srow = quantize_kv_int8(rows)
-            new_kv[name + "_pages"] = pool.at[tgt_page, tgt_off].set(qrow)
-            new_kv[name + "_scale"] = kv[name + "_scale"].at[
-                tgt_page, tgt_off].set(srow)
-        else:
-            new_kv[name + "_pages"] = pool.at[tgt_page, tgt_off].set(
-                rows.astype(pool.dtype))
+        new_kv.update(_scatter_kv_rows(kv, name, rows, tgt_page, tgt_off))
     return out, new_kv
 
 
@@ -636,7 +706,7 @@ def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
     what ``core.analytical.mixed_iteration_flops(cached_prefix_tokens=)``
     accounts for.
     """
-    page = cache["groups"][0][0]["k_pages"].shape[1]
+    page = paged_page_size(cache)
     S = tokens.shape[1]
     positions = prefix_len + jnp.arange(S)[None]         # (1, S) absolute
     pref_pages = bt_row[:n_prefix_pages]

@@ -3,7 +3,8 @@ INT8/INT4, nibble packing, QAT fake-quant, weight-only serving."""
 from repro.quant.qtypes import (A8_ASYM_TENSOR, A8_SYM_TENSOR, QuantConfig,
                                 QuantizedTensor, W4_SYM_GROUP, W8_SYM_CHANNEL)
 from repro.quant.quantize import (dequantize, fake_quant, pack_int4,
-                                  quantization_mse, quantize, quantize_values,
+                                  quantization_mse, quantize, quantize_kv_int4,
+                                  quantize_kv_int8, quantize_values,
                                   unpack_int4)
 from repro.quant.qlinear import (dequant_param, maybe_fake_quant, qdot,
                                  quantize_params, weight_cfg)
@@ -11,7 +12,8 @@ from repro.quant.qlinear import (dequant_param, maybe_fake_quant, qdot,
 __all__ = [
     "QuantConfig", "QuantizedTensor", "W8_SYM_CHANNEL", "W4_SYM_GROUP",
     "A8_ASYM_TENSOR", "A8_SYM_TENSOR", "dequantize", "fake_quant",
-    "pack_int4", "quantization_mse", "quantize", "quantize_values",
+    "pack_int4", "quantization_mse", "quantize", "quantize_kv_int4",
+    "quantize_kv_int8", "quantize_values",
     "unpack_int4", "dequant_param", "maybe_fake_quant", "qdot",
     "quantize_params", "weight_cfg",
 ]

@@ -95,26 +95,42 @@ def quantize_kv_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return q.astype(jnp.int8), scale
 
 
+def quantize_kv_int4(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int4 KV-cache rows: x (..., D) -> (q int8 in [-7, 7],
+    scale f32 (..., 1)); dequant is ``q * scale``.  Values are UNPACKED
+    (one nibble per int8) — page pools nibble-pack pairs of adjacent
+    tokens with ``pack_int4(..., axis=token_axis)``."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 7.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -7, 7)
+    return q.astype(jnp.int8), scale
+
+
 # ---------------------------------------------------------------------------
-# int4 nibble packing: two int4 values per int8 byte along the leading dim
+# int4 nibble packing: two int4 values per int8 byte along ``axis``
+# (weights pack the contraction dim; KV page pools pack the token dim)
 # ---------------------------------------------------------------------------
 
-def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
-    """(2n, ...) int8 in [-8, 7] -> (n, ...) int8, low nibble = even rows."""
-    assert q.shape[0] % 2 == 0
-    lo = q[0::2] & 0x0F
-    hi = (q[1::2] & 0x0F) << 4
-    return (lo | hi).astype(jnp.int8)
+def pack_int4(q: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Size-2n ``axis`` of int8 in [-8, 7] -> size-n int8, low nibble =
+    even positions."""
+    assert q.shape[axis] % 2 == 0
+    qm = jnp.moveaxis(q, axis, 0)
+    lo = qm[0::2] & 0x0F
+    hi = (qm[1::2] & 0x0F) << 4
+    return jnp.moveaxis((lo | hi).astype(jnp.int8), 0, axis)
 
 
-def unpack_int4(p: jnp.ndarray) -> jnp.ndarray:
+def unpack_int4(p: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
     """inverse of pack_int4 (sign-extends nibbles)."""
-    lo = (p & 0x0F).astype(jnp.int8)
+    pm = jnp.moveaxis(p, axis, 0)
+    lo = (pm & 0x0F).astype(jnp.int8)
     lo = jnp.where(lo >= 8, lo - 16, lo)
-    hi = ((p >> 4) & 0x0F).astype(jnp.int8)
+    hi = ((pm >> 4) & 0x0F).astype(jnp.int8)
     hi = jnp.where(hi >= 8, hi - 16, hi)
     out = jnp.stack([lo, hi], axis=1)
-    return out.reshape(p.shape[0] * 2, *p.shape[1:]).astype(jnp.int8)
+    out = out.reshape(pm.shape[0] * 2, *pm.shape[1:]).astype(jnp.int8)
+    return jnp.moveaxis(out, 0, axis)
 
 
 def quantize(x: jnp.ndarray, cfg: QuantConfig, pack: bool = True) -> QuantizedTensor:

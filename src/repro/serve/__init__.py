@@ -1,3 +1,30 @@
+"""Serving package: static ``engine.generate`` + the continuous-batching
+``ContinuousBatchingEngine`` over a refcounted paged KV cache.
+
+Paged KV precision support matrix (``SchedulerConfig.cache_dtype``) —
+every cell is exercised by tier-1 tests / the CI serve smokes:
+
+=========  =======  ======  ============  ====
+dtype      prefill  decode  prefix-cache  CoW
+=========  =======  ======  ============  ====
+``fp32``   yes      yes     yes           yes
+``int8``   yes      yes     yes           yes
+``int4``   yes      yes     yes           yes (nibble-packed pages;
+                                          mid-byte splits RMW-preserve
+                                          the neighbour token)
+=========  =======  ======  ============  ====
+
+Quantized pages store per-token-per-head f32 scales next to the int8
+pools; int4 packs two adjacent tokens per byte along the pool token dim
+(~8x fewer page bytes than fp32, 62-73% below fp16-equivalent
+accounting depending on head_dim).  On TPU all three dtypes dispatch to
+the same Pallas decode kernel (``kernels/paged_attention.py``), which
+dequantizes int8 / unpacks int4 in VMEM inside the online-softmax loop
+— ``benchmarks/kernel_bench.py`` reports the page-byte ratios (0.27x
+fp32 for int8, 0.14x for int4 at head_dim 64) and the TPU-v5e
+memory-bound times those bytes imply; ``benchmarks/serve_throughput.py
+--cache-dtype int4 --prefix`` gates output equivalence end to end.
+"""
 from repro.serve.engine import ServeConfig, generate, load_quantized, make_prefill_step, make_serve_step
 from repro.serve.paged_cache import (PageAllocator, PrefixCache, PrefixMatch,
                                      copy_page, make_layout, pages_needed,

@@ -29,9 +29,15 @@ any other cache.  This module owns the HOST side:
   ``MemoryBreakdown``, plus the prompt-ingest routine that scatters a
   contiguous prefill cache into a slot's pages.
 
-int8 pages (``cache_dtype="int8"``) store per-token-per-head f32 scales
-next to the pools — the paper's KV-memory roofline term drops 2x vs
-bf16 and 4x vs f32 at <2% logit error on the scaled-down models.
+Quantized pages (``cache_dtype="int8"`` / ``"int4"``) store
+per-token-per-head f32 scales next to the pools; int4 additionally
+nibble-packs two adjacent tokens per byte along the pool token dim
+(``quant.quantize.pack_int4(axis=1)``).  Every path below — prompt
+scatter, CoW ``copy_page``, decode growth — works on all three
+layouts; the paper's KV-memory roofline term drops 4x (int8) / 8x
+(int4) vs f32 pages at argmax-stable logit error on the scaled-down
+models, and the Pallas decode kernel streams the quantized pages
+directly (``kernels/paged_attention.py``).
 """
 from __future__ import annotations
 
@@ -46,10 +52,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.analytical import (MemoryBreakdown, PagedCachePlan,
-                                   kv_budget, page_bytes, plan_paged_cache)
+                                   kv_budget, kv_cache_dtype_bytes,
+                                   page_bytes, plan_paged_cache)
 from repro.core.model_config import ModelSpec
 from repro.models import lm
-from repro.quant.quantize import quantize_kv_int8
+from repro.quant.quantize import pack_int4, quantize_kv_int4, quantize_kv_int8
 
 NULL_PAGE = 0
 
@@ -312,10 +319,10 @@ def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
                 raise ValueError("need num_pages, kv_budget_bytes, or "
                                  "device_bytes + mem")
             kv_budget_bytes = kv_budget(device_bytes, mem)
+        bytes_per, scales = kv_cache_dtype_bytes(cache_dtype)
         plan = plan_paged_cache(
             spec, kv_budget_bytes, page_size=page_size,
-            bytes_per=1.0 if cache_dtype == "int8" else 4.0,
-            quantized_scales=cache_dtype == "int8")
+            bytes_per=bytes_per, quantized_scales=scales)
         num_pages = plan.num_pages
     if max_slots is not None:
         num_pages = min(num_pages, max_slots * pps + 1)
@@ -326,10 +333,11 @@ def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
 def plan_for_layout(spec: ModelSpec, layout: lm.PagedLayout,
                     cache_dtype: str = "fp32") -> PagedCachePlan:
     """The analytical plan matching an instantiated layout (for the
-    profiler's throughput prediction)."""
+    profiler's throughput prediction) — byte terms follow the cache
+    dtype (0.5 B/value + f32 scales for int4)."""
+    bytes_per, scales = kv_cache_dtype_bytes(cache_dtype)
     pb = page_bytes(spec, layout.page_size,
-                    bytes_per=1.0 if cache_dtype == "int8" else 4.0,
-                    quantized_scales=cache_dtype == "int8")
+                    bytes_per=bytes_per, quantized_scales=scales)
     return PagedCachePlan(page_size=layout.page_size,
                           num_pages=layout.num_pages,
                           page_bytes=pb,
@@ -345,21 +353,30 @@ def scatter_prompt_pages(cache_groups, prefill_groups, pv: jnp.ndarray,
     """Scatter the first ``len(pv)`` pages of KV rows from a contiguous
     (single-sequence) prefill cache into the page pools.  The one copy of
     the pool-write logic — both the standalone ``write_prompt`` and the
-    scheduler's fused jitted admission go through it.  int8 pools
-    quantize rows and fill the scale pools alongside."""
+    scheduler's fused jitted admission go through it.  Quantized pools
+    quantize rows and fill the scale pools alongside; int4 additionally
+    nibble-packs token pairs (whole pages are written, so no
+    read-modify-write is needed here)."""
     n = pv.shape[0]
     new_groups = []
     for cg, pg in zip(cache_groups, prefill_groups):
         new_layers = []
         for entry, src in zip(cg, pg):
+            quant = lm._paged_quant(entry)
             new_entry = dict(entry)
             for name in ("k", "v"):
                 rows = src[name][0, :n * page]          # (n*page, KV, D)
                 rows = rows.reshape(n, page, *rows.shape[1:])
                 pool = entry[name + "_pages"]
-                if name + "_scale" in entry:
+                if quant == "int8":
                     qrows, srows = quantize_kv_int8(rows)
                     new_entry[name + "_pages"] = pool.at[pv].set(qrows)
+                    new_entry[name + "_scale"] = entry[name + "_scale"].at[
+                        pv].set(srows)
+                elif quant == "int4":
+                    qrows, srows = quantize_kv_int4(rows)
+                    new_entry[name + "_pages"] = pool.at[pv].set(
+                        pack_int4(qrows, axis=1))
                     new_entry[name + "_scale"] = entry[name + "_scale"].at[
                         pv].set(srows)
                 else:
@@ -398,7 +415,7 @@ def write_prompt(cache, spec: ModelSpec, slot: int, pages: Sequence[int],
     """Scatter a contiguous prefill cache (one sequence, max_seq padded
     to a page multiple) into ``pages`` and point ``slot``'s block table
     at them.  Returns the updated paged-cache pytree (functional)."""
-    page = cache["groups"][0][0]["k_pages"].shape[1]
+    page = lm.paged_page_size(cache)
     pv = jnp.asarray(list(pages), jnp.int32)
     new_groups = scatter_prompt_pages(cache["groups"],
                                       prefill_cache["groups"], pv, page)

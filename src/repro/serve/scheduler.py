@@ -74,7 +74,7 @@ class SchedulerConfig:
     max_seq: int = 1024            # per-slot context ceiling
     num_pages: Optional[int] = None
     kv_budget_bytes: Optional[float] = None
-    cache_dtype: str = "fp32"      # fp32 | int8
+    cache_dtype: str = "fp32"      # fp32 | int8 | int4 (nibble-packed pages)
     # prefill attention impl for COLD admissions; prefix-hit (suffix)
     # prefills always use the dense-masked path in lm._suffix_attn_paged
     # — the suffix x [gathered prefix; suffix] mask has no flash lowering
@@ -150,7 +150,7 @@ def _admit_fn(params, batch, cache, slot, true_len, bt_row, *, spec, impl):
     logits, pre = lm.prefill(params, spec, batch,
                              max_seq=batch["tokens"].shape[1],
                              impl=impl, true_len=true_len)
-    page = cache["groups"][0][0]["k_pages"].shape[1]
+    page = lm.paged_page_size(cache)
     n = batch["tokens"].shape[1] // page          # prompt pages (static)
     new_groups = pc.scatter_prompt_pages(cache["groups"], pre["groups"],
                                          bt_row[:n], page)
@@ -203,9 +203,8 @@ class ContinuousBatchingEngine:
             cache_dtype=cfg.cache_dtype, max_slots=cfg.max_slots)
         self.layout = layout
         self.plan = pc.plan_for_layout(spec, layout, cfg.cache_dtype)
-        dtype = jnp.int8 if cfg.cache_dtype == "int8" else jnp.float32
         self.cache = lm.init_cache(spec, cfg.max_slots, cfg.max_seq,
-                                   dtype, paged=layout)
+                                   cfg.cache_dtype, paged=layout)
         self.alloc = pc.PageAllocator(layout.num_pages)
         self.prefix_cache: Optional[pc.PrefixCache] = (
             pc.PrefixCache(self.alloc, cfg.page_size)

@@ -257,10 +257,11 @@ def _run_engine(params, spec, reqs, dtype="fp32", prefix=True, **kw):
     return eng, done
 
 
-@pytest.mark.parametrize("dtype", ["fp32", "int8"])
+@pytest.mark.parametrize("dtype", ["fp32", "int8", "int4"])
 def test_prefix_cache_on_off_token_identical(dtype):
     """Scheduler output with prefix caching ON is token-for-token the
-    OFF path, for both cache dtypes, including the CoW mid-page case."""
+    OFF path, for all three cache dtypes (int4 = nibble-packed pages,
+    where the CoW mid-page case also splits a shared byte)."""
     spec, params = _setup()
     rng = np.random.default_rng(0)
     reqs = _templated_reqs(rng, 6, template_len=20)
