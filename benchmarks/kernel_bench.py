@@ -31,8 +31,9 @@ def _paged_rows(rng, rows):
     memory-bound decode roofline), and the TPU-v5e memory-bound time
     from ``core/roofline.py`` those bytes imply."""
     from repro.core import roofline
-    from repro.quant.quantize import (pack_int4, quantize_kv_int4,
-                                      quantize_kv_int8)
+    from repro.core.analytical import scale_page_tile_bytes
+    from repro.quant.quantize import (lane_major_scales, pack_int4,
+                                      quantize_kv_int4, quantize_kv_int8)
 
     B, H, KV, D, page = 4, 8, 2, 64, 16
     for ctx in (128, 512):
@@ -48,6 +49,9 @@ def _paged_rows(rng, rows):
         q4k, ks4 = quantize_kv_int4(kf)
         q4v, vs4 = quantize_kv_int4(vf)
         k4, v4 = pack_int4(q4k, axis=1), pack_int4(q4v, axis=1)
+        # scale pages ride lane-major (P, KV, page) — the pool layout
+        ks, vs = lane_major_scales(ks), lane_major_scales(vs)
+        ks4, vs4 = lane_major_scales(ks4), lane_major_scales(vs4)
         cases = {
             "fp32": ((kf, vf), None),
             "int8": ((k8, v8), (ks, vs)),
@@ -61,14 +65,23 @@ def _paged_rows(rng, rows):
                 a, k, v, bt, lengths, **kw))
             us = _time(f, q)
             # bytes the kernel streams per decode step: every live page
-            # of k and v (+ scale pages when quantized), once.  Logical
-            # bytes — on real TPU the small f32 scale blocks tile-pad
-            # (see KV_CACHE_DTYPES note in core/analytical.py).
+            # of k and v (+ scale pages when quantized), once.  With the
+            # lane-major (P, KV, page) scale layout the physical TPU
+            # tile bytes track these logical bytes to within one (8,128)
+            # tile per page — the physical_scale_bytes column shows the
+            # padding both layouts actually stream.
             pages_bytes = B * pps * page * KV * D * 2 * kp.dtype.itemsize
             if name == "int4":
                 pages_bytes //= 2           # two tokens per byte
+            scale_rows = {}
             if sc is not None:
                 pages_bytes += B * pps * page * KV * 2 * 4
+                scale_rows = {
+                    "physical_scale_bytes": int(
+                        B * pps * 2 * scale_page_tile_bytes(KV, page)),
+                    "physical_scale_bytes_row_major": int(
+                        B * pps * 2 * scale_page_tile_bytes(
+                            KV, page, layout="row_major"))}
             if base_bytes is None:
                 base_bytes = pages_bytes
             bound_us = roofline.roofline_terms(
@@ -80,6 +93,7 @@ def _paged_rows(rng, rows):
                 "bytes_vs_fp32": round(pages_bytes / base_bytes, 3),
                 "tpu_mem_bound_us": round(bound_us, 3),
                 "weight_max_err": 0.0,
+                **scale_rows,
             }
             if on_tpu:
                 # achieved fraction of the memory-bound roofline — only

@@ -19,23 +19,34 @@ def tier1() -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(root, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    bench = os.path.join(root, "benchmarks", "serve_throughput.py")
+    # (cmd, extra env) — the sharded serve smoke forces 8 host devices
+    # (jax pins the device count at first init, so it needs its own
+    # process env, same mechanism as tests/test_sharding_multidevice.py)
     steps = [
-        [sys.executable, "-m", "pytest", "-x", "-q"],
-        [sys.executable, os.path.join(root, "benchmarks",
-                                      "serve_throughput.py"), "--smoke"],
-        [sys.executable, os.path.join(root, "benchmarks",
-                                      "serve_throughput.py"), "--prefix",
-         "--smoke"],
+        ([sys.executable, "-m", "pytest", "-x", "-q"], {}),
+        ([sys.executable, bench, "--smoke"], {}),
+        ([sys.executable, bench, "--prefix", "--smoke"], {}),
         # quantized-page gate: the prefix-cache invariants (identical
         # outputs ON vs OFF, >=30% prefill-token reduction) must hold
         # with nibble-packed int4 pages too
-        [sys.executable, os.path.join(root, "benchmarks",
-                                      "serve_throughput.py"), "--prefix",
-         "--smoke", "--cache-dtype", "int4"],
+        ([sys.executable, bench, "--prefix", "--smoke",
+          "--cache-dtype", "int4"], {}),
+        # sharded serve gate: the tensor-parallel paged backend
+        # (KV-head-sharded int4 pools over 2 devices) must emit
+        # token-for-token the single-device continuous outputs
+        ([sys.executable, bench, "--smoke", "--devices", "2",
+          "--cache-dtype", "int4"],
+         {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}),
     ]
-    for cmd in steps:
+    for cmd, extra in steps:
         print("+", " ".join(cmd), flush=True)
-        r = subprocess.run(cmd, cwd=root, env=env)
+        step_env = dict(env)
+        for k, v in extra.items():
+            # append to (not replace) anything the caller already set,
+            # e.g. their own XLA_FLAGS for debugging
+            step_env[k] = f"{step_env[k]} {v}" if step_env.get(k) else v
+        r = subprocess.run(cmd, cwd=root, env=step_env)
         if r.returncode != 0:
             raise SystemExit(r.returncode)
     print("tier1 OK")

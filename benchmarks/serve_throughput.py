@@ -25,12 +25,21 @@ nibble-packed pages + per-token-per-head scales); the ``--prefix``
 gate's outputs-identical assertion holds per dtype, so
 ``--cache-dtype int4 --prefix`` is the CI smoke that pins the
 quantized prefix/CoW path.
+
+``--devices N`` serves the continuous engine tensor-parallel: the page
+pools shard over the KV-head dim of an N-way model axis
+(``serve.backend.ShardedPagedBackend``) with replicated block tables.
+The sharded run must be token-for-token identical to the single-device
+continuous run (asserted), and the report adds measured per-device
+page-pool occupancy next to ``predict_serve_throughput(tp=N)``'s
+prediction.  On CPU run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List, Tuple
+from typing import Dict
 
 import numpy as np
 
@@ -79,33 +88,47 @@ def _run_static(params, spec, reqs, batch: int, max_seq: int) -> int:
     return useful
 
 
-def _run_continuous(params, spec, reqs, slots: int, max_seq: int,
-                    device_bytes: float,
-                    cache_dtype: str = "fp32") -> Tuple[int, Dict[str, int]]:
-    """Continuous batching with the KV budget derived from the analytical
-    MemoryBreakdown (what weights + activations leave free)."""
+def _mem(spec, max_seq: int, slots: int):
+    """Analytical MemoryBreakdown for the serve shape (what weights +
+    activations leave free for KV)."""
     from repro.core.analytical import MeshShape, analyze
     from repro.core.model_config import ShapeSpec
     from repro.core import precision
+    return analyze(spec, ShapeSpec("serve", seq_len=max_seq,
+                                   global_batch=slots, kind="decode"),
+                   precision.get("fp32"), MeshShape()).memory
+
+
+def _run_continuous(params, spec, reqs, slots: int, max_seq: int,
+                    device_bytes: float, cache_dtype: str = "fp32",
+                    devices: int = 1):
+    """Continuous batching with the KV budget derived from the analytical
+    MemoryBreakdown (what weights + activations leave free).  The byte
+    budget is PER DEVICE: with ``devices`` > 1 each device holds its
+    KV-head slice of every page, so the same budget addresses ~devices x
+    more pages (the layout grows) and the engine runs on the
+    tensor-parallel sharded backend.  Returns (useful_tokens, stats,
+    completions, engine)."""
+    from repro.serve.backend import make_backend
     from repro.serve.scheduler import (ContinuousBatchingEngine,
                                        SchedulerConfig)
     from repro.serve.paged_cache import make_layout
-    an = analyze(spec, ShapeSpec("serve", seq_len=max_seq,
-                                 global_batch=slots, kind="decode"),
-                 precision.get("fp32"), MeshShape())
     layout = make_layout(spec, max_seq=max_seq, page_size=16,
-                         device_bytes=device_bytes, mem=an.memory,
-                         cache_dtype=cache_dtype)
+                         device_bytes=device_bytes,
+                         mem=_mem(spec, max_seq, slots),
+                         cache_dtype=cache_dtype, max_slots=slots,
+                         tp=devices)
     cfg = SchedulerConfig(max_slots=slots, page_size=16, max_seq=max_seq,
                           num_pages=layout.num_pages, cache_dtype=cache_dtype)
-    eng = ContinuousBatchingEngine(params, spec, cfg)
+    backend = make_backend(params, spec, cfg, devices=devices)
+    eng = ContinuousBatchingEngine(params, spec, cfg, backend=backend)
     done = eng.run(list(reqs))
     assert len(done) == len(reqs)
-    return sum(len(c.tokens) for c in done), eng.stats
+    return sum(len(c.tokens) for c in done), eng.stats, done, eng
 
 
 def _predicted(spec, slots, avg_prompt, avg_new, max_seq,
-               cache_dtype: str = "fp32") -> Dict[str, float]:
+               cache_dtype: str = "fp32", tp: int = 1) -> Dict[str, float]:
     from repro.core import hardware, precision
     from repro.core.latency import predict_serve_throughput
     from repro.serve.paged_cache import make_layout, plan_for_layout
@@ -113,11 +136,13 @@ def _predicted(spec, slots, avg_prompt, avg_new, max_seq,
     layout = make_layout(spec, max_seq=max_seq, page_size=16,
                          num_pages=max(2, slots * max_seq // 16 + 1))
     # plan bytes follow the cache dtype (0.5 B/value + scales for int4),
-    # so the predicted iteration memory term drops with the KV width
+    # so the predicted iteration memory term drops with the KV width;
+    # the plan stays GLOBAL — tp models the per-device KV-traffic /
+    # pool-occupancy split inside predict_serve_throughput
     plan = plan_for_layout(spec, layout, cache_dtype)
     return predict_serve_throughput(spec, hw, precision.get("fp32"), plan,
                                     slots=slots, avg_prompt=avg_prompt,
-                                    avg_new=avg_new)
+                                    avg_new=avg_new, tp=tp)
 
 
 def _shared_prefix_workload(n: int, n_templates: int, template_len: int,
@@ -216,7 +241,7 @@ def run_prefix(smoke: bool = False, cache_dtype: str = "fp32"):
     return "serve_prefix_cache", results[True]["seconds"] * 1e6, rows
 
 
-def run(smoke: bool = False, cache_dtype: str = "fp32"):
+def run(smoke: bool = False, cache_dtype: str = "fp32", devices: int = 1):
     if smoke:
         n, slots, buckets, new_lo, new_hi = 6, 4, [32, 64, 128], 8, 24
         max_seq, width, layers = 160, 64, 2
@@ -230,11 +255,12 @@ def run(smoke: bool = False, cache_dtype: str = "fp32"):
     device_bytes = 256e6
 
     results = {}
+    extra_rows = []
     for name, fn in (
             ("static", lambda: _run_static(params, spec, reqs, slots, max_seq)),
             ("continuous", lambda: _run_continuous(
                 params, spec, reqs, slots, max_seq, device_bytes,
-                cache_dtype))):
+                cache_dtype, devices))):
         fn()                                  # warm pass: compiles
         t0 = time.perf_counter()
         out = fn()
@@ -242,16 +268,53 @@ def run(smoke: bool = False, cache_dtype: str = "fp32"):
         useful = out[0] if isinstance(out, tuple) else out
         results[name] = {"useful_tokens": useful, "seconds": dt,
                          "tokens_per_s": useful / dt}
+        if name == "continuous":
+            cont_stats, cont_done, cont_eng = out[1], out[2], out[3]
+
+    if devices > 1:
+        # parity gate: the sharded backend must emit token-for-token the
+        # single-device continuous outputs (same scheduler decisions,
+        # same logits — the backend contract)
+        _, _, base_done, base_eng = _run_continuous(
+            params, spec, reqs, slots, max_seq, device_bytes, cache_dtype,
+            devices=1)
+        for a, b in zip(base_done, cont_done):
+            if not np.array_equal(a.tokens, b.tokens):
+                raise SystemExit(
+                    f"FAIL: sharded (tp={devices}) output mismatch uid {a.uid}")
+        occ = (cont_stats["occupancy_sum"]
+               / max(1, cont_stats["iterations"]))
+        # budget-addressable pages per device BEFORE the max_slots cap:
+        # the capacity the per-device byte budget buys at each tp
+        from repro.serve.paged_cache import make_layout, plan_for_layout
+        budget_pages = {
+            t: make_layout(spec, max_seq=max_seq, page_size=16,
+                           device_bytes=device_bytes,
+                           mem=_mem(spec, max_seq, slots),
+                           cache_dtype=cache_dtype, tp=t).num_pages
+            for t in (1, devices)}
+        extra_rows.append({
+            "engine": f"sharded_tp{devices}",
+            "outputs_identical_to_tp1": True,
+            "num_pages": cont_eng.layout.num_pages,
+            "budget_pages_per_device_tp1": budget_pages[1],
+            f"budget_pages_per_device_tp{devices}": budget_pages[devices],
+            "per_device_page_bytes": plan_for_layout(
+                spec, cont_eng.layout, cache_dtype, tp=devices).page_bytes,
+            "measured_per_device_pool_occupancy": occ,
+            "preemptions": cont_stats["preemptions"],
+        })
 
     speedup = (results["continuous"]["tokens_per_s"]
                / results["static"]["tokens_per_s"])
     pred = _predicted(spec, slots,
                       float(np.mean([len(r.prompt) for r in reqs])),
                       float(np.mean([r.max_new_tokens for r in reqs])),
-                      max_seq, cache_dtype)
+                      max_seq, cache_dtype, tp=devices)
     rows = [
         {"engine": "static", **results["static"]},
-        {"engine": "continuous", **results["continuous"]},
+        {"engine": "continuous", "devices": devices, **results["continuous"]},
+        *extra_rows,
         {"engine": "measured_speedup", "speedup": speedup},
         {"engine": "analytical", **pred},
     ]
@@ -270,6 +333,11 @@ def main():
                     choices=["fp32", "int8", "int4"],
                     help="paged KV page dtype (int4 = nibble-packed pages "
                          "+ per-token scales)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="tensor-parallel degree: shard the page pools "
+                         "over the KV-head dim of N devices (parity vs "
+                         "single-device asserted; on CPU force host "
+                         "devices via XLA_FLAGS)")
     args = ap.parse_args()
     if args.prefix:
         name, us, rows = run_prefix(smoke=args.smoke,
@@ -286,10 +354,14 @@ def main():
         if red < floor:
             raise SystemExit(1)
         return
-    name, us, rows = run(smoke=args.smoke, cache_dtype=args.cache_dtype)
+    name, us, rows = run(smoke=args.smoke, cache_dtype=args.cache_dtype,
+                         devices=args.devices)
     print(f"## {name}")
     for r in rows:
         print(r)
+    if args.devices > 1:
+        print(f"PASS: sharded tp={args.devices} outputs identical to "
+              "single-device continuous")
     speedup = next(r["speedup"] for r in rows
                    if r["engine"] == "measured_speedup")
     if args.smoke:

@@ -106,11 +106,18 @@ class PagedCachePlan:
     attention layers (each layer owns its own k/v pool slice of the
     page), so ``page_bytes`` already sums over layers.  Page 0 is the
     reserved null page inactive slots point at, hence ``usable_pages``.
+
+    ``tp`` > 1 marks the byte fields as the PER-DEVICE share of a
+    KV-head-sharded pool (``plan_paged_cache(tp=)``) — consumers that
+    take their own ``tp`` knob (``latency.mixed_iteration_cost`` /
+    ``predict_serve_throughput``) reject such plans instead of
+    silently dividing the pool bytes twice.
     """
     page_size: int
     num_pages: int
     page_bytes: float              # bytes per page across all attn layers
     bytes_per_token: float         # page_bytes / page_size
+    tp: int = 1                    # >1: byte fields are per-device shares
 
     @property
     def usable_pages(self) -> int:
@@ -129,13 +136,41 @@ class PagedCachePlan:
 # along, per paged-cache dtype.  int4 nibble-packs two tokens per byte
 # (0.5 B/value); quantized layouts carry one f32 scale per token per kv
 # head per k/v pool — the overhead that keeps the paper's "4-bit cuts
-# memory 60-70%" claim honest instead of a naive 8x.  These are LOGICAL
-# bytes: on real TPU the (page, KV, 1) f32 scale blocks pad their
-# trailing dims to the (8, 128) tile, so small-KV layouts move more
-# scale traffic than counted here — folding scales into a lane-major
-# layout is flagged future work in the ROADMAP serving section.
+# memory 60-70%" claim honest instead of a naive 8x.  Scale pages are
+# stored LANE-MAJOR (P, KV, page) — the token dim rides the 128-wide
+# lane dim, so one page's scales occupy a single (8, 128) f32 tile on
+# real TPU and the physical scale traffic matches this logical KV*4
+# B/token accounting to within one tile of padding
+# (``scale_page_tile_bytes`` quantifies both layouts).
 KV_CACHE_DTYPES = {"fp32": (4.0, False), "int8": (1.0, True),
                    "int4": (0.5, True)}
+
+
+def scale_page_tile_bytes(kv_heads: int, page_size: int,
+                          layout: str = "lane_major") -> float:
+    """PHYSICAL f32 bytes one quantized page's scale block occupies on
+    TPU after Mosaic pads the trailing two dims to the (8, 128) f32
+    tile.  ``lane_major`` is the shipped (KV, page) layout (token dim
+    on the lanes: one tile for page_size <= 128 and kv_heads <= 8);
+    ``row_major`` is the pre-lane-major (page, KV, 1) layout whose
+    per-token (KV, 1) blocks each padded to a full tile — the gap this
+    helper exists to show (e.g. KV=2, page=16: 64 KiB -> 4 KiB)."""
+    def _pad(n: int, m: int) -> int:
+        return -(-n // m) * m
+    if layout == "lane_major":
+        return _pad(kv_heads, 8) * _pad(page_size, 128) * 4.0
+    if layout == "row_major":
+        return page_size * _pad(kv_heads, 8) * _pad(1, 128) * 4.0
+    raise ValueError(f"layout {layout!r} (want lane_major | row_major)")
+
+
+def tp_shards_kv(spec: ModelSpec, tp: int) -> bool:
+    """True iff a model-axis of size ``tp`` actually shards the paged KV
+    pools (divides both head counts) — the same policy
+    ``parallel.sharding.ShardingRules.cache_entry_pspec`` enforces.
+    Non-divisible counts replicate the pools, so per-device byte/traffic
+    models must NOT divide by tp for them."""
+    return tp > 1 and spec.num_kv_heads % tp == 0 and spec.num_heads % tp == 0
 
 
 def kv_cache_dtype_bytes(cache_dtype: str):
@@ -150,34 +185,54 @@ def kv_cache_dtype_bytes(cache_dtype: str):
 
 
 def page_bytes(spec: ModelSpec, page_size: int, bytes_per: float = 2.0,
-               quantized_scales: bool = False) -> float:
+               quantized_scales: bool = False, tp: int = 1) -> float:
     """Bytes of one page across all attention layers (k and v pools).
 
     ``bytes_per`` is the stored element width (1.0 for int8 pages, 0.5
     for nibble-packed int4); ``quantized_scales`` adds the
     per-token-per-head f32 scale arrays the quantized layouts carry
-    (see ``KV_CACHE_DTYPES``).  The single source of truth for the
-    paged layout's footprint — budget fitting and layout-matching plans
-    both derive from it.
+    (see ``KV_CACHE_DTYPES``).  With ``tp`` > 1 this is the PER-DEVICE
+    share of one page under tensor-parallel serving: the pools are
+    partitioned over the KV-head dim, so each device stores KV/tp
+    heads of every page — but ONLY when tp divides both head counts.
+    A non-divisible count replicates the pools on every device
+    (``parallel.sharding.ShardingRules.cache_entry_pspec`` fallback),
+    so the per-device share stays the full page; pricing it as a
+    shard here would let budget-driven layouts overshoot the device
+    by up to tp x.  The single source of truth for the paged layout's
+    footprint — budget fitting and layout-matching plans both derive
+    from it.
     """
-    row = spec.num_kv_heads * spec.head_dim * bytes_per
+    kv = spec.num_kv_heads
+    if tp_shards_kv(spec, tp):
+        kv //= tp
+    row = kv * spec.head_dim * bytes_per
     if quantized_scales:
-        row += spec.num_kv_heads * 4.0
+        row += kv * 4.0
     return 2.0 * spec.num_attention_layers() * page_size * row
 
 
 def plan_paged_cache(spec: ModelSpec, budget_bytes: float,
                      page_size: int = 16, bytes_per: float = 2.0,
-                     quantized_scales: bool = False) -> PagedCachePlan:
-    """Fit the largest page pool into ``budget_bytes``."""
-    pb = page_bytes(spec, page_size, bytes_per, quantized_scales)
+                     quantized_scales: bool = False,
+                     tp: int = 1) -> PagedCachePlan:
+    """Fit the largest page pool into ``budget_bytes``.
+
+    ``budget_bytes`` is a PER-DEVICE budget; with ``tp`` > 1 each
+    device holds only its KV-head slice of every page, so the same
+    per-device budget addresses ~tp x more logical pages — the
+    capacity win tensor-parallel paged serving exists for.  The
+    returned plan's byte fields stay per-device.
+    """
+    pb = page_bytes(spec, page_size, bytes_per, quantized_scales, tp=tp)
     num_pages = int(budget_bytes // pb)
     if num_pages < 2:
         raise ValueError(
             f"KV budget {budget_bytes:.0f} B < 2 pages "
             f"({pb:.0f} B/page) for {spec.name}")
     return PagedCachePlan(page_size=page_size, num_pages=num_pages,
-                          page_bytes=pb, bytes_per_token=pb / page_size)
+                          page_bytes=pb, bytes_per_token=pb / page_size,
+                          tp=tp if tp_shards_kv(spec, tp) else 1)
 
 
 def kv_budget(device_bytes: float, mem: MemoryBreakdown,

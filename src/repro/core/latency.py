@@ -12,7 +12,8 @@ from dataclasses import dataclass
 from typing import Dict
 
 from repro.core.analytical import (Analysis, PagedCachePlan,
-                                   effective_slots, mixed_iteration_flops)
+                                   effective_slots, mean_pages_held,
+                                   mixed_iteration_flops, tp_shards_kv)
 from repro.core.hardware import HardwareSpec
 from repro.core.model_config import ModelSpec
 from repro.core.precision import PrecisionSpec
@@ -91,7 +92,8 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
                          precision: PrecisionSpec, plan: PagedCachePlan, *,
                          prefill_tokens: int, decode_slots: int,
                          avg_context: float, cached_prefix_tokens: int = 0,
-                         params: float | None = None) -> IterationCost:
+                         params: float | None = None,
+                         tp: int = 1) -> IterationCost:
     """Analytical cost of one scheduler iteration — predicts continuous
     batching throughput from the same roofline terms as ``breakdown()``.
 
@@ -108,13 +110,30 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
     (see ``mixed_iteration_flops``) and their KV is READ from shared
     pages instead of recomputed and written — the per-token page bytes
     move once either way, so only the FLOP term drops.
+
+    ``tp`` models the tensor-parallel sharded backend (``plan`` holding
+    the GLOBAL per-page bytes): the page pools are partitioned over the
+    KV-head dim, so each device moves 1/tp of the KV bytes per
+    iteration, while the weights stay REPLICATED — every device
+    re-reads them (the sharded backend trades no weight traffic for
+    exact single-device numerics and ~tp x the KV capacity), and the
+    FLOP term is charged in full (projections/MLP run replicated;
+    decode is memory-bound on every edge roofline anyway).  A ``tp``
+    that does not divide the head counts replicates the pools (the
+    sharding-layer fallback), so it divides nothing here either.
     """
     from repro.core import blocks
+    if tp > 1 and getattr(plan, "tp", 1) > 1:
+        raise ValueError(
+            f"plan already holds per-device bytes (built with tp="
+            f"{plan.tp}); pass the global plan or drop the tp= argument "
+            "— dividing twice would overstate throughput")
     P = params if params is not None else blocks.param_count(spec, padded=False)
     flops = mixed_iteration_flops(spec, prefill_tokens, decode_slots,
                                   avg_context, cached_prefix_tokens)
     kv_bytes = plan.bytes_per_token * (
-        decode_slots * avg_context + prefill_tokens + cached_prefix_tokens)
+        decode_slots * avg_context + prefill_tokens + cached_prefix_tokens
+    ) / (tp if tp_shards_kv(spec, tp) else 1)
     weight_bytes = P * precision.bytes_per_param
     t_comp = flops / (hw.flops_at(precision.name) * hw.u_compute)
     t_mem = (weight_bytes + kv_bytes) / (hw.mem_bw * hw.u_memory)
@@ -125,7 +144,8 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
                              precision: PrecisionSpec, plan: PagedCachePlan,
                              *, slots: int, avg_prompt: float,
                              avg_new: float, prefix_hit_rate: float = 0.0,
-                             admission: str = "lazy") -> Dict[str, float]:
+                             admission: str = "lazy",
+                             tp: int = 1) -> Dict[str, float]:
     """Steady-state continuous batching vs static-batch throughput.
 
     Static batching pads every slot to the batch max and holds slots
@@ -139,6 +159,17 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     pages written so far, so the same pool carries more concurrent
     requests.  Returns tokens/sec for both plus the ratio — the
     analytical counterpart of ``benchmarks/serve_throughput.py``.
+
+    ``tp`` is the tensor-parallel degree of the sharded paged backend
+    (``plan`` stays the GLOBAL pool): per-device KV traffic drops to
+    1/tp (weights replicated — see ``mixed_iteration_cost``) and the
+    result gains per-device page-pool terms — ``per_device_pool_bytes``
+    (each device's KV-head slice of the whole pool) and
+    ``per_device_pool_occupancy`` (identical on every device: a page's
+    rows span all shards, so occupancy is a property of the block
+    tables, which are replicated host state) — the numbers
+    ``benchmarks/serve_throughput.py --devices N`` prints measured
+    occupancy against.
     """
     avg_ctx = avg_prompt + avg_new / 2
     live = effective_slots(plan, slots, avg_prompt, avg_new, admission)
@@ -148,20 +179,28 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
         spec, hw, precision, plan,
         prefill_tokens=int((avg_prompt - hit) * live / max(1.0, avg_new)),
         decode_slots=int(round(live)), avg_context=avg_ctx,
-        cached_prefix_tokens=int(hit * live / max(1.0, avg_new)))
+        cached_prefix_tokens=int(hit * live / max(1.0, avg_new)), tp=tp)
     # static: same decode roofline but slots idle in the drain tail --
     # useful-token rate scales by mean/max occupancy (~avg/(2*avg) for a
     # uniform length spread) and every context pads to the batch max.
     stat = mixed_iteration_cost(
         spec, hw, precision, plan,
         prefill_tokens=int(avg_prompt * slots / max(1.0, 2 * avg_new)),
-        decode_slots=slots, avg_context=avg_prompt + avg_new)
+        decode_slots=slots, avg_context=avg_prompt + avg_new, tp=tp)
     static_tps = stat.tokens_per_s * 0.5
-    return {"continuous_tokens_per_s": cont.tokens_per_s,
-            "static_tokens_per_s": static_tps,
-            "speedup": cont.tokens_per_s / max(1e-12, static_tps),
-            "effective_slots": live,
-            "prefix_hit_rate": min(1.0, max(0.0, prefix_hit_rate))}
+    out = {"continuous_tokens_per_s": cont.tokens_per_s,
+           "static_tokens_per_s": static_tps,
+           "speedup": cont.tokens_per_s / max(1e-12, static_tps),
+           "effective_slots": live,
+           "prefix_hit_rate": min(1.0, max(0.0, prefix_hit_rate))}
+    if tp > 1:
+        held = mean_pages_held(avg_prompt, avg_new, plan.page_size, admission)
+        kv_shard = tp if tp_shards_kv(spec, tp) else 1
+        out["tp"] = float(tp)
+        out["per_device_pool_bytes"] = plan.total_bytes / kv_shard
+        out["per_device_pool_occupancy"] = min(
+            1.0, live * held / max(1.0, plan.usable_pages))
+    return out
 
 
 @dataclass

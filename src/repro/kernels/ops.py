@@ -94,7 +94,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     """Paged decode attention: q (B, H, D) against a page pool.
 
     Quantized pages are the FAST path: on TPU ``auto`` dispatches fp32,
-    int8 (``k_scale``/``v_scale`` (P, page, KV, 1) f32), and
+    int8 (lane-major ``k_scale``/``v_scale`` (P, KV, page) f32), and
     nibble-packed int4 pages (k/v (P, page//2, KV, D), full-token-dim
     scales) to the same scalar-prefetch Pallas kernel, which dequantizes
     int8 and unpacks int4 in VMEM inside the online-softmax loop —
@@ -110,6 +110,51 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
         q, k_pages, v_pages, block_tables, lengths, window=window,
         scale=scale, k_scale=k_scale, v_scale=v_scale,
         interpret=_default_interpret())
+
+
+def paged_attention_sharded(mesh, q, k_pages, v_pages, block_tables,
+                            lengths, *, window: int = 0,
+                            scale: Optional[float] = None,
+                            k_scale=None, v_scale=None, axis: str = "model",
+                            impl: str = "auto"):
+    """Tensor-parallel paged decode attention over a KV-head-sharded pool.
+
+    The page pools (and lane-major scale pages) live sharded over the
+    KV-head dim on ``mesh``'s ``axis``; block tables and per-slot
+    lengths are replicated host state.  Attention heads never mix, so
+    each shard runs the plain ``paged_attention`` op — the Pallas
+    kernel on TPU — over its own KV-head slice with NO collective
+    inside the op; q arrives replicated and is sliced to the shard's
+    head group by ``shard_map``.  The (B, H, D) output is constrained
+    back to replicated so the caller's wo projection (and everything
+    after it) executes the exact single-device program — this is what
+    makes the sharded backend token-for-token identical to the
+    single-device one.
+
+    Requires ``axis`` to divide both the query and the KV head counts
+    (``parallel.sharding.ShardingRules.cache_entry_pspec`` enforces the
+    fallback-to-replicated policy before pools ever get here).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.parallel.compress import shard_map_compat
+    qs = P(None, axis, None)                      # q/output: heads sharded
+    ps = P(None, None, axis, None)                # pools: KV-head dim
+    ss = P(None, axis, None)                      # lane-major scales
+    bs, ls = P(None, None), P(None)
+    if k_scale is not None:
+        def local(lq, kp, vp, ks, vs, bt, ln):
+            return paged_attention(lq, kp, vp, bt, ln, window=window,
+                                   scale=scale, k_scale=ks, v_scale=vs,
+                                   impl=impl)
+        f = shard_map_compat(local, mesh, (qs, ps, ps, ss, ss, bs, ls), qs)
+        o = f(q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths)
+    else:
+        def local(lq, kp, vp, bt, ln):
+            return paged_attention(lq, kp, vp, bt, ln, window=window,
+                                   scale=scale, impl=impl)
+        f = shard_map_compat(local, mesh, (qs, ps, ps, bs, ls), qs)
+        o = f(q, k_pages, v_pages, block_tables, lengths)
+    return jax.lax.with_sharding_constraint(o, NamedSharding(mesh, P()))
 
 
 def quantize_rowwise(x, *, bits: int = 8, impl: str = "auto", bm: int = 128):

@@ -23,12 +23,18 @@ gather materialization — is where the paper's 2-3x quantized speedup
 lives.  ``ops.paged_attention`` dispatches all three cache dtypes here
 on TPU; ``kernels/ref.py`` holds the gather oracle.
 
-Known on-hardware caveat: the (1, page, KV, 1) f32 scale blocks have
-tiny trailing dims that Mosaic pads to the (8, 128) f32 tile, so for
-small-KV models the scale operands can stream more physical bytes than
-the logical KV*4 B/token accounting (``analytical.KV_CACHE_DTYPES``)
-counts.  A lane-major scale layout (scales for many tokens packed into
-one tile) would close that gap and is flagged in the ROADMAP.
+Scale pages are LANE-MAJOR: one page's scales are a (KV, page) f32
+block with the token dim along the lanes, so a whole page's scales fit
+one (8, 128) f32 tile on TPU.  (The former (page, KV, 1) row-major
+blocks tile-padded their trailing dims to (8, 128) PER TOKEN — for
+small-KV models that streamed up to two orders of magnitude more
+physical scale bytes than the logical KV*4 B/token the analytical
+model counts; ``analytical.scale_page_tile_bytes`` quantifies both
+layouts.)
+
+For multi-device serving, ``ops.paged_attention_sharded`` runs this
+kernel per shard of a KV-head-partitioned pool under ``shard_map`` —
+heads are embarrassingly parallel, so no collective enters the kernel.
 """
 from __future__ import annotations
 
@@ -81,13 +87,18 @@ def _paged_kernel(bt_ref, len_ref, q_ref, *rest, scale: float, page: int,
     if quant == "none":
         k = k_ref[0].astype(jnp.float32)                  # (page, KV, D)
         v = v_ref[0].astype(jnp.float32)
-    elif quant == "int8":
-        # dequant in VMEM: the page crossed HBM as 1 byte/value
-        k = k_ref[0].astype(jnp.float32) * ks_ref[0]
-        v = v_ref[0].astype(jnp.float32) * vs_ref[0]
-    else:                                                 # int4
-        k = _unpack_nibbles(k_ref[0], page) * ks_ref[0]
-        v = _unpack_nibbles(v_ref[0], page) * vs_ref[0]
+    else:
+        # scale blocks are lane-major (KV, page): transpose to broadcast
+        # over (page, KV, D) — one (8, 128) tile per page, not per token
+        ks = jnp.swapaxes(ks_ref[0], 0, 1)[:, :, None]
+        vs = jnp.swapaxes(vs_ref[0], 0, 1)[:, :, None]
+        if quant == "int8":
+            # dequant in VMEM: the page crossed HBM as 1 byte/value
+            k = k_ref[0].astype(jnp.float32) * ks
+            v = v_ref[0].astype(jnp.float32) * vs
+        else:                                             # int4
+            k = _unpack_nibbles(k_ref[0], page) * ks
+            v = _unpack_nibbles(v_ref[0], page) * vs
     D = q.shape[-1]
     qg = q.reshape(kv_heads, grp, D)
     s = jnp.einsum("kgd,tkd->kgt", qg, k,
@@ -124,13 +135,14 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_scale: jnp.ndarray | None = None,
                            interpret: bool = False) -> jnp.ndarray:
     """q: (B, H, D); k_pages/v_pages: (P, page, KV, D) float — or int8
-    with ``k_scale``/``v_scale`` (P, page, KV, 1) f32, or nibble-packed
-    int4 (P, page//2, KV, D) (packing inferred from the scale's token
-    dim); block_tables: (B, pages_per_slot) int32; lengths: (B,) int32."""
+    with lane-major ``k_scale``/``v_scale`` (P, KV, page) f32, or
+    nibble-packed int4 (P, page//2, KV, D) (packing inferred from the
+    scale's token dim); block_tables: (B, pages_per_slot) int32;
+    lengths: (B,) int32."""
     B, H, D = q.shape
     KV = k_pages.shape[2]
     if k_scale is not None:
-        page = k_scale.shape[1]
+        page = k_scale.shape[-1]
         quant = "int8" if k_pages.shape[1] == page else "int4"
         if quant == "int4" and k_pages.shape[1] * 2 != page:
             raise ValueError(
@@ -149,8 +161,10 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     in_specs = [q_spec, kv_spec]
     operands = [q, k_pages]
     if quant != "none":
-        s_spec = pl.BlockSpec((1, page, KV, 1),
-                              lambda b, p, bt, ln: (bt[b, p], 0, 0, 0))
+        # lane-major scale block: the whole page's scales in one
+        # (KV, page) tile (token dim on the lanes)
+        s_spec = pl.BlockSpec((1, KV, page),
+                              lambda b, p, bt, ln: (bt[b, p], 0, 0))
         in_specs += [s_spec, kv_spec, s_spec]
         operands += [k_scale, v_pages, v_scale]
     else:

@@ -56,16 +56,16 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     (B, pages_per_slot) page ids into the pool; lengths: (B,) number of
     valid context tokens per slot (the current token's k/v already
     written).  Fully-masked slots (length 0) return zeros.  For int8
-    pages pass k_scale/v_scale (P, page, KV, 1) f32; for nibble-packed
-    int4 pages (P, page//2, KV, D) pass the same full-token-dim scales
-    (packing is inferred from the shape mismatch).  Pages are
-    dequantized after the gather — the fp32 materialization the Pallas
-    kernel exists to avoid.
+    pages pass k_scale/v_scale in the LANE-MAJOR (P, KV, page) f32
+    layout; for nibble-packed int4 pages (P, page//2, KV, D) pass the
+    same full-token-dim scales (packing is inferred from the shape
+    mismatch).  Pages are dequantized after the gather — the fp32
+    materialization the Pallas kernel exists to avoid.
     """
     from repro.quant.quantize import unpack_int4
     B, H, D = q.shape
     KV = k_pages.shape[2]
-    page = k_scale.shape[1] if k_scale is not None else k_pages.shape[1]
+    page = k_scale.shape[-1] if k_scale is not None else k_pages.shape[1]
     if k_scale is not None and k_pages.shape[1] != page:     # packed int4
         k_pages = unpack_int4(k_pages, axis=1)
         v_pages = unpack_int4(v_pages, axis=1)
@@ -74,9 +74,10 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     k = k_pages[block_tables].astype(jnp.float32)      # (B, n, page, KV, D)
     v = v_pages[block_tables].astype(jnp.float32)
     if k_scale is not None:
-        k = k * k_scale[block_tables]
+        # lane-major (B, n, KV, page) -> broadcastable (B, n, page, KV, 1)
+        k = k * jnp.moveaxis(k_scale[block_tables], -1, -2)[..., None]
     if v_scale is not None:
-        v = v * v_scale[block_tables]
+        v = v * jnp.moveaxis(v_scale[block_tables], -1, -2)[..., None]
     S = block_tables.shape[1] * page
     k = k.reshape(B, S, KV, D)
     v = v.reshape(B, S, KV, D)

@@ -1,7 +1,14 @@
-"""Serving launcher: batched generation with optional weight quantization.
+"""Serving launcher: static batched generation or the continuous-
+batching paged engine, with optional weight quantization.
 
-Local mode runs a reduced config end-to-end (prefill + decode loop) —
-the paper's deployment scenario (INT8/INT4 weight-only) on real arrays.
+Local mode runs a reduced config end-to-end — the paper's deployment
+scenario (INT8/INT4 weight-only) on real arrays.  ``--engine paged``
+drives the full scheduler stack (paged KV cache, prefix store, lazy
+allocation/preemption) instead of the static ``engine.generate`` path;
+``--cache-dtype {fp32,int8,int4}`` picks the page precision and
+``--devices N`` serves the pool tensor-parallel over N devices
+(KV-head-sharded ``ShardedPagedBackend`` — on CPU run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 """
 from __future__ import annotations
 
@@ -10,37 +17,14 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCHS
 from repro.models import lm
 from repro.serve.engine import ServeConfig, generate, load_quantized
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--local", action="store_true")
-    ap.add_argument("--layers", type=int, default=4)
-    ap.add_argument("--width", type=int, default=256)
-    ap.add_argument("--vocab", type=int, default=512)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--steps", type=int, default=32)
-    ap.add_argument("--precision", default="fp32",
-                    choices=["fp32", "fp16", "int8", "int4"])
-    ap.add_argument("--temperature", type=float, default=0.0)
-    args = ap.parse_args()
-
-    spec = ARCHS[args.arch]
-    if args.local:
-        spec = spec.scaled_down(layers=args.layers, width=args.width,
-                                vocab=args.vocab)
-    rng = jax.random.PRNGKey(0)
-    params = lm.init(rng, spec, dtype=jnp.float32)
-    if args.precision in ("int8", "int4"):
-        params = load_quantized(params, args.precision)
-        print(f"[serve] weights quantized to {args.precision}")
-
+def _run_static(args, spec, params):
     batch = {"tokens": jax.random.randint(
         jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
         spec.vocab_size)}
@@ -62,6 +46,83 @@ def main():
     print(f"[serve] generated {args.batch}x{args.steps} tokens in {dt:.2f}s "
           f"({args.batch * args.steps / dt:.1f} tok/s)")
     print(out["tokens"][:, :16])
+
+
+def _run_paged(args, spec, params):
+    """Continuous batching end-to-end: submit ``--batch`` requests with
+    the prompt spread, drain the scheduler, report stats."""
+    from repro.serve.backend import make_backend
+    from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                      SchedulerConfig)
+    rng = np.random.default_rng(1)
+    reqs = []
+    for i in range(args.batch):
+        plen = int(rng.integers(max(4, args.prompt_len // 2),
+                                args.prompt_len + 1))
+        prompt = rng.integers(0, spec.vocab_size, size=plen).astype(np.int32)
+        reqs.append(Request(i, prompt, args.steps))
+    cfg = SchedulerConfig(
+        max_slots=min(8, args.batch), page_size=16,
+        max_seq=args.prompt_len + args.steps + 16,
+        kv_budget_bytes=64e6, cache_dtype=args.cache_dtype)
+    backend = make_backend(params, spec, cfg, devices=args.devices)
+    eng = ContinuousBatchingEngine(params, spec, cfg, backend=backend)
+    t0 = time.time()
+    done = eng.run(reqs)
+    dt = time.time() - t0
+    tok = sum(len(c.tokens) for c in done)
+    usable = eng.layout.num_pages - 1
+    occ = eng.stats["occupancy_sum"] / max(1, eng.stats["iterations"])
+    print(f"[serve] paged engine ({args.cache_dtype} pages, "
+          f"tp={backend.tp}): {len(done)} requests, {tok} tokens in "
+          f"{dt:.2f}s ({tok / dt:.1f} tok/s)")
+    print(f"[serve] pool: {eng.layout.num_pages} pages x "
+          f"{eng.layout.page_size} tok, mean occupancy {occ:.2f}, "
+          f"preemptions {int(eng.stats['preemptions'])}, "
+          f"prefix hits {int(eng.stats['prefix_hit_tokens'])} tok "
+          f"({usable} usable pages)")
+    print(np.stack([c.tokens[:8] for c in done[:4]]))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "fp16", "int8", "int4"])
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--engine", default="static",
+                    choices=["static", "paged"],
+                    help="static generate() vs the continuous-batching "
+                         "paged scheduler")
+    ap.add_argument("--cache-dtype", default="fp32",
+                    choices=["fp32", "int8", "int4"],
+                    help="paged KV page precision (--engine paged)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="tensor-parallel degree for the paged engine "
+                         "(KV-head-sharded page pool)")
+    args = ap.parse_args()
+
+    spec = ARCHS[args.arch]
+    if args.local:
+        spec = spec.scaled_down(layers=args.layers, width=args.width,
+                                vocab=args.vocab)
+    rng = jax.random.PRNGKey(0)
+    params = lm.init(rng, spec, dtype=jnp.float32)
+    if args.precision in ("int8", "int4"):
+        params = load_quantized(params, args.precision)
+        print(f"[serve] weights quantized to {args.precision}")
+
+    if args.engine == "paged":
+        _run_paged(args, spec, params)
+    else:
+        _run_static(args, spec, params)
 
 
 if __name__ == "__main__":

@@ -284,19 +284,21 @@ def _norm_cache_dtype(dtype) -> str:
 
 def paged_page_size(cache) -> int:
     """Token capacity of one page — from the scale pool for quantized
-    caches (the int4 value pool's token dim is nibble-packed to half)."""
+    caches (the int4 value pool's token dim is nibble-packed to half).
+    Scale pools are LANE-MAJOR (P, KV, page): token dim last."""
     entry = cache["groups"][0][0]
     if "k_scale" in entry:
-        return entry["k_scale"].shape[1]
+        return entry["k_scale"].shape[-1]
     return entry["k_pages"].shape[1]
 
 
 def _paged_quant(entry) -> str:
     """Quantization of one layer's page pools: none | int8 | int4 —
-    int4 iff the value pool's token dim is half the scale pool's."""
+    int4 iff the value pool's token dim is half the scale pool's
+    (lane-major scales keep the token dim LAST)."""
     if "k_scale" not in entry:
         return "none"
-    return ("int4" if entry["k_pages"].shape[1] != entry["k_scale"].shape[1]
+    return ("int4" if entry["k_pages"].shape[1] != entry["k_scale"].shape[-1]
             else "int8")
 
 
@@ -311,8 +313,11 @@ def init_paged_cache(spec: ModelSpec, batch: int, max_seq: int,
     per-token-per-head f32 scales (``k_scale``/``v_scale``); "int4"
     nibble-packs two adjacent tokens per byte along the pool's token
     dim ((P, page//2, KV, D), ``quant.quantize.pack_int4(axis=1)``
-    layout) so a page moves ~8x fewer bytes than fp32.  ``pos`` is a
-    PER-SLOT length vector, not a scalar.
+    layout) so a page moves ~8x fewer bytes than fp32.  Scale pools are
+    LANE-MAJOR (P, KV, page) — token dim last, so one page's scales sit
+    in a single (8, 128) f32 tile on real TPU instead of tile-padding a
+    (page, KV, 1) block per token.  ``pos`` is a PER-SLOT length
+    vector, not a scalar.
     """
     for kind in spec.layer_kinds():
         if _base_kind(kind) not in ("attn", "attn_local", "attn_global"):
@@ -345,7 +350,7 @@ def init_paged_cache(spec: ModelSpec, batch: int, max_seq: int,
                 "v_pages": jnp.zeros(pool, pool_dtype),
             }
             if cdt != "fp32":
-                sshape = (layout.num_pages, layout.page_size, KV, 1)
+                sshape = (layout.num_pages, KV, layout.page_size)
                 entry["k_scale"] = jnp.zeros(sshape, jnp.float32)
                 entry["v_scale"] = jnp.zeros(sshape, jnp.float32)
             layers.append(entry)
@@ -551,7 +556,8 @@ def _scatter_kv_rows(kv: Dict, name: str, rows: jnp.ndarray,
     """Scatter float KV ``rows`` (N, KV, D) into one pool at token
     positions (``tgt_page``, ``tgt_off``) (N,), quantizing per the
     pool's layout.  Returns the updated pool entries ({name}_pages and,
-    when quantized, {name}_scale).
+    when quantized, {name}_scale — lane-major (P, KV, page), so a
+    token's scales land at [page, :, off]).
 
     int4 pools nibble-pack two adjacent tokens per byte, so a token
     write is a read-modify-write of its byte that must preserve the
@@ -570,7 +576,7 @@ def _scatter_kv_rows(kv: Dict, name: str, rows: jnp.ndarray,
         qrow, srow = quantize_kv_int8(rows)
         return {name + "_pages": pool.at[tgt_page, tgt_off].set(qrow),
                 name + "_scale": kv[name + "_scale"].at[
-                    tgt_page, tgt_off].set(srow)}
+                    tgt_page, :, tgt_off].set(srow[..., 0])}
     qrow, srow = quantize_kv_int4(rows)
     nib = qrow & jnp.int8(0x0F)
     byte = tgt_off // 2
@@ -584,11 +590,11 @@ def _scatter_kv_rows(kv: Dict, name: str, rows: jnp.ndarray,
         pool = pool.at[tp, byte].set(jnp.where(m[expand], upd, cur))
     return {name + "_pages": pool,
             name + "_scale": kv[name + "_scale"].at[
-                tgt_page, tgt_off].set(srow)}
+                tgt_page, :, tgt_off].set(srow[..., 0])}
 
 
 def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
-                       kind) -> Tuple[jnp.ndarray, Dict]:
+                       kind, mesh=None) -> Tuple[jnp.ndarray, Dict]:
     """Paged-cache decode attention for one layer.
 
     ``pos`` is the per-slot context length vector (B,) — the new token's
@@ -598,11 +604,18 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
     attends over the slot's block table via the paged attention op —
     quantized pools hand the kernel int8/packed-int4 pages plus scale
     pages, dequantized in-kernel.
+
+    With ``mesh`` (a Mesh whose "model" axis divides the KV heads) the
+    attention runs TENSOR-PARALLEL: the pools stay sharded over the
+    KV-head dim and the paged attention op executes per shard under
+    ``shard_map`` (heads are embarrassingly parallel — no collective
+    inside the op; the output is all-gathered so the wo projection runs
+    replicated, keeping logits bitwise-identical to a single device).
     """
     from repro.kernels import ops as kops
     B = x.shape[0]
     H, KV, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
-    page = kv["k_scale"].shape[1] if "k_scale" in kv else kv["k_pages"].shape[1]
+    page = kv["k_scale"].shape[-1] if "k_scale" in kv else kv["k_pages"].shape[1]
     q = qdot(x, p["wq"]).reshape(B, 1, H, D)
     k = qdot(x, p["wk"]).reshape(B, 1, KV, D)
     v = qdot(x, p["wv"]).reshape(B, 1, KV, D)
@@ -617,33 +630,46 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
         new_kv.update(_scatter_kv_rows(kv, name, row, slot_page, off))
 
     window = spec.sliding_window if kind == "attn_local" else 0
-    o = kops.paged_attention(
-        q[:, 0], new_kv["k_pages"], new_kv["v_pages"], block_tables,
-        pos + 1, window=window,
-        k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
+    if mesh is not None:
+        o = kops.paged_attention_sharded(
+            mesh, q[:, 0], new_kv["k_pages"], new_kv["v_pages"],
+            block_tables, pos + 1, window=window,
+            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
+    else:
+        o = kops.paged_attention(
+            q[:, 0], new_kv["k_pages"], new_kv["v_pages"], block_tables,
+            pos + 1, window=window,
+            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
     out = qdot(o.reshape(B, 1, H * D), p["wo"])
     return out, new_kv
 
 
 def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
-                       tgt_page, tgt_off, *, kind):
+                       tgt_page, tgt_off, *, kind, mesh=None):
     """Attention for a prompt SUFFIX against cached prefix pages.
 
     The prefix-cache admission path: the first ``prefix_len`` context
     tokens already live in the page pool (shared read-only from the
     prefix store), so only the suffix runs projections.  Gathers the
-    prefix K/V rows (dequantizing int8 pages, unpacking int4 nibbles),
-    attends causally over [prefix ; suffix], and scatters the suffix
-    K/V into the slot's own pages.  Padding needs no mask here: padded
-    KEYS sit causally after every true query, and padded rows are
-    routed to the null page by ``tgt_page`` (computed from ``true_len``
-    in ``prefill_paged``), whose content is never read.
+    prefix K/V rows (dequantizing int8 pages, unpacking int4 nibbles;
+    scale pools are lane-major (P, KV, page)), attends causally over
+    [prefix ; suffix], and scatters the suffix K/V into the slot's own
+    pages.  Padding needs no mask here: padded KEYS sit causally after
+    every true query, and padded rows are routed to the null page by
+    ``tgt_page`` (computed from ``true_len`` in ``prefill_paged``),
+    whose content is never read.
+
+    With ``mesh`` the pools are sharded over the KV-head dim; the
+    gathered prefix rows are constrained back to replicated before the
+    dense suffix attention so the math (and its reduction order) is the
+    single-device program — suffix prefill is a one-off per admission,
+    so the all-gather is cheap next to the decode-loop savings.
     """
     from repro.quant.quantize import unpack_int4
     B, S = xn.shape[:2]
     H, KV, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
     quant = _paged_quant(kv)
-    page = kv["k_scale"].shape[1] if quant != "none" else kv["k_pages"].shape[1]
+    page = kv["k_scale"].shape[-1] if quant != "none" else kv["k_pages"].shape[1]
     npr = pref_pages.shape[0] * page
     q = qdot(xn, p["wq"]).reshape(B, S, H, D)
     k = qdot(xn, p["wk"]).reshape(B, S, KV, D)
@@ -659,8 +685,12 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
     kp = kp.astype(jnp.float32)
     vp = vp.astype(jnp.float32)
     if quant != "none":
-        kp = kp * kv["k_scale"][pref_pages]
-        vp = vp * kv["v_scale"][pref_pages]
+        kp = kp * jnp.moveaxis(kv["k_scale"][pref_pages], -1, -2)[..., None]
+        vp = vp * jnp.moveaxis(kv["v_scale"][pref_pages], -1, -2)[..., None]
+    if mesh is not None:
+        rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        kp = jax.lax.with_sharding_constraint(kp, rep)
+        vp = jax.lax.with_sharding_constraint(vp, rep)
     kp = kp.reshape(1, npr, KV, D)
     vp = vp.reshape(1, npr, KV, D)
     k_all = jnp.concatenate([kp.astype(k.dtype), k], axis=1)
@@ -690,8 +720,8 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
 
 
 def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
-                  prefix_len, true_len, *,
-                  n_prefix_pages: int) -> Tuple[jnp.ndarray, Params]:
+                  prefix_len, true_len, *, n_prefix_pages: int,
+                  mesh=None) -> Tuple[jnp.ndarray, Params]:
     """Prefill a prompt SUFFIX directly into a paged cache slot whose
     first ``prefix_len`` tokens are already cached (prefix-cache hit).
 
@@ -727,7 +757,7 @@ def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
             xn = L.norm(spec, pslice, "norm1", x)
             h, kv_new = _suffix_attn_paged(
                 spec, pslice, xn, positions, cslice, pref_pages, prefix_len,
-                tgt_page, tgt_off, kind=base)
+                tgt_page, tgt_off, kind=base, mesh=mesh)
             y = x + h
             y2 = L.norm(spec, pslice, "norm2", y)
             if "router_w" in pslice:
@@ -750,14 +780,16 @@ def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
     return logits, new_cache
 
 
-def decode_step_paged(params, spec: ModelSpec, cache,
-                      tokens) -> Tuple[jnp.ndarray, Params]:
+def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
+                      mesh=None) -> Tuple[jnp.ndarray, Params]:
     """One decode step over a PAGED cache (per-slot positions).
 
     Same layer unroll as ``decode_step`` but attention reads/writes go
     through block tables, so slots at wildly different context lengths
     batch into one step without padding every slot to the longest —
-    the continuous-batching scheduler's inner loop.
+    the continuous-batching scheduler's inner loop.  ``mesh`` enables
+    the tensor-parallel attention path (pools sharded over KV heads,
+    paged attention per shard via ``shard_map``).
     """
     pos = cache["pos"]
     bt = cache["block_tables"]
@@ -772,7 +804,7 @@ def decode_step_paged(params, spec: ModelSpec, cache,
             pslice = jax.tree_util.tree_map(lambda v: v[li], gp)
             xn = L.norm(spec, pslice, "norm1", x)
             h, kv_new = _attn_decode_paged(spec, pslice, xn, pos, cslice,
-                                           bt, kind=base)
+                                           bt, kind=base, mesh=mesh)
             y = x + h
             y2 = L.norm(spec, pslice, "norm2", y)
             if "router_w" in pslice:
@@ -787,7 +819,8 @@ def decode_step_paged(params, spec: ModelSpec, cache,
     return logits, new_cache
 
 
-def decode_step(params, spec: ModelSpec, cache, tokens) -> Tuple[jnp.ndarray, Params]:
+def decode_step(params, spec: ModelSpec, cache, tokens, *,
+                mesh=None) -> Tuple[jnp.ndarray, Params]:
     """One decoding step for the whole batch. tokens: (B, 1) int32.
 
     Decode unrolls a python loop over layers with PER-LAYER cache buffers:
@@ -800,7 +833,7 @@ def decode_step(params, spec: ModelSpec, cache, tokens) -> Tuple[jnp.ndarray, Pa
     to ``decode_step_paged``.
     """
     if "block_tables" in cache:
-        return decode_step_paged(params, spec, cache, tokens)
+        return decode_step_paged(params, spec, cache, tokens, mesh=mesh)
     pos = cache["pos"]
     x = jnp.take(params["global"]["embed"], tokens, axis=0)
     if spec.name.startswith("gemma"):

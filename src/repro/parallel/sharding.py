@@ -208,11 +208,54 @@ class ShardingRules:
         return out
 
     # -- KV / recurrent cache -----------------------------------------------
+    def _paged_pool_fallback(self, name: str, shape: Tuple[int, ...],
+                             kv: int) -> P:
+        """Replicate a paged pool whose KV-head dim the model axis does
+        not divide — a loud, non-fatal degradation: the engine still
+        runs (and stays token-identical), it just gains no per-device
+        capacity.  Crashing here would make whole architectures (odd
+        GQA head counts) unservable on a given cluster size.  The
+        divisibility is a property of (spec, tp), so warn ONCE per
+        rules instance, not once per pool entry per layer."""
+        if not getattr(self, "_warned_paged_fallback", False):
+            import warnings
+            self._warned_paged_fallback = True
+            warnings.warn(
+                f"paged KV pool {name!r} {shape}: num_kv_heads={kv} is not "
+                f"divisible by the model-axis size {self.tp}; replicating "
+                f"the pools (no tensor-parallel capacity win). Pick a "
+                f"device count that divides the KV-head count to shard "
+                f"them.", stacklevel=3)
+        return P(*([None] * len(shape)))
+
     def cache_entry_pspec(self, name: str, shape: Tuple[int, ...]) -> P:
-        """shape: per-layer cache entry, e.g. (B, S, KV, D)."""
+        """shape: per-layer cache entry, e.g. (B, S, KV, D) — or a PAGED
+        pool: ``k_pages``/``v_pages`` (P, tok, KV, D) and lane-major
+        ``k_scale``/``v_scale`` (P, KV, page) shard their KV-HEAD dim
+        over "model" (pages are the serve path's capacity unit, so the
+        pool partitions by head, never by page — block tables stay
+        replicated host state and keep indexing the whole pool).  A
+        KV-head count the axis does not divide falls back to
+        replication with a warning instead of crashing."""
         sp, tp = self.spec, self.tp
         dp = dp_axes(self.mesh)
         dpa = dp if len(dp) > 1 else dp[0]
+        if name in ("k_pages", "v_pages"):
+            KV = shape[2]
+            if tp <= 1:
+                return P(None, None, None, None)
+            if _div(KV, tp) and _div(sp.num_heads, tp):
+                return P(None, None, "model", None)
+            return self._paged_pool_fallback(name, shape, KV)
+        if name in ("k_scale", "v_scale") and len(shape) == 3:
+            KV = shape[1]
+            if tp <= 1:
+                return P(None, None, None)
+            if _div(KV, tp) and _div(sp.num_heads, tp):
+                return P(None, "model", None)
+            return self._paged_pool_fallback(name, shape, KV)
+        if name == "block_tables":
+            return P(*([None] * len(shape)))     # replicated host state
         B = shape[0]
         batch_ax = dpa if _div(B, self.dp) else None
         if name in ("k", "v", "shared_k", "shared_v", "cross_k", "cross_v"):
@@ -246,8 +289,14 @@ class ShardingRules:
         return P(*([None] * len(shape)))
 
     def cache_shardings(self, cache: Any) -> Any:
+        """NamedShardings matching a cache pytree — contiguous decode
+        caches AND paged serve caches (the latter carry ``block_tables``
+        and per-slot ``pos``, both replicated; their pools go through
+        the paged branch of ``cache_entry_pspec``)."""
         mesh = self.mesh
         out = {"pos": NamedSharding(mesh, P()), "groups": []}
+        if "block_tables" in cache:
+            out["block_tables"] = NamedSharding(mesh, P(None, None))
         for g in cache["groups"]:
             layers = []
             for entry_dict in g:
@@ -260,3 +309,11 @@ class ShardingRules:
                 layers.append(entry)
             out["groups"].append(layers)
         return out
+
+    def paged_pools_sharded(self, cache: Any) -> bool:
+        """True iff a paged cache's pools actually shard over "model"
+        (KV-head divisibility held) — the gate for running the paged
+        attention per shard under ``shard_map``."""
+        entry = cache["groups"][0][0]
+        ps = self.cache_entry_pspec("k_pages", entry["k_pages"].shape)
+        return "model" in tuple(ps)

@@ -121,6 +121,20 @@ def pack_int4(q: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
     return jnp.moveaxis((lo | hi).astype(jnp.int8), 0, axis)
 
 
+def lane_major_scales(s: jnp.ndarray) -> jnp.ndarray:
+    """Per-token KV scales (..., page, KV, 1) -> lane-major (..., KV, page).
+
+    The paged pools store quantized-KV scales with the TOKEN dim last so
+    one page's scales occupy a single (sublane, lane) f32 tile on TPU:
+    the row-major (page, KV, 1) blocks pad their trailing (KV, 1) dims
+    to (8, 128) and stream up to ~100x the logical bytes for small-KV
+    models (the PR-3 ROADMAP caveat).  ``quantize_kv_int8/int4`` emit
+    one scale per row in (..., 1) layout; every pool write goes through
+    this transpose.
+    """
+    return jnp.moveaxis(s[..., 0], -2, -1)
+
+
 def unpack_int4(p: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
     """inverse of pack_int4 (sign-extends nibbles)."""
     pm = jnp.moveaxis(p, axis, 0)

@@ -1,30 +1,55 @@
 """Serving package: static ``engine.generate`` + the continuous-batching
 ``ContinuousBatchingEngine`` over a refcounted paged KV cache.
 
-Paged KV precision support matrix (``SchedulerConfig.cache_dtype``) —
-every cell is exercised by tier-1 tests / the CI serve smokes:
+The stack is a HOST/DEVICE split: the scheduler (admission, prefix
+store, lazy growth, preemption) is pure host state and drives a
+``backend.PagedKVBackend`` for every device interaction.  Two backends
+ship — ``SingleDeviceBackend`` (one device holds the whole pool) and
+``ShardedPagedBackend`` (tensor-parallel: pools partitioned over the
+KV-head dim of the ``model`` mesh axis, block tables replicated,
+Pallas paged attention invoked per shard via ``shard_map``; weights
+replicated so output is token-for-token the single-device engine).
 
-=========  =======  ======  ============  ====
-dtype      prefill  decode  prefix-cache  CoW
-=========  =======  ======  ============  ====
-``fp32``   yes      yes     yes           yes
-``int8``   yes      yes     yes           yes
-``int4``   yes      yes     yes           yes (nibble-packed pages;
-                                          mid-byte splits RMW-preserve
-                                          the neighbour token)
-=========  =======  ======  ============  ====
+Paged KV precision support matrix (``SchedulerConfig.cache_dtype`` x
+backend) — every cell is exercised by tier-1 tests / the CI serve
+smokes (prefill, decode, prefix-cache, CoW per cell; sharded cells add
+preemption + recompute parity in
+tests/test_serve_backend_multidevice.py):
+
+=========  ==========================  ===============================
+dtype      single device (tp=1)        sharded (tp=2 / tp=4)
+=========  ==========================  ===============================
+``fp32``   yes (all 4 paths)           yes — token-identical to tp=1
+``int8``   yes (all 4 paths)           yes — token-identical to tp=1
+``int4``   yes (nibble-packed pages;   yes — token-identical to tp=1
+           mid-byte splits RMW-        (packed pools + scale pages
+           preserve the neighbour      shard on the KV-head dim)
+           token)
+=========  ==========================  ===============================
+
+KV-head counts the model axis does not divide fall back to replicated
+pools with a warning (the engine still runs and still matches tp=1 —
+it just gains no per-device capacity).
 
 Quantized pages store per-token-per-head f32 scales next to the int8
-pools; int4 packs two adjacent tokens per byte along the pool token dim
-(~8x fewer page bytes than fp32, 62-73% below fp16-equivalent
-accounting depending on head_dim).  On TPU all three dtypes dispatch to
-the same Pallas decode kernel (``kernels/paged_attention.py``), which
+pools in LANE-MAJOR (P, KV, page) layout — the token dim rides the
+lane dim, so one page's scales occupy a single (8, 128) f32 tile on
+real TPU instead of tile-padding per token (the PR-3 caveat, closed);
+int4 packs two adjacent tokens per byte along the pool token dim (~8x
+fewer page bytes than fp32, 62-73% below fp16-equivalent accounting
+depending on head_dim).  On TPU all three dtypes dispatch to the same
+Pallas decode kernel (``kernels/paged_attention.py``), which
 dequantizes int8 / unpacks int4 in VMEM inside the online-softmax loop
 — ``benchmarks/kernel_bench.py`` reports the page-byte ratios (0.27x
-fp32 for int8, 0.14x for int4 at head_dim 64) and the TPU-v5e
-memory-bound times those bytes imply; ``benchmarks/serve_throughput.py
---cache-dtype int4 --prefix`` gates output equivalence end to end.
+fp32 for int8, 0.14x for int4 at head_dim 64) plus the physical scale
+tile bytes of both layouts; ``benchmarks/serve_throughput.py
+--cache-dtype int4 --prefix`` gates output equivalence end to end and
+``--devices N`` gates the sharded backend against single-device
+outputs while reporting measured vs ``predict_serve_throughput(tp=N)``
+per-device page-pool occupancy.
 """
+from repro.serve.backend import (PagedKVBackend, ShardedPagedBackend,
+                                 SingleDeviceBackend, make_backend)
 from repro.serve.engine import ServeConfig, generate, load_quantized, make_prefill_step, make_serve_step
 from repro.serve.paged_cache import (PageAllocator, PrefixCache, PrefixMatch,
                                      copy_page, make_layout, pages_needed,

@@ -1,0 +1,279 @@
+"""Paged-KV serving backends: the DEVICE half of the host/device split.
+
+The continuous-batching scheduler (``serve/scheduler.py``) is pure host
+state — refcounted ``PageAllocator``, hash-indexed ``PrefixCache``,
+slot/queue bookkeeping — and drives the device through the
+``PagedKVBackend`` interface below: admit (full or suffix prefill),
+one batched decode step, copy-on-write page copies, slot release, and
+block-table writes.  Everything the device side owns (the page-pool
+pytree, the jitted step functions, where the arrays live and how they
+are sharded) is a backend concern the scheduler never sees.
+
+Two backends ship:
+
+* ``SingleDeviceBackend`` — the PR-1..3 behaviour: one device holds the
+  whole pool; module-level jits (shared compile cache across engine
+  instances) run the fused admission / decode steps.
+
+* ``ShardedPagedBackend`` — tensor-parallel paged serving for the
+  edge-cluster scenario (several small accelerators behind one
+  scheduler).  The KV page pools and their lane-major int8/int4 scale
+  pages are partitioned over the ``model`` mesh axis along the KV-HEAD
+  dim (``parallel.sharding.ShardingRules.cache_entry_pspec``); block
+  tables and per-slot positions stay replicated host state, and the
+  paged-attention op runs PER SHARD under ``shard_map``
+  (``kernels.ops.paged_attention_sharded`` — the Pallas kernel on TPU).
+  Weights are kept replicated and the attention output is gathered
+  before the output projection, so every matmul executes the exact
+  single-device program: the sharded engine is token-for-token
+  IDENTICAL to ``SingleDeviceBackend`` for all three cache dtypes
+  (asserted in tests/test_serve_backend_multidevice.py).  What tp buys
+  is per-device KV capacity (each device stores ceil(KV/tp) heads of
+  every page, so the same per-device byte budget addresses ~tp x more
+  pages — ``make_layout(tp=)``) and 1/tp of the decode-loop KV traffic
+  (``core.latency.mixed_iteration_cost(tp=)``).  KV-head counts that
+  the axis does not divide fall back to replicated pools (clear
+  warning, no crash): the engine still runs, it just gains no capacity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.model_config import ModelSpec
+from repro.models import lm
+from repro.serve import paged_cache as pc
+
+
+# Module-level jits (spec/impl/mesh static): every engine instance — and
+# every benchmark repetition — shares one compile cache instead of
+# retracing per-instance closures.  All steps return sampled token ids,
+# not logits, so only (B,)-sized arrays ever cross to the host.
+
+@functools.partial(jax.jit, static_argnames=("spec", "impl"),
+                   donate_argnums=(2,))
+def _admit_fn(params, batch, cache, slot, true_len, bt_row, *, spec, impl):
+    """Fused cold admission (no cached prefix): prefill the
+    (bucket-padded) prompt, scatter its KV into the slot's pages,
+    install the block-table row, and sample the first token.  One jit
+    call per admission (retraces only per prompt bucket).  Needs no
+    mesh: the prefill math runs replicated on every backend, and GSPMD
+    partitions the scatter into sharded pools on its own."""
+    logits, pre = lm.prefill(params, spec, batch,
+                             max_seq=batch["tokens"].shape[1],
+                             impl=impl, true_len=true_len)
+    page = lm.paged_page_size(cache)
+    n = batch["tokens"].shape[1] // page          # prompt pages (static)
+    new_groups = pc.scatter_prompt_pages(cache["groups"], pre["groups"],
+                                         bt_row[:n], page)
+    new_cache = {
+        "pos": cache["pos"].at[slot].set(true_len),
+        "block_tables": cache["block_tables"].at[slot].set(bt_row),
+        "groups": new_groups,
+    }
+    return jnp.argmax(logits[0, 0]), new_cache
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "n_prefix_pages", "mesh"),
+                   donate_argnums=(2,))
+def _admit_prefix_fn(params, batch, cache, slot, prefix_len, true_len,
+                     bt_row, *, spec, n_prefix_pages, mesh=None):
+    """Fused warm admission: prefill only the prompt SUFFIX against the
+    slot's cached prefix pages (``lm.prefill_paged``) and sample the
+    first token.  Retraces per (suffix bucket, prefix-page bucket)."""
+    logits, new_cache = lm.prefill_paged(
+        params, spec, batch["tokens"], cache, slot, bt_row, prefix_len,
+        true_len, n_prefix_pages=n_prefix_pages, mesh=mesh)
+    return jnp.argmax(logits[0, 0]), new_cache
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "mesh"),
+                   donate_argnums=(1,))
+def _decode_fn(params, cache, tokens, active, *, spec, mesh=None):
+    logits, cache = lm.decode_step(params, spec, cache, tokens, mesh=mesh)
+    # pin inactive slots at pos 0 so their (clamped) block-table lookups
+    # stay on the null page indefinitely
+    cache["pos"] = cache["pos"] * active
+    return jnp.argmax(logits[:, 0], axis=-1), cache
+
+
+class PagedKVBackend:
+    """Interface the scheduler drives; implementations own the device
+    cache pytree and the jitted steps.  All token returns are host ints
+    / numpy — the scheduler never touches device arrays."""
+
+    spec: ModelSpec
+    layout: lm.PagedLayout
+    plan: Any                      # analytical PagedCachePlan
+    cache: Any                     # device pytree (pools + block tables)
+    tp: int = 1                    # tensor-parallel degree (1 = single)
+
+    def admit_full(self, padded_tokens: np.ndarray, slot: int,
+                   true_len: int, bt_row: np.ndarray) -> int:
+        """Cold prefill of a bucket-padded prompt into ``slot``; returns
+        the sampled first token."""
+        raise NotImplementedError
+
+    def admit_prefix(self, padded_suffix: np.ndarray, slot: int,
+                     prefix_len: int, true_len: int, bt_row: np.ndarray,
+                     *, n_prefix_pages: int) -> int:
+        """Suffix-only prefill against cached prefix pages."""
+        raise NotImplementedError
+
+    def decode(self, tokens: np.ndarray, active: np.ndarray) -> np.ndarray:
+        """One batched decode step; returns (B,) sampled next tokens."""
+        raise NotImplementedError
+
+    def copy_page(self, src_page: int, dst_page: int) -> None:
+        """Copy one physical page (all layers, k/v and scales) — the
+        copy-on-write step for mid-page prefix reuse."""
+        raise NotImplementedError
+
+    def release_slot(self, slot: int) -> None:
+        """Reset a finished/preempted slot's block table and position."""
+        raise NotImplementedError
+
+    def write_block_entries(self,
+                            updates: Sequence[Tuple[int, int, int]]) -> None:
+        """Install lazily-grown decode pages: (slot_row, page_idx,
+        page_id) triples into the replicated block tables."""
+        raise NotImplementedError
+
+
+class SingleDeviceBackend(PagedKVBackend):
+    """The whole page pool on one device (the PR-1..3 serve path)."""
+
+    #: Mesh handed to the jitted steps; None on a single device.
+    mesh = None
+
+    def __init__(self, params: Any, spec: ModelSpec, cfg):
+        self.params, self.spec, self.cfg = params, spec, cfg
+        self.layout = pc.make_layout(
+            spec, max_seq=cfg.max_seq, page_size=cfg.page_size,
+            num_pages=cfg.num_pages, kv_budget_bytes=cfg.kv_budget_bytes,
+            cache_dtype=cfg.cache_dtype, max_slots=cfg.max_slots,
+            tp=self.tp)
+        self.plan = pc.plan_for_layout(spec, self.layout, cfg.cache_dtype)
+        self.cache = self._init_cache()
+        self._place()
+        self._admit = functools.partial(_admit_fn, spec=spec,
+                                        impl=cfg.attention_impl)
+        self._admit_pref = functools.partial(_admit_prefix_fn, spec=spec,
+                                             mesh=self.mesh)
+        self._decode = functools.partial(_decode_fn, spec=spec,
+                                         mesh=self.mesh)
+
+    def _init_cache(self):
+        """Build the paged device cache; subclasses override to create
+        it already laid out across their devices."""
+        return lm.init_cache(self.spec, self.cfg.max_slots, self.cfg.max_seq,
+                             self.cfg.cache_dtype, paged=self.layout)
+
+    def _place(self) -> None:
+        """Hook for subclasses to device_put the params (shardings)."""
+
+    def admit_full(self, padded_tokens, slot, true_len, bt_row) -> int:
+        tok0, self.cache = self._admit(
+            self.params, {"tokens": jnp.asarray(padded_tokens)}, self.cache,
+            jnp.int32(slot), jnp.int32(true_len), jnp.asarray(bt_row))
+        return int(tok0)
+
+    def admit_prefix(self, padded_suffix, slot, prefix_len, true_len,
+                     bt_row, *, n_prefix_pages) -> int:
+        tok0, self.cache = self._admit_pref(
+            self.params, {"tokens": jnp.asarray(padded_suffix)}, self.cache,
+            jnp.int32(slot), jnp.int32(prefix_len), jnp.int32(true_len),
+            jnp.asarray(bt_row), n_prefix_pages=n_prefix_pages)
+        return int(tok0)
+
+    def decode(self, tokens, active) -> np.ndarray:
+        nxt, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active))
+        return np.asarray(nxt)
+
+    def copy_page(self, src_page: int, dst_page: int) -> None:
+        self.cache = pc.copy_page(self.cache, src_page, dst_page)
+
+    def release_slot(self, slot: int) -> None:
+        self.cache = pc.release_slot(self.cache, slot)
+
+    def write_block_entries(self, updates) -> None:
+        rows = jnp.asarray([u[0] for u in updates], jnp.int32)
+        cols = jnp.asarray([u[1] for u in updates], jnp.int32)
+        vals = jnp.asarray([u[2] for u in updates], jnp.int32)
+        bt = self.cache["block_tables"]
+        self.cache["block_tables"] = bt.at[rows, cols].set(vals)
+
+
+class ShardedPagedBackend(SingleDeviceBackend):
+    """Tensor-parallel paged serving: pools sharded over the KV-head dim
+    of the ``model`` mesh axis, block tables replicated, attention per
+    shard.  See the module docstring for the exactness/capacity
+    contract."""
+
+    def __init__(self, params: Any, spec: ModelSpec, cfg,
+                 tp: Optional[int] = None,
+                 devices: Optional[List] = None):
+        from repro.launch.mesh import make_mesh_compat
+        from repro.parallel.sharding import ShardingRules
+        devices = devices if devices is not None else jax.devices()
+        tp = tp if tp is not None else len(devices)
+        if tp < 2:
+            raise ValueError(f"ShardedPagedBackend needs tp >= 2, got {tp} "
+                             "(use SingleDeviceBackend)")
+        if len(devices) < tp:
+            raise RuntimeError(
+                f"tp={tp} needs {tp} devices, have {len(devices)} — on CPU "
+                "run under XLA_FLAGS=--xla_force_host_platform_device_count=N")
+        self.tp = tp
+        self._mesh = make_mesh_compat((1, tp), ("data", "model"),
+                                      devices=devices)
+        self.rules = ShardingRules(self._mesh, spec)
+        super().__init__(params, spec, cfg)
+
+    def _init_cache(self):
+        """Create the pool pytree SHARDED FROM BIRTH: a tp-scaled global
+        pool is ~tp x one device's free KV memory, so materializing it
+        unsharded on the default device first (then resharding) would
+        OOM the exact deployments tp exists for.  ``jit`` with
+        ``out_shardings`` writes each device's KV-head slice in place;
+        shapes come from ``eval_shape`` so nothing big ever lives
+        unsharded."""
+        build = lambda: super(ShardedPagedBackend, self)._init_cache()
+        abstract = jax.eval_shape(build)
+        self.pools_sharded = self.rules.paged_pools_sharded(abstract)
+        csh = self.rules.cache_shardings(abstract)
+        return jax.jit(build, out_shardings=csh)()
+
+    def _place(self) -> None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        # replicated weights: every device runs the full projections/MLP
+        # so logits (and greedy tokens) are bitwise the single-device
+        # program; TP buys KV capacity + traffic, not weight sharding
+        rep = NamedSharding(self._mesh, P())
+        self.params = jax.device_put(self.params, rep)
+
+    @property
+    def mesh(self):
+        # shard_map attention only when the pools actually shard — the
+        # odd-KV fallback replicates them, and a shard_map over
+        # replicated pools would recompute every head on every device
+        # AND break GQA head grouping per shard
+        if getattr(self, "pools_sharded", False):
+            return self._mesh
+        return None
+
+
+def make_backend(params: Any, spec: ModelSpec, cfg, *,
+                 devices: int = 1) -> PagedKVBackend:
+    """Backend factory the launcher/benchmarks use: ``devices`` == 1 is
+    the single-device pool, > 1 the KV-head-sharded tensor-parallel
+    backend over the first ``devices`` jax devices."""
+    if devices <= 1:
+        return SingleDeviceBackend(params, spec, cfg)
+    return ShardedPagedBackend(params, spec, cfg, tp=devices)

@@ -30,8 +30,11 @@ Two serving modes live in this package:
   gather-based paged attention op (``kernels/paged_attention.py``).
   ``benchmarks/serve_throughput.py`` measures the tokens/sec win over
   ``generate()`` and (``--prefix``) the prefill-token reduction on
-  templated workloads.  The paged layout is also the base for
-  multi-device serving (shard the page pool) in later PRs.
+  templated workloads.  The scheduler drives the device through a
+  ``serve.backend.PagedKVBackend``: ``--devices N`` serves the same
+  host logic tensor-parallel (page pools sharded over the KV-head dim,
+  block tables replicated, paged attention per shard) with
+  token-for-token identical output.
 """
 from __future__ import annotations
 

@@ -30,9 +30,10 @@ any other cache.  This module owns the HOST side:
   contiguous prefill cache into a slot's pages.
 
 Quantized pages (``cache_dtype="int8"`` / ``"int4"``) store
-per-token-per-head f32 scales next to the pools; int4 additionally
-nibble-packs two adjacent tokens per byte along the pool token dim
-(``quant.quantize.pack_int4(axis=1)``).  Every path below — prompt
+per-token-per-head f32 scales next to the pools in LANE-MAJOR
+``(P, KV, page)`` layout (token dim last, one (8, 128) f32 tile per
+page on TPU); int4 additionally nibble-packs two adjacent tokens per
+byte along the pool token dim (``quant.quantize.pack_int4(axis=1)``).  Every path below — prompt
 scatter, CoW ``copy_page``, decode growth — works on all three
 layouts; the paper's KV-memory roofline term drops 4x (int8) / 8x
 (int4) vs f32 pages at argmax-stable logit error on the scaled-down
@@ -56,7 +57,8 @@ from repro.core.analytical import (MemoryBreakdown, PagedCachePlan,
                                    page_bytes, plan_paged_cache)
 from repro.core.model_config import ModelSpec
 from repro.models import lm
-from repro.quant.quantize import pack_int4, quantize_kv_int4, quantize_kv_int8
+from repro.quant.quantize import (lane_major_scales, pack_int4,
+                                  quantize_kv_int4, quantize_kv_int8)
 
 NULL_PAGE = 0
 
@@ -306,12 +308,18 @@ def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
                 device_bytes: Optional[float] = None,
                 mem: Optional[MemoryBreakdown] = None,
                 cache_dtype: str = "fp32",
-                max_slots: Optional[int] = None) -> lm.PagedLayout:
+                max_slots: Optional[int] = None,
+                tp: int = 1) -> lm.PagedLayout:
     """Size the page pool: explicit ``num_pages``, a raw byte budget, or
     a ``MemoryBreakdown`` + device size (budget = what weights and
-    activations leave free, eq. (9)'s residual term).  With ``max_slots``
-    the pool is capped at the addressable maximum (every slot full plus
-    the null page) — a bigger pool is pure scatter/donation overhead."""
+    activations leave free, eq. (9)'s residual term).  Byte budgets are
+    PER DEVICE: with ``tp`` > 1 (tensor-parallel sharded backend) each
+    device stores only its KV-head slice of every page, so the same
+    per-device budget addresses ~tp x more logical pages — the
+    edge-cluster capacity story ``core.analytical.plan_paged_cache``
+    prices.  With ``max_slots`` the pool is capped at the addressable
+    maximum (every slot full plus the null page) — a bigger pool is
+    pure scatter/donation overhead."""
     pps = pages_needed(max_seq, page_size)
     if num_pages is None:
         if kv_budget_bytes is None:
@@ -322,7 +330,7 @@ def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
         bytes_per, scales = kv_cache_dtype_bytes(cache_dtype)
         plan = plan_paged_cache(
             spec, kv_budget_bytes, page_size=page_size,
-            bytes_per=bytes_per, quantized_scales=scales)
+            bytes_per=bytes_per, quantized_scales=scales, tp=tp)
         num_pages = plan.num_pages
     if max_slots is not None:
         num_pages = min(num_pages, max_slots * pps + 1)
@@ -331,17 +339,20 @@ def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
 
 
 def plan_for_layout(spec: ModelSpec, layout: lm.PagedLayout,
-                    cache_dtype: str = "fp32") -> PagedCachePlan:
+                    cache_dtype: str = "fp32", tp: int = 1) -> PagedCachePlan:
     """The analytical plan matching an instantiated layout (for the
     profiler's throughput prediction) — byte terms follow the cache
-    dtype (0.5 B/value + f32 scales for int4)."""
+    dtype (0.5 B/value + f32 scales for int4); ``tp`` > 1 makes them
+    the per-device share of a KV-head-sharded pool."""
+    from repro.core.analytical import tp_shards_kv
     bytes_per, scales = kv_cache_dtype_bytes(cache_dtype)
     pb = page_bytes(spec, layout.page_size,
-                    bytes_per=bytes_per, quantized_scales=scales)
+                    bytes_per=bytes_per, quantized_scales=scales, tp=tp)
     return PagedCachePlan(page_size=layout.page_size,
                           num_pages=layout.num_pages,
                           page_bytes=pb,
-                          bytes_per_token=pb / layout.page_size)
+                          bytes_per_token=pb / layout.page_size,
+                          tp=tp if tp_shards_kv(spec, tp) else 1)
 
 
 # ---------------------------------------------------------------------------
@@ -372,13 +383,13 @@ def scatter_prompt_pages(cache_groups, prefill_groups, pv: jnp.ndarray,
                     qrows, srows = quantize_kv_int8(rows)
                     new_entry[name + "_pages"] = pool.at[pv].set(qrows)
                     new_entry[name + "_scale"] = entry[name + "_scale"].at[
-                        pv].set(srows)
+                        pv].set(lane_major_scales(srows))
                 elif quant == "int4":
                     qrows, srows = quantize_kv_int4(rows)
                     new_entry[name + "_pages"] = pool.at[pv].set(
                         pack_int4(qrows, axis=1))
                     new_entry[name + "_scale"] = entry[name + "_scale"].at[
-                        pv].set(srows)
+                        pv].set(lane_major_scales(srows))
                 else:
                     new_entry[name + "_pages"] = pool.at[pv].set(
                         rows.astype(pool.dtype))

@@ -36,21 +36,26 @@ Greedy decoding matches per-request static ``generate`` token-for-token
 with prefix caching on or off (asserted in tests/test_prefix_cache.py),
 and the allocator invariants hold under random interleavings
 (hypothesis fuzz ibid.).
+
+The scheduler is the HOST half of a host/device split: every device
+interaction — fused admission prefills, the batched decode step, CoW
+page copies, slot release, block-table writes — goes through a
+``serve.backend.PagedKVBackend``.  The default ``SingleDeviceBackend``
+reproduces the one-device behaviour; ``ShardedPagedBackend`` runs the
+same host logic over a KV-head-sharded, tensor-parallel page pool with
+token-for-token identical output (tests/test_serve_backend_multidevice).
 """
 from __future__ import annotations
 
-import functools
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.model_config import ModelSpec
-from repro.models import lm
 from repro.serve import paged_cache as pc
+from repro.serve.backend import PagedKVBackend, SingleDeviceBackend
 
 
 @dataclass
@@ -135,77 +140,30 @@ def _pow2_pages(n: int, cap: int) -> int:
     return min(b, cap)
 
 
-# Module-level jits (spec/impl static): every engine instance — and every
-# benchmark repetition — shares one compile cache instead of retracing
-# per-instance closures.  All steps return sampled token ids, not
-# logits, so only (B,)-sized arrays ever cross to the host.
-
-@functools.partial(jax.jit, static_argnames=("spec", "impl"),
-                   donate_argnums=(2,))
-def _admit_fn(params, batch, cache, slot, true_len, bt_row, *, spec, impl):
-    """Fused cold admission (no cached prefix): prefill the
-    (bucket-padded) prompt, scatter its KV into the slot's pages,
-    install the block-table row, and sample the first token.  One jit
-    call per admission (retraces only per prompt bucket)."""
-    logits, pre = lm.prefill(params, spec, batch,
-                             max_seq=batch["tokens"].shape[1],
-                             impl=impl, true_len=true_len)
-    page = lm.paged_page_size(cache)
-    n = batch["tokens"].shape[1] // page          # prompt pages (static)
-    new_groups = pc.scatter_prompt_pages(cache["groups"], pre["groups"],
-                                         bt_row[:n], page)
-    new_cache = {
-        "pos": cache["pos"].at[slot].set(true_len),
-        "block_tables": cache["block_tables"].at[slot].set(bt_row),
-        "groups": new_groups,
-    }
-    return jnp.argmax(logits[0, 0]), new_cache
-
-
-@functools.partial(jax.jit, static_argnames=("spec", "n_prefix_pages"),
-                   donate_argnums=(2,))
-def _admit_prefix_fn(params, batch, cache, slot, prefix_len, true_len,
-                     bt_row, *, spec, n_prefix_pages):
-    """Fused warm admission: prefill only the prompt SUFFIX against the
-    slot's cached prefix pages (``lm.prefill_paged``) and sample the
-    first token.  Retraces per (suffix bucket, prefix-page bucket)."""
-    logits, new_cache = lm.prefill_paged(
-        params, spec, batch["tokens"], cache, slot, bt_row, prefix_len,
-        true_len, n_prefix_pages=n_prefix_pages)
-    return jnp.argmax(logits[0, 0]), new_cache
-
-
-@functools.partial(jax.jit, static_argnames=("spec",), donate_argnums=(1,))
-def _decode_fn(params, cache, tokens, active, *, spec):
-    logits, cache = lm.decode_step(params, spec, cache, tokens)
-    # pin inactive slots at pos 0 so their (clamped) block-table lookups
-    # stay on the null page indefinitely
-    cache["pos"] = cache["pos"] * active
-    return jnp.argmax(logits[:, 0], axis=-1), cache
-
-
 class ContinuousBatchingEngine:
     """Iteration-level scheduler over a refcounted paged KV cache.
 
     ``step()`` = admit-from-queue (full or suffix prefill) + lazy decode
     page growth (with prefix-store eviction and preemption under
-    pressure) + one batched decode; the device state is a single paged-
-    cache pytree threaded functionally through jitted steps.  Counters
-    (``stats``) feed the throughput benchmark and the analytical model's
+    pressure) + one batched decode.  All device state lives behind the
+    ``backend`` (a ``serve.backend.PagedKVBackend``); the engine itself
+    is pure host bookkeeping, so the same scheduler drives one device
+    or a tensor-parallel sharded pool unchanged.  Counters (``stats``)
+    feed the throughput benchmark and the analytical model's
     occupancy / prefix-hit inputs.
     """
 
-    def __init__(self, params: Any, spec: ModelSpec, cfg: SchedulerConfig):
-        self.params, self.spec, self.cfg = params, spec, cfg
-        layout = pc.make_layout(
-            spec, max_seq=cfg.max_seq, page_size=cfg.page_size,
-            num_pages=cfg.num_pages, kv_budget_bytes=cfg.kv_budget_bytes,
-            cache_dtype=cfg.cache_dtype, max_slots=cfg.max_slots)
-        self.layout = layout
-        self.plan = pc.plan_for_layout(spec, layout, cfg.cache_dtype)
-        self.cache = lm.init_cache(spec, cfg.max_slots, cfg.max_seq,
-                                   cfg.cache_dtype, paged=layout)
-        self.alloc = pc.PageAllocator(layout.num_pages)
+    def __init__(self, params: Any, spec: ModelSpec, cfg: SchedulerConfig,
+                 backend: Optional[PagedKVBackend] = None):
+        # params is consumed only to build the default backend — the
+        # engine itself never touches device state (an explicit backend
+        # already owns its own params)
+        self.spec, self.cfg = spec, cfg
+        self.backend = backend if backend is not None else \
+            SingleDeviceBackend(params, spec, cfg)
+        self.layout = self.backend.layout
+        self.plan = self.backend.plan
+        self.alloc = pc.PageAllocator(self.layout.num_pages)
         self.prefix_cache: Optional[pc.PrefixCache] = (
             pc.PrefixCache(self.alloc, cfg.page_size)
             if cfg.enable_prefix_cache else None)
@@ -218,11 +176,6 @@ class ContinuousBatchingEngine:
             "prompt_tokens": 0, "prefix_hit_tokens": 0, "admitted": 0,
             "finished": 0, "preemptions": 0, "cow_copies": 0,
             "prefix_evicted_pages": 0, "occupancy_sum": 0.0}
-
-        self._admit_full = functools.partial(_admit_fn, spec=spec,
-                                             impl=cfg.attention_impl)
-        self._admit_prefix = functools.partial(_admit_prefix_fn, spec=spec)
-        self._decode = functools.partial(_decode_fn, spec=spec)
 
     # -- queue ------------------------------------------------------------
 
@@ -283,7 +236,7 @@ class ContinuousBatchingEngine:
         new_prompt = np.concatenate(
             [slot.prompt, np.asarray(slot.generated, np.int32)])
         self.alloc.free(slot.pages)
-        self.cache = pc.release_slot(self.cache, idx)
+        self.backend.release_slot(idx)
         self.slots[idx] = None
         self.queue.appendleft(Request(slot.uid, new_prompt, remaining))
         self.stats["preemptions"] += 1
@@ -345,7 +298,7 @@ class ContinuousBatchingEngine:
             pages = full_pages + fresh
             if partial is not None:
                 src, _t = partial
-                self.cache = pc.copy_page(self.cache, src, fresh[0])
+                self.backend.copy_page(src, fresh[0])
                 self.alloc.free([src])    # drop the temporary CoW pin
                 self.stats["cow_copies"] += 1
 
@@ -358,19 +311,14 @@ class ContinuousBatchingEngine:
                     "bucket narrower than the prompt's pages"
                 padded = np.zeros((1, spad), np.int32)
                 padded[0, :plen] = req.prompt
-                tok0, self.cache = self._admit_full(
-                    self.params, {"tokens": jnp.asarray(padded)}, self.cache,
-                    jnp.int32(i), jnp.int32(plen), jnp.asarray(row))
+                tok0 = self.backend.admit_full(padded, i, plen, row)
             else:
                 spad = _bucket(suffix_len, page, self.cfg.max_seq)
                 padded = np.zeros((1, spad), np.int32)
                 padded[0, :suffix_len] = req.prompt[matched:]
                 npp = _pow2_pages(pc.pages_needed(matched, page), row_len)
-                tok0, self.cache = self._admit_prefix(
-                    self.params, {"tokens": jnp.asarray(padded)}, self.cache,
-                    jnp.int32(i), jnp.int32(matched), jnp.int32(suffix_len),
-                    jnp.asarray(row), n_prefix_pages=npp)
-            tok0 = int(tok0)
+                tok0 = self.backend.admit_prefix(
+                    padded, i, matched, suffix_len, row, n_prefix_pages=npp)
             self.slots[i] = _Slot(req.uid, req.prompt, plen,
                                   req.max_new_tokens, pages, tok0,
                                   self._admit_seq, [tok0])
@@ -408,18 +356,14 @@ class ContinuousBatchingEngine:
                 updates = [u for u in updates if u[0] != victim]
                 self._preempt(victim)
         if updates:
-            rows = jnp.asarray([u[0] for u in updates], jnp.int32)
-            cols = jnp.asarray([u[1] for u in updates], jnp.int32)
-            vals = jnp.asarray([u[2] for u in updates], jnp.int32)
-            bt = self.cache["block_tables"]
-            self.cache["block_tables"] = bt.at[rows, cols].set(vals)
+            self.backend.write_block_entries(updates)
 
     def _finish(self, completions: List[Completion]) -> None:
         for i, slot in enumerate(self.slots):
             if slot is None or not slot.done:
                 continue
             self.alloc.free(slot.pages)
-            self.cache = pc.release_slot(self.cache, i)
+            self.backend.release_slot(i)
             res = self._resume.pop(slot.uid, None)
             prior = res.prior if res is not None else []
             plen0 = res.orig_prompt_len if res is not None else slot.prompt_len
@@ -454,9 +398,7 @@ class ContinuousBatchingEngine:
                 active[i] = 1
         if not active.any():
             return completions
-        nxt, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active))
-        nxt = np.asarray(nxt)
+        nxt = self.backend.decode(tokens, active)
         for i, slot in enumerate(self.slots):
             if slot is not None and active[i]:
                 slot.last_token = int(nxt[i])

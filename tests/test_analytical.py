@@ -232,3 +232,72 @@ def test_predict_serve_throughput_consumes_cache_dtype_bytes():
         spec, hw, prec, p, slots=8, avg_prompt=256.0, avg_new=64.0)
         ["continuous_tokens_per_s"] for d, p in plans.items()}
     assert tps["int4"] >= tps["int8"] >= tps["fp32"]
+
+
+def test_scale_page_tile_bytes_lane_major_wins():
+    """Lane-major (KV, page) scale blocks occupy one (8, 128) f32 tile
+    per page; the old row-major (page, KV, 1) layout padded a tile PER
+    TOKEN — 16x more physical bytes at KV=2, page=16."""
+    lane = analytical.scale_page_tile_bytes(2, 16)
+    row = analytical.scale_page_tile_bytes(2, 16, layout="row_major")
+    assert lane == 8 * 128 * 4.0
+    assert row == 16 * 8 * 128 * 4.0
+    assert row / lane == 16.0
+    # logical bytes are a lower bound on both layouts
+    assert lane >= 2 * 16 * 4.0
+    with pytest.raises(ValueError):
+        analytical.scale_page_tile_bytes(2, 16, layout="bogus")
+
+
+def test_tensor_parallel_page_budget_and_throughput():
+    """tp threading: page_bytes(tp=) is the per-device KV-head share,
+    plan_paged_cache(tp=) turns the same per-device budget into ~tp x
+    more pages, and predict_serve_throughput(tp=) reports per-device
+    pool terms with KV traffic (not weight traffic) divided by tp."""
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import predict_serve_throughput
+    spec = ASSIGNED["granite-3-8b"].scaled_down()   # KV=4 after scaling
+    pb1 = analytical.page_bytes(spec, 16, bytes_per=1.0,
+                                quantized_scales=True)
+    pb4 = analytical.page_bytes(spec, 16, bytes_per=1.0,
+                                quantized_scales=True, tp=4)
+    assert pb4 == pytest.approx(pb1 / 4)
+    plan1 = analytical.plan_paged_cache(spec, 1e6, bytes_per=1.0,
+                                        quantized_scales=True)
+    plan4 = analytical.plan_paged_cache(spec, 1e6, bytes_per=1.0,
+                                        quantized_scales=True, tp=4)
+    assert 4 * plan1.num_pages <= plan4.num_pages < 4 * (plan1.num_pages + 1)
+    hw, prec = hardware.get("rpi5"), prec_mod.get("fp32")
+    kw = dict(slots=8, avg_prompt=256.0, avg_new=64.0)
+    base = predict_serve_throughput(spec, hw, prec, plan1, **kw)
+    tp4 = predict_serve_throughput(spec, hw, prec, plan1, tp=4, **kw)
+    # weights are replicated, so the win is bounded by the KV share —
+    # faster than tp=1 but nowhere near 4x
+    assert tp4["continuous_tokens_per_s"] >= base["continuous_tokens_per_s"]
+    assert tp4["continuous_tokens_per_s"] < 4 * base["continuous_tokens_per_s"]
+    assert tp4["per_device_pool_bytes"] == pytest.approx(
+        plan1.total_bytes / 4)
+    assert 0.0 <= tp4["per_device_pool_occupancy"] <= 1.0
+    assert "per_device_pool_bytes" not in base
+    # a per-device plan (built with tp=) plus a tp= knob would divide
+    # the pool bytes twice — rejected, not silently overstated
+    assert plan4.tp == 4
+    with pytest.raises(ValueError):
+        predict_serve_throughput(spec, hw, prec, plan4, tp=4, **kw)
+
+    # a tp that does NOT divide the head counts replicates the pools
+    # (the sharding-layer fallback), so the per-device share must stay
+    # the FULL page — pricing a shard would let budget-driven layouts
+    # overshoot the device by up to tp x
+    odd = spec.with_(num_heads=6, num_kv_heads=3)
+    assert not analytical.tp_shards_kv(odd, 4)
+    assert analytical.tp_shards_kv(spec, 4)
+    pb_odd = analytical.page_bytes(odd, 16, bytes_per=1.0,
+                                   quantized_scales=True)
+    assert analytical.page_bytes(odd, 16, bytes_per=1.0,
+                                 quantized_scales=True, tp=4) == pb_odd
+    plan_odd = analytical.plan_paged_cache(odd, 1e6, bytes_per=1.0,
+                                           quantized_scales=True)
+    tp4_odd = predict_serve_throughput(odd, hw, prec, plan_odd, tp=4, **kw)
+    assert tp4_odd["per_device_pool_bytes"] == pytest.approx(
+        plan_odd.total_bytes)

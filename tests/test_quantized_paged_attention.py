@@ -19,8 +19,9 @@ from repro.configs import ASSIGNED
 from repro.kernels import ops, ref
 from repro.kernels.paged_attention import paged_attention_pallas
 from repro.models import lm
-from repro.quant.quantize import (pack_int4, quantize_kv_int4,
-                                  quantize_kv_int8, unpack_int4)
+from repro.quant.quantize import (lane_major_scales, pack_int4,
+                                  quantize_kv_int4, quantize_kv_int8,
+                                  unpack_int4)
 from repro.serve import paged_cache as pc
 from repro.serve.engine import ServeConfig, generate
 from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
@@ -28,16 +29,18 @@ from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
 
 
 def _quantize_pools(quant, kf, vf):
-    """Float pools -> (k_pages, v_pages, k_scale, v_scale) per layout."""
+    """Float pools -> (k_pages, v_pages, k_scale, v_scale) per layout.
+    Scales come back LANE-MAJOR (P, KV, page) — the pool layout."""
     if quant == "fp32":
         return kf, vf, None, None
     if quant == "int8":
         k8, ks = quantize_kv_int8(kf)
         v8, vs = quantize_kv_int8(vf)
-        return k8, v8, ks, vs
+        return k8, v8, lane_major_scales(ks), lane_major_scales(vs)
     k4, ks = quantize_kv_int4(kf)
     v4, vs = quantize_kv_int4(vf)
-    return pack_int4(k4, axis=1), pack_int4(v4, axis=1), ks, vs
+    return (pack_int4(k4, axis=1), pack_int4(v4, axis=1),
+            lane_major_scales(ks), lane_major_scales(vs))
 
 
 def _pool_fixture(seed=0, B=4, H=4, KV=2, D=16, page=8, pps=3):
@@ -78,8 +81,10 @@ def test_int4_ref_matches_unpacked_fp32_oracle():
     q, kf, vf, bt = _pool_fixture(seed=3)
     lengths = jnp.asarray([7, 13, 2, 24], jnp.int32)
     kp, vp, ks, vs = _quantize_pools("int4", kf, vf)
-    kd = unpack_int4(kp, axis=1).astype(jnp.float32) * ks
-    vd = unpack_int4(vp, axis=1).astype(jnp.float32) * vs
+    kd = unpack_int4(kp, axis=1).astype(jnp.float32) * \
+        jnp.moveaxis(ks, -1, -2)[..., None]
+    vd = unpack_int4(vp, axis=1).astype(jnp.float32) * \
+        jnp.moveaxis(vs, -1, -2)[..., None]
     a = ref.paged_attention_ref(q, kd, vd, bt, lengths)
     b = ref.paged_attention_ref(q, kp, vp, bt, lengths, k_scale=ks, v_scale=vs)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b),
@@ -146,7 +151,8 @@ def test_init_paged_cache_int4_layout():
     entry = cache["groups"][0][0]
     assert entry["k_pages"].shape == (8, 8, spec.num_kv_heads, spec.head_dim)
     assert entry["k_pages"].dtype == jnp.int8
-    assert entry["k_scale"].shape == (8, 16, spec.num_kv_heads, 1)
+    # lane-major scales: token dim last (one (8, 128) f32 tile per page)
+    assert entry["k_scale"].shape == (8, spec.num_kv_heads, 16)
     assert lm.paged_page_size(cache) == 16
     assert lm._paged_quant(entry) == "int4"
     with pytest.raises(ValueError):
