@@ -102,6 +102,24 @@ def _paged_rows(rng, rows):
                 row["bound_fraction"] = round(bound_us / us, 4)
             rows.append(row)
 
+        # speculative-decode verify window: K queries share ONE pass
+        # over the same pages, so the per-COMMITTED-token page traffic
+        # divides by the accepted count — the amortization the
+        # multi-query kernel exists for
+        for wq in (4, 8):
+            qw = jnp.asarray(rng.normal(size=(B, wq, H, D)), jnp.float32)
+            f = jax.jit(lambda a: ref.paged_attention_ref(
+                a, kf, vf, bt, lengths))
+            us = _time(f, qw)
+            pages_bytes = B * pps * page * KV * D * 2 * 4
+            rows.append({
+                "kernel": f"paged_attention_fp32_window{wq}_ref",
+                "M": ctx, "K": KV, "N": D, "us": round(us, 1),
+                "page_bytes_moved": pages_bytes,
+                "page_bytes_per_token_vs_decode": round(1.0 / wq, 3),
+                "weight_max_err": 0.0,
+            })
+
 
 def run():
     rng = np.random.default_rng(0)
@@ -128,5 +146,19 @@ def run():
 
 
 if __name__ == "__main__":
-    for r in run()[2]:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows to PATH as JSON (the "
+                         "BENCH_*.json CI artifacts)")
+    args = ap.parse_args()
+    name, _, rows = run()
+    for r in rows:
         print(r)
+    if args.json:
+        # one writer for every BENCH_*.json artifact (shared schema)
+        try:
+            from benchmarks.serve_throughput import _dump_json
+        except ImportError:           # invoked as a script: sibling import
+            from serve_throughput import _dump_json
+        _dump_json(args.json, name, rows)

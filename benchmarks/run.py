@@ -23,21 +23,38 @@ def tier1() -> None:
     # (cmd, extra env) — the sharded serve smoke forces 8 host devices
     # (jax pins the device count at first init, so it needs its own
     # process env, same mechanism as tests/test_sharding_multidevice.py)
+    kbench = os.path.join(root, "benchmarks", "kernel_bench.py")
     steps = [
         ([sys.executable, "-m", "pytest", "-x", "-q"], {}),
-        ([sys.executable, bench, "--smoke"], {}),
+        ([sys.executable, bench, "--smoke",
+          "--json", "BENCH_serve_throughput.json"], {}),
         ([sys.executable, bench, "--prefix", "--smoke"], {}),
         # quantized-page gate: the prefix-cache invariants (identical
         # outputs ON vs OFF, >=30% prefill-token reduction) must hold
         # with nibble-packed int4 pages too
         ([sys.executable, bench, "--prefix", "--smoke",
-          "--cache-dtype", "int4"], {}),
+          "--cache-dtype", "int4",
+          "--json", "BENCH_serve_prefix_int4.json"], {}),
         # sharded serve gate: the tensor-parallel paged backend
         # (KV-head-sharded int4 pools over 2 devices) must emit
         # token-for-token the single-device continuous outputs
         ([sys.executable, bench, "--smoke", "--devices", "2",
           "--cache-dtype", "int4"],
          {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}),
+        # self-speculative decoding gate: outputs identical to
+        # non-speculative greedy, >= 1.3x decode tokens/s on the
+        # repetitive workload, measured acceptance inside the
+        # predicted band
+        ([sys.executable, bench, "--spec-decode", "--smoke",
+          "--json", "BENCH_serve_spec_decode.json"], {}),
+        # ...and the same gate on the KV-head-sharded int4 backend
+        # (sharded verify windows == single-device sequential greedy)
+        ([sys.executable, bench, "--spec-decode", "--smoke",
+          "--devices", "2", "--cache-dtype", "int4"],
+         {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}),
+        # kernel microbench JSON artifact (page-byte accounting rows)
+        ([sys.executable, kbench, "--json", "BENCH_kernel_bench.json"],
+         {}),
     ]
     for cmd, extra in steps:
         print("+", " ".join(cmd), flush=True)

@@ -1,6 +1,7 @@
-"""Continuous batching vs static ``generate``, plus the shared-prefix gate.
+"""Continuous batching vs static ``generate``, plus the shared-prefix
+and self-speculative-decoding gates.
 
-Two experiments:
+Three experiments:
 
 * default — N requests with prompts spread over 32-512 tokens and
   varied decode budgets.  Static batching pads every batch member to
@@ -17,6 +18,18 @@ Two experiments:
   token-for-token identical, prefill tokens drop >= 30%, and reports
   admitted-occupancy plus the analytical prediction
   (``analytical.prefix_hit_rate`` -> ``predict_serve_throughput``).
+
+* ``--spec-decode`` — the self-speculative decoding gate: a
+  repetitive/templated workload (motif-bearing prompts; tiny-model
+  greedy decode settles into exactly the repetition n-gram prompt
+  lookup drafts) runs with ``spec_k`` = 1 and ``--spec-k`` (default 4).
+  Asserts outputs are token-for-token identical to non-speculative
+  greedy, decode throughput improves >= 1.3x, and the measured draft
+  acceptance sits inside the analytically predicted band (an offline
+  replay of the drafter over the non-speculative token streams —
+  deterministic, so the band is tight up to preemption/batching
+  skew).  Honors ``--cache-dtype`` and ``--devices`` (the sharded
+  speculative engine must still match the single-device K=1 outputs).
 
 Both engines run the workload twice; the second (compile-warm) pass is
 timed.  ``--smoke`` shrinks the workload for CI.  ``--cache-dtype
@@ -241,6 +254,190 @@ def run_prefix(smoke: bool = False, cache_dtype: str = "fp32"):
     return "serve_prefix_cache", results[True]["seconds"] * 1e6, rows
 
 
+def _spec_workload(n: int, n_templates: int, motif_len: int, reps: int,
+                   suffix_lo: int, suffix_hi: int, new_lo: int, new_hi: int,
+                   vocab: int, seed: int = 0):
+    """Repetitive/templated prompts: a short motif tiled ``reps`` times
+    plus a unique tail — the workload class (templated prompts, code,
+    greedy loops) where n-gram prompt lookup drafts well."""
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    motifs = [rng.integers(0, vocab, size=motif_len).astype(np.int32)
+              for _ in range(n_templates)]
+    reqs = []
+    for i in range(n):
+        m = motifs[i % n_templates]
+        suffix = rng.integers(
+            0, vocab, size=int(rng.integers(suffix_lo, suffix_hi + 1))
+        ).astype(np.int32)
+        reqs.append(Request(i, np.concatenate([np.tile(m, reps), suffix]),
+                            int(rng.integers(new_lo, new_hi + 1))))
+    return reqs
+
+
+def _simulate_acceptance(reqs, done, spec_k: int, ngram: int) -> float:
+    """Analytical acceptance prediction: replay each request's known
+    greedy token stream through the same n-gram drafter the scheduler
+    uses, window by window.  Deterministic (no model in the loop), so
+    up to preemption/recompute skew it predicts the engine's measured
+    ``spec_accepted / spec_drafted`` exactly."""
+    from repro.serve.spec_decode import NGramDraftTable
+    drafted = accepted = 0
+    for r, c in zip(reqs, done):
+        table = NGramDraftTable(ngram)
+        table.extend(r.prompt.tolist())
+        toks = [int(t) for t in c.tokens]
+        table.extend(toks[:1])
+        i = 1
+        while i < len(toks):
+            # mirror the scheduler's drafting policy exactly: a window
+            # drafts min(K, remaining)-1 tokens and only when the
+            # request has more than one token of budget left
+            rem = len(toks) - i
+            prop = (table.propose(min(spec_k, rem) - 1) if rem > 1
+                    else [])
+            m = 0
+            while m < len(prop) and prop[m] == toks[i + m]:
+                m += 1
+            ne = min(m + 1, rem)
+            drafted += len(prop)
+            accepted += m
+            table.extend(toks[i:i + ne])
+            i += ne
+    return accepted / max(1, drafted)
+
+
+def run_spec(smoke: bool = False, cache_dtype: str = "fp32",
+             devices: int = 1, spec_k: int = 8):
+    """Self-speculative decoding gate: spec_k=1 vs spec_k=K on the
+    repetitive workload — outputs identical, >= 1.3x decode tokens/s,
+    measured acceptance inside the predicted band, analytical
+    throughput/energy next to it."""
+    from repro.core import hardware, precision
+    from repro.core.latency import predict_serve_throughput
+    from repro.serve.backend import make_backend
+    from repro.serve.paged_cache import plan_for_layout
+    from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                       SchedulerConfig)
+    if smoke:
+        # decode budgets long enough that greedy streams enter their
+        # repetitive tails (where prompt lookup drafts) — the speedup
+        # gate holds in smoke too, it is not informational
+        # big enough that each timed pass dwarfs scheduler/jit dispatch
+        # jitter — at toy sizes the 1.3x floor drowns in machine noise
+        n, slots, motif_len, reps = 10, 4, 8, 3
+        suffix_lo, suffix_hi, new_lo, new_hi = 4, 8, 96, 128
+        max_seq, width, layers = 256, 64, 2
+    else:
+        n, slots, motif_len, reps = 12, 4, 8, 4
+        suffix_lo, suffix_hi, new_lo, new_hi = 4, 12, 96, 128
+        max_seq, width, layers = 256, 64, 2
+    spec, params = _build(width=width, layers=layers)
+    reqs = _spec_workload(n, 4, motif_len, reps, suffix_lo, suffix_hi,
+                          new_lo, new_hi, vocab=256)
+
+    def go(k: int, dev: int):
+        cfg = SchedulerConfig(max_slots=slots, page_size=16, max_seq=max_seq,
+                              kv_budget_bytes=64e6, cache_dtype=cache_dtype,
+                              spec_k=k)
+        backend = make_backend(params, spec, cfg, devices=dev)
+        eng = ContinuousBatchingEngine(params, spec, cfg, backend=backend)
+        done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                        for r in reqs])
+        eng.alloc.check()
+        return eng, done
+
+    variants = ((1, 1), (spec_k, devices))
+    results = {}
+    for k, dev in variants:                   # warm passes: compile
+        go(k, dev)
+    # interleaved min-of-5: machine noise is time-correlated, so pairing
+    # the runs and taking each variant's best keeps the RATIO stable
+    # even when absolute wall time jitters
+    for _ in range(5):
+        for k, dev in variants:
+            t0 = time.perf_counter()
+            eng, done = go(k, dev)
+            dt = time.perf_counter() - t0
+            if k not in results or dt < results[k]["seconds"]:
+                results[k] = {"engine": eng, "done": done, "seconds": dt}
+
+    base, spec_run = results[1], results[spec_k]
+    for a, b in zip(base["done"], spec_run["done"]):
+        if not np.array_equal(a.tokens, b.tokens):
+            raise SystemExit(
+                f"FAIL: spec-decode output mismatch uid {a.uid}: "
+                f"{a.tokens} vs {b.tokens}")
+    st = spec_run["engine"].stats
+    measured_acc = st["spec_accepted"] / max(1, st["spec_drafted"])
+    predicted_acc = _simulate_acceptance(reqs, base["done"], spec_k,
+                                         spec_run["engine"].cfg.spec_ngram)
+    tps = {k: r["engine"].stats["decode_tokens"] / r["seconds"]
+           for k, r in results.items()}
+    speedup = tps[spec_k] / tps[1]
+
+    eng = spec_run["engine"]
+    plan = plan_for_layout(spec, eng.layout, cache_dtype)
+    kw = dict(slots=slots,
+              avg_prompt=float(np.mean([len(r.prompt) for r in reqs])),
+              avg_new=float(np.mean([r.max_new_tokens for r in reqs])))
+    hw, prec = hardware.get("rpi5"), precision.get("fp32")
+    pred = predict_serve_throughput(hw=hw, spec=spec, precision=prec,
+                                    plan=plan, spec_k=spec_k,
+                                    acceptance_rate=predicted_acc, **kw)
+    pred_base = predict_serve_throughput(hw=hw, spec=spec, precision=prec,
+                                         plan=plan, **kw)
+    rows = [
+        {"engine": "spec_off", "cache_dtype": cache_dtype,
+         "decode_tokens": base["engine"].stats["decode_tokens"],
+         "iterations": base["engine"].stats["iterations"],
+         "seconds": base["seconds"], "decode_tokens_per_s": tps[1]},
+        {"engine": f"spec_k{spec_k}", "devices": devices,
+         "decode_tokens": st["decode_tokens"],
+         "iterations": st["iterations"],
+         "spec_drafted": st["spec_drafted"],
+         "spec_accepted": st["spec_accepted"],
+         "preemptions": st["preemptions"],
+         "seconds": spec_run["seconds"],
+         "decode_tokens_per_s": tps[spec_k]},
+        {"engine": "measured", "speedup": speedup,
+         "acceptance_rate": measured_acc,
+         "tokens_per_step": st["decode_tokens"] / max(1, st["iterations"])},
+        {"engine": "analytical", "predicted_acceptance": predicted_acc,
+         "predicted_speedup": pred["continuous_tokens_per_s"]
+         / pred_base["continuous_tokens_per_s"],
+         "expected_tokens_per_step": pred["expected_tokens_per_step"],
+         "energy_j_per_token": pred["energy_j_per_token"]},
+    ]
+    return "serve_spec_decode", spec_run["seconds"] * 1e6, rows, \
+        speedup, measured_acc, predicted_acc
+
+
+def _energy_rows(spec, layout, slots, avg_prompt, avg_new,
+                 tp: int = 1):
+    """Analytical fp32-vs-int4 energy per token at this run's serve
+    operating point (eq. (15) + static board power; rpi5 target) —
+    the paper's 35-50% INT4 band is asserted in
+    tests/test_analytical.py against the fp16 baseline."""
+    from repro.core import hardware, precision
+    from repro.core.latency import predict_serve_throughput
+    from repro.serve.paged_cache import plan_for_layout
+    hw = hardware.get("rpi5")
+    kw = dict(slots=slots, avg_prompt=avg_prompt, avg_new=avg_new, tp=tp)
+    e = {}
+    for prec_name, cd in (("fp32", "fp32"), ("fp16", "fp32"),
+                          ("int4", "int4")):
+        plan = plan_for_layout(spec, layout, cd)
+        e[prec_name] = predict_serve_throughput(
+            spec, hw, precision.get(prec_name), plan, **kw)[
+            "energy_j_per_token"]
+    return {"engine": "analytical_energy", "hw": "rpi5",
+            "fp32_j_per_token": e["fp32"], "fp16_j_per_token": e["fp16"],
+            "int4_j_per_token": e["int4"],
+            "int4_vs_fp32_reduction": 1.0 - e["int4"] / e["fp32"],
+            "int4_vs_fp16_reduction": 1.0 - e["int4"] / e["fp16"]}
+
+
 def run(smoke: bool = False, cache_dtype: str = "fp32", devices: int = 1):
     if smoke:
         n, slots, buckets, new_lo, new_hi = 6, 4, [32, 64, 128], 8, 24
@@ -317,9 +514,23 @@ def run(smoke: bool = False, cache_dtype: str = "fp32", devices: int = 1):
         *extra_rows,
         {"engine": "measured_speedup", "speedup": speedup},
         {"engine": "analytical", **pred},
+        _energy_rows(spec, cont_eng.layout, slots,
+                     float(np.mean([len(r.prompt) for r in reqs])),
+                     float(np.mean([r.max_new_tokens for r in reqs])),
+                     tp=devices),
     ]
     us = results["continuous"]["seconds"] * 1e6
     return "serve_throughput", us, rows
+
+
+def _dump_json(path, name, rows):
+    """Write the benchmark rows as a JSON artifact (CI uploads these so
+    the bench trajectory is inspectable without scraping logs)."""
+    import json
+    with open(path, "w") as f:
+        json.dump({"benchmark": name, "rows": rows}, f, indent=1,
+                  default=float)
+    print(f"[json] wrote {path}")
 
 
 def main():
@@ -329,6 +540,14 @@ def main():
     ap.add_argument("--prefix", action="store_true",
                     help="shared-prefix (prefix-caching) gate instead of "
                          "the mixed-length throughput comparison")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding gate: outputs "
+                         "identical to non-speculative greedy, >= 1.3x "
+                         "decode tokens/s on the repetitive workload, "
+                         "measured vs predicted acceptance")
+    ap.add_argument("--spec-k", type=int, default=8,
+                    help="decode-window width for --spec-decode "
+                         "(1 committed + spec-k-1 drafted tokens)")
     ap.add_argument("--cache-dtype", default="fp32",
                     choices=["fp32", "int8", "int4"],
                     help="paged KV page dtype (int4 = nibble-packed pages "
@@ -338,13 +557,42 @@ def main():
                          "over the KV-head dim of N devices (parity vs "
                          "single-device asserted; on CPU force host "
                          "devices via XLA_FLAGS)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result rows to PATH as JSON "
+                         "(the BENCH_*.json CI artifacts)")
     args = ap.parse_args()
+    if args.spec_decode:
+        if args.spec_k < 2:
+            raise SystemExit("--spec-decode needs --spec-k >= 2")
+        name, us, rows, speedup, acc, pred_acc = run_spec(
+            smoke=args.smoke, cache_dtype=args.cache_dtype,
+            devices=args.devices, spec_k=args.spec_k)
+        print(f"## {name}")
+        for r in rows:
+            print(r)
+        if args.json:
+            _dump_json(args.json, name, rows)
+        band = 0.15
+        if abs(acc - pred_acc) > band:
+            raise SystemExit(
+                f"FAIL: measured acceptance {acc:.2f} outside predicted "
+                f"band {pred_acc:.2f} +- {band}")
+        floor = 1.3
+        status = "PASS" if speedup >= floor else "FAIL"
+        print(f"{status}: spec-decode/greedy decode tokens/s = "
+              f"{speedup:.2f}x (floor {floor}x, outputs identical, "
+              f"acceptance {acc:.2f} vs predicted {pred_acc:.2f})")
+        if speedup < floor:
+            raise SystemExit(1)
+        return
     if args.prefix:
         name, us, rows = run_prefix(smoke=args.smoke,
                                     cache_dtype=args.cache_dtype)
         print(f"## {name}")
         for r in rows:
             print(r)
+        if args.json:
+            _dump_json(args.json, name, rows)
         red = next(r["prefill_token_reduction"] for r in rows
                    if r["engine"] == "measured")
         floor = 0.3
@@ -359,6 +607,8 @@ def main():
     print(f"## {name}")
     for r in rows:
         print(r)
+    if args.json:
+        _dump_json(args.json, name, rows)
     if args.devices > 1:
         print(f"PASS: sharded tp={args.devices} outputs identical to "
               "single-device continuous")

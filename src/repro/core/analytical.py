@@ -271,6 +271,28 @@ def mixed_iteration_flops(spec: ModelSpec, prefill_tokens: int,
     return fl
 
 
+def expected_accepted_tokens(acceptance_rate: float, spec_k: int) -> float:
+    """Expected tokens COMMITTED per speculative decode window.
+
+    A window verifies the last committed token plus ``spec_k - 1``
+    drafted tokens; greedy acceptance commits the matching draft prefix
+    plus one bonus token, so with i.i.d. per-draft acceptance
+    probability ``a`` the emitted count is truncated-geometric:
+    ``E = 1 + a + a^2 + ... + a^(K-1) = (1 - a^K) / (1 - a)``.
+    ``spec_k = 1`` (or a = 0) is the plain decode step: exactly one
+    token.  This is the amortization factor speculative decoding buys
+    on the memory-bound decode roofline — the weights and the slot's
+    KV pages stream ONCE per window regardless of how many tokens it
+    commits.
+    """
+    if spec_k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+    a = min(1.0, max(0.0, acceptance_rate))
+    if a >= 1.0:
+        return float(spec_k)
+    return (1.0 - a ** spec_k) / (1.0 - a)
+
+
 # ---------------------------------------------------------------------------
 # Prefix caching + admission occupancy (serve accounting)
 # ---------------------------------------------------------------------------

@@ -35,6 +35,11 @@ class HardwareSpec:
     u_net: float = 0.70
     e_flop: float = 1.0e-11        # J/FLOP
     e_byte: float = 2.0e-10        # J/byte
+    # Static/idle board draw (W): SoC + DRAM refresh + rails that burn
+    # regardless of work.  Energy-per-token pays this floor for the
+    # whole step duration, which is why measured INT4 energy savings
+    # (paper: 35-50%) sit well below the naive dynamic byte/FLOP ratio.
+    p_static: float = 0.0
     # Peak scaling for reduced precision compute, relative to fp32 peak.
     precision_speedup: Dict[str, float] = None  # type: ignore[assignment]
 
@@ -71,7 +76,7 @@ RPI4 = HardwareSpec(
     net_bw=0.125 * GB,    # 1 GbE
     mem_capacity=8 * GB,
     u_compute=0.50, u_memory=0.55, u_storage=0.85, u_h2d=0.80, u_net=0.70,
-    e_flop=2.0e-10, e_byte=6.0e-10,
+    e_flop=2.0e-10, e_byte=6.0e-10, p_static=2.7,
 )
 
 RPI5 = HardwareSpec(
@@ -83,7 +88,7 @@ RPI5 = HardwareSpec(
     net_bw=0.125 * GB,
     mem_capacity=16 * GB,
     u_compute=0.55, u_memory=0.60, u_storage=0.85, u_h2d=0.80, u_net=0.70,
-    e_flop=1.2e-10, e_byte=4.5e-10,
+    e_flop=1.2e-10, e_byte=4.5e-10, p_static=3.3,
 )
 
 JETSON_ORIN_NANO = HardwareSpec(
@@ -95,7 +100,7 @@ JETSON_ORIN_NANO = HardwareSpec(
     net_bw=1.25 * GB,             # 10 GbE-class
     mem_capacity=8 * GB,
     u_compute=0.45, u_memory=0.65, u_storage=0.80, u_h2d=0.85, u_net=0.70,
-    e_flop=2.5e-11, e_byte=3.0e-10,
+    e_flop=2.5e-11, e_byte=3.0e-10, p_static=7.0,
 )
 
 # The deployment target for the framework itself (assignment constants).

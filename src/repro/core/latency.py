@@ -12,8 +12,9 @@ from dataclasses import dataclass
 from typing import Dict
 
 from repro.core.analytical import (Analysis, PagedCachePlan,
-                                   effective_slots, mean_pages_held,
-                                   mixed_iteration_flops, tp_shards_kv)
+                                   effective_slots, expected_accepted_tokens,
+                                   mean_pages_held, mixed_iteration_flops,
+                                   tp_shards_kv)
 from repro.core.hardware import HardwareSpec
 from repro.core.model_config import ModelSpec
 from repro.core.precision import PrecisionSpec
@@ -74,10 +75,16 @@ class IterationCost:
     ``compute_s`` and ``memory_s`` overlap on real hardware, so the
     iteration time is their max — decode is memory-bound on edge
     (weights re-read every step), prefill adds a compute term.
+    ``decode_tokens`` counts tokens COMMITTED (under speculative decode
+    one iteration commits the accepted window, so it can exceed the
+    live-slot count); ``flops``/``bytes_moved`` carry the raw counts
+    the times were derived from, for the eq.-(15) energy model.
     """
     compute_s: float
     memory_s: float
-    decode_tokens: int             # useful tokens emitted this iteration
+    decode_tokens: float           # useful tokens emitted this iteration
+    flops: float = 0.0
+    bytes_moved: float = 0.0
 
     @property
     def iteration_s(self) -> float:
@@ -93,7 +100,8 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
                          prefill_tokens: int, decode_slots: int,
                          avg_context: float, cached_prefix_tokens: int = 0,
                          params: float | None = None,
-                         tp: int = 1) -> IterationCost:
+                         tp: int = 1, spec_k: int = 1,
+                         acceptance_rate: float = 0.0) -> IterationCost:
     """Analytical cost of one scheduler iteration — predicts continuous
     batching throughput from the same roofline terms as ``breakdown()``.
 
@@ -121,6 +129,18 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
     decode is memory-bound on every edge roofline anyway).  A ``tp``
     that does not divide the head counts replicates the pools (the
     sharding-layer fallback), so it divides nothing here either.
+
+    ``spec_k`` > 1 models self-speculative decoding: every live slot
+    verifies a ``spec_k``-token window per iteration, so the FLOP term
+    charges ``spec_k`` positions per slot (rejected drafts still
+    compute), while the MEMORY term barely moves — the weights stream
+    once per iteration regardless and the multi-query paged kernel
+    reads each context page once for all window queries (the extra
+    window rows written are noise next to the context read).  What
+    changes is the USEFUL-token count: one window commits
+    ``expected_accepted_tokens(acceptance_rate, spec_k)`` tokens, so
+    on the memory-bound decode roofline tokens/s scales almost
+    linearly with the acceptance rate — the whole speculative bet.
     """
     from repro.core import blocks
     if tp > 1 and getattr(plan, "tp", 1) > 1:
@@ -129,15 +149,23 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
             f"{plan.tp}); pass the global plan or drop the tp= argument "
             "— dividing twice would overstate throughput")
     P = params if params is not None else blocks.param_count(spec, padded=False)
-    flops = mixed_iteration_flops(spec, prefill_tokens, decode_slots,
+    flops = mixed_iteration_flops(spec, prefill_tokens,
+                                  decode_slots * spec_k,
                                   avg_context, cached_prefix_tokens)
     kv_bytes = plan.bytes_per_token * (
-        decode_slots * avg_context + prefill_tokens + cached_prefix_tokens
+        decode_slots * (avg_context + spec_k - 1)
+        + prefill_tokens + cached_prefix_tokens
     ) / (tp if tp_shards_kv(spec, tp) else 1)
     weight_bytes = P * precision.bytes_per_param
-    t_comp = flops / (hw.flops_at(precision.name) * hw.u_compute)
+    emitted = decode_slots * expected_accepted_tokens(acceptance_rate, spec_k)
+    # weight-only quantized GEMV unpacks/rescales per use: charge the
+    # dequant overhead as extra compute work (time AND flop energy)
+    eff_flops = flops * precision.dequant_overhead
+    t_comp = eff_flops / (hw.flops_at(precision.name) * hw.u_compute)
     t_mem = (weight_bytes + kv_bytes) / (hw.mem_bw * hw.u_memory)
-    return IterationCost(t_comp, t_mem, decode_slots)
+    return IterationCost(t_comp, t_mem, emitted,
+                         flops=eff_flops,
+                         bytes_moved=weight_bytes + kv_bytes)
 
 
 def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
@@ -145,7 +173,9 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
                              *, slots: int, avg_prompt: float,
                              avg_new: float, prefix_hit_rate: float = 0.0,
                              admission: str = "lazy",
-                             tp: int = 1) -> Dict[str, float]:
+                             tp: int = 1, spec_k: int = 1,
+                             acceptance_rate: float = 0.0
+                             ) -> Dict[str, float]:
     """Steady-state continuous batching vs static-batch throughput.
 
     Static batching pads every slot to the batch max and holds slots
@@ -159,6 +189,20 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     pages written so far, so the same pool carries more concurrent
     requests.  Returns tokens/sec for both plus the ratio — the
     analytical counterpart of ``benchmarks/serve_throughput.py``.
+
+    ``spec_k``/``acceptance_rate`` model self-speculative decoding on
+    the continuous engine (the static baseline stays sequential): each
+    iteration verifies a ``spec_k``-token window per slot and commits
+    ``expected_accepted_tokens(acceptance_rate, spec_k)`` of them — the
+    result gains ``expected_tokens_per_step`` and the speculative
+    amortization shows up directly in ``continuous_tokens_per_s``.
+
+    Every prediction also carries ``energy_j_per_token`` — the
+    eq.-(15) dynamic energy of one iteration plus the board's static
+    draw over its duration, per committed token
+    (``core.energy.serve_energy_per_token``) — so the paper's 35-50%
+    INT4 energy-reduction claim is checkable against the same serve
+    operating point the throughput numbers describe.
 
     ``tp`` is the tensor-parallel degree of the sharded paged backend
     (``plan`` stays the GLOBAL pool): per-device KV traffic drops to
@@ -179,7 +223,8 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
         spec, hw, precision, plan,
         prefill_tokens=int((avg_prompt - hit) * live / max(1.0, avg_new)),
         decode_slots=int(round(live)), avg_context=avg_ctx,
-        cached_prefix_tokens=int(hit * live / max(1.0, avg_new)), tp=tp)
+        cached_prefix_tokens=int(hit * live / max(1.0, avg_new)), tp=tp,
+        spec_k=spec_k, acceptance_rate=acceptance_rate)
     # static: same decode roofline but slots idle in the drain tail --
     # useful-token rate scales by mean/max occupancy (~avg/(2*avg) for a
     # uniform length spread) and every context pads to the batch max.
@@ -188,11 +233,20 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
         prefill_tokens=int(avg_prompt * slots / max(1.0, 2 * avg_new)),
         decode_slots=slots, avg_context=avg_prompt + avg_new, tp=tp)
     static_tps = stat.tokens_per_s * 0.5
+    from repro.core.energy import serve_energy_per_token
     out = {"continuous_tokens_per_s": cont.tokens_per_s,
            "static_tokens_per_s": static_tps,
            "speedup": cont.tokens_per_s / max(1e-12, static_tps),
            "effective_slots": live,
-           "prefix_hit_rate": min(1.0, max(0.0, prefix_hit_rate))}
+           "prefix_hit_rate": min(1.0, max(0.0, prefix_hit_rate)),
+           "energy_j_per_token": serve_energy_per_token(
+               cont.flops, cont.bytes_moved, cont.iteration_s,
+               cont.decode_tokens, hw, precision)}
+    if spec_k > 1:
+        out["spec_k"] = float(spec_k)
+        out["acceptance_rate"] = min(1.0, max(0.0, acceptance_rate))
+        out["expected_tokens_per_step"] = expected_accepted_tokens(
+            acceptance_rate, spec_k)
     if tp > 1:
         held = mean_pages_held(avg_prompt, avg_new, plan.page_size, admission)
         kv_shard = tp if tp_shards_kv(spec, tp) else 1

@@ -91,7 +91,11 @@ def _resolve_paged_impl(impl: str) -> str:
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     window: int = 0, scale: Optional[float] = None,
                     k_scale=None, v_scale=None, impl: str = "auto"):
-    """Paged decode attention: q (B, H, D) against a page pool.
+    """Paged decode attention: q (B, H, D) against a page pool — or
+    q (B, K, H, D) for a K-token decode window (the speculative-decode
+    verify step; ``lengths`` then counts the context INCLUDING the
+    window and query j attends positions <= lengths - K + j, causal
+    inside the window).
 
     Quantized pages are the FAST path: on TPU ``auto`` dispatches fp32,
     int8 (lane-major ``k_scale``/``v_scale`` (P, KV, page) f32), and
@@ -137,7 +141,10 @@ def paged_attention_sharded(mesh, q, k_pages, v_pages, block_tables,
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.parallel.compress import shard_map_compat
-    qs = P(None, axis, None)                      # q/output: heads sharded
+    # q/output heads sharded; a 4-D q is the K-token decode window
+    # (B, K, H, D) — same head axis, one extra replicated window dim
+    qs = (P(None, None, axis, None) if q.ndim == 4
+          else P(None, axis, None))
     ps = P(None, None, axis, None)                # pools: KV-head dim
     ss = P(None, axis, None)                      # lane-major scales
     bs, ls = P(None, None), P(None)

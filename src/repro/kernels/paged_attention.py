@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: paged decode attention (one query token per slot).
+"""Pallas TPU kernel: paged decode attention (single- or multi-query).
 
 The serve scheduler stores KV in fixed-size pages owned by a block
 table per slot (vLLM-style), so decode never touches padding beyond a
@@ -6,6 +6,20 @@ slot's live context.  The kernel streams one page per grid step along
 the 'arbitrary' dim; the block table and per-slot lengths ride in as
 scalar-prefetch operands so the K/V index maps can chase page ids
 (``bt_ref[b, p]``) when scheduling DMAs.
+
+Two kernel bodies share the page-dequant plumbing:
+
+* ``_paged_kernel`` — ONE query token per slot (the classic decode
+  step), q (B, H, D).
+* ``_paged_window_kernel`` — a K-token DECODE WINDOW per slot
+  (q (B, K, H, D)): the speculative-decoding verify step scores all K
+  drafted positions in one pass, causally masked inside the window
+  (query j sits at absolute position ``lengths[b] - K + j``).  Each
+  page's K/V block crosses HBM ONCE for all K queries — that K-way
+  amortization of page (and, one level up, weight) traffic is the
+  whole speculative-decode win on a memory-bound decode roofline.
+  The window is unrolled in python (K is a small static 2..8), so
+  every per-query op stays on leading, untiled dims.
 
 Online softmax carries (m, l, acc) scratch across pages, exactly like
 ``flash_attention.py`` — a fully-masked slot (length 0) emits zeros.
@@ -65,6 +79,23 @@ def _unpack_nibbles(packed: jnp.ndarray, page: int) -> jnp.ndarray:
     return inter.reshape(page, *packed.shape[1:]).astype(jnp.float32)
 
 
+def _dequant_page(k_ref, v_ref, ks_ref, vs_ref, quant: str, page: int):
+    """Materialize one page's K/V block as f32 (page, KV, D) in VMEM —
+    shared by the single-query and window kernels.  Quantized pages
+    cross HBM narrow and dequantize here; scale blocks are lane-major
+    (KV, page) and transpose to broadcast over (page, KV, D)."""
+    if quant == "none":
+        return k_ref[0].astype(jnp.float32), v_ref[0].astype(jnp.float32)
+    ks = jnp.swapaxes(ks_ref[0], 0, 1)[:, :, None]
+    vs = jnp.swapaxes(vs_ref[0], 0, 1)[:, :, None]
+    if quant == "int8":
+        # dequant in VMEM: the page crossed HBM as 1 byte/value
+        return (k_ref[0].astype(jnp.float32) * ks,
+                v_ref[0].astype(jnp.float32) * vs)
+    return (_unpack_nibbles(k_ref[0], page) * ks,          # int4
+            _unpack_nibbles(v_ref[0], page) * vs)
+
+
 def _paged_kernel(bt_ref, len_ref, q_ref, *rest, scale: float, page: int,
                   n_pages: int, window: int, kv_heads: int, grp: int,
                   quant: str):
@@ -84,21 +115,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, *rest, scale: float, page: int,
 
     length = len_ref[b]
     q = q_ref[0].astype(jnp.float32) * scale              # (H, D)
-    if quant == "none":
-        k = k_ref[0].astype(jnp.float32)                  # (page, KV, D)
-        v = v_ref[0].astype(jnp.float32)
-    else:
-        # scale blocks are lane-major (KV, page): transpose to broadcast
-        # over (page, KV, D) — one (8, 128) tile per page, not per token
-        ks = jnp.swapaxes(ks_ref[0], 0, 1)[:, :, None]
-        vs = jnp.swapaxes(vs_ref[0], 0, 1)[:, :, None]
-        if quant == "int8":
-            # dequant in VMEM: the page crossed HBM as 1 byte/value
-            k = k_ref[0].astype(jnp.float32) * ks
-            v = v_ref[0].astype(jnp.float32) * vs
-        else:                                             # int4
-            k = _unpack_nibbles(k_ref[0], page) * ks
-            v = _unpack_nibbles(v_ref[0], page) * vs
+    k, v = _dequant_page(k_ref, v_ref, ks_ref, vs_ref, quant, page)
     D = q.shape[-1]
     qg = q.reshape(kv_heads, grp, D)
     s = jnp.einsum("kgd,tkd->kgt", qg, k,
@@ -127,6 +144,61 @@ def _paged_kernel(bt_ref, len_ref, q_ref, *rest, scale: float, page: int,
             kv_heads * grp, D).astype(o_ref.dtype)
 
 
+def _paged_window_kernel(bt_ref, len_ref, q_ref, *rest, scale: float,
+                         page: int, n_pages: int, window: int, kv_heads: int,
+                         grp: int, quant: str, wq: int):
+    """K-query decode-window body: per-query online-softmax state in a
+    leading ``wq`` scratch dim, one K/V page load shared by all K
+    queries.  Query j attends absolute positions <= length - wq + j
+    (``length`` counts the whole window), so the window masks causally
+    against itself; the sliding window is applied per query position.
+    """
+    if quant == "none":
+        k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = rest
+        ks_ref = vs_ref = None
+    else:
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    base = len_ref[b] - wq                  # abs position of query j=0
+    k, v = _dequant_page(k_ref, v_ref, ks_ref, vs_ref, quant, page)
+    D = q_ref.shape[-1]
+    # (wq, H, D) -> (wq, KV, G, D): leading-dim split only
+    qg = (q_ref[0].astype(jnp.float32) * scale).reshape(
+        wq, kv_heads, grp, D)
+    tok = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    for j in range(wq):                     # static unroll: wq is 2..8
+        s = jnp.einsum("kgd,tkd->kgt", qg[j], k,
+                       preferred_element_type=jnp.float32)
+        valid = tok <= base + j
+        if window:
+            valid &= (base + j - tok) < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[j]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        e = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[j] = alpha * l_ref[j] + jnp.sum(e, axis=-1, keepdims=True)
+        acc_ref[j] = acc_ref[j] * alpha + jnp.einsum(
+            "kgt,tkd->kgd", e, v, preferred_element_type=jnp.float32)
+        m_ref[j] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _done():
+        for j in range(wq):
+            l = l_ref[j]
+            safe = jnp.where(l == 0.0, 1.0, l)
+            o_ref[0, j] = (acc_ref[j] / safe).reshape(
+                kv_heads * grp, D).astype(o_ref.dtype)
+
+
 def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                            lengths: jnp.ndarray, *, window: int = 0,
@@ -134,12 +206,18 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
                            k_scale: jnp.ndarray | None = None,
                            v_scale: jnp.ndarray | None = None,
                            interpret: bool = False) -> jnp.ndarray:
-    """q: (B, H, D); k_pages/v_pages: (P, page, KV, D) float — or int8
-    with lane-major ``k_scale``/``v_scale`` (P, KV, page) f32, or
-    nibble-packed int4 (P, page//2, KV, D) (packing inferred from the
-    scale's token dim); block_tables: (B, pages_per_slot) int32;
-    lengths: (B,) int32."""
-    B, H, D = q.shape
+    """q: (B, H, D) single-query, or (B, K, H, D) for a K-token decode
+    window (``lengths`` then counts the context INCLUDING the window;
+    query j attends positions <= lengths - K + j); k_pages/v_pages:
+    (P, page, KV, D) float — or int8 with lane-major
+    ``k_scale``/``v_scale`` (P, KV, page) f32, or nibble-packed int4
+    (P, page//2, KV, D) (packing inferred from the scale's token dim);
+    block_tables: (B, pages_per_slot) int32; lengths: (B,) int32."""
+    if q.ndim == 4:
+        B, WQ, H, D = q.shape
+    else:
+        WQ = 0                                # single-query kernel
+        B, H, D = q.shape
     KV = k_pages.shape[2]
     if k_scale is not None:
         page = k_scale.shape[-1]
@@ -155,7 +233,29 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     grp = H // KV
     sc = scale if scale is not None else 1.0 / (D ** 0.5)
 
-    q_spec = pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0))
+    if WQ:
+        q_spec = pl.BlockSpec((1, WQ, H, D),
+                              lambda b, p, bt, ln: (b, 0, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((B, WQ, H, D), q.dtype)
+        scratch = [
+            pltpu.VMEM((WQ, KV, grp, 1), jnp.float32),    # running max
+            pltpu.VMEM((WQ, KV, grp, 1), jnp.float32),    # running denom
+            pltpu.VMEM((WQ, KV, grp, D), jnp.float32),    # accumulator
+        ]
+        kernel = functools.partial(
+            _paged_window_kernel, scale=sc, page=page, n_pages=n_pages,
+            window=window, kv_heads=KV, grp=grp, quant=quant, wq=WQ)
+    else:
+        q_spec = pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((B, H, D), q.dtype)
+        scratch = [
+            pltpu.VMEM((KV, grp, 1), jnp.float32),        # running max
+            pltpu.VMEM((KV, grp, 1), jnp.float32),        # running denom
+            pltpu.VMEM((KV, grp, D), jnp.float32),        # accumulator
+        ]
+        kernel = functools.partial(
+            _paged_kernel, scale=sc, page=page, n_pages=n_pages,
+            window=window, kv_heads=KV, grp=grp, quant=quant)
     kv_spec = pl.BlockSpec((1, k_pages.shape[1], KV, D),
                            lambda b, p, bt, ln: (bt[b, p], 0, 0, 0))
     in_specs = [q_spec, kv_spec]
@@ -175,24 +275,17 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         num_scalar_prefetch=2,            # block_tables, lengths
         grid=(B, n_pages),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((KV, grp, 1), jnp.float32),        # running max
-            pltpu.VMEM((KV, grp, 1), jnp.float32),        # running denom
-            pltpu.VMEM((KV, grp, D), jnp.float32),        # accumulator
-        ],
+        out_specs=q_spec,
+        scratch_shapes=scratch,
     )
-    kernel = functools.partial(
-        _paged_kernel, scale=sc, page=page, n_pages=n_pages,
-        window=window, kv_heads=KV, grp=grp, quant=quant)
     from repro.kernels.ops import _compiler_params  # lazy: avoid import cycle
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        out_shape=out_shape,
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-        name=f"paged_attention_decode_{quant}",
+        name=f"paged_attention_decode_{quant}" + (f"_w{WQ}" if WQ else ""),
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       *operands)

@@ -61,7 +61,17 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     same full-token-dim scales (packing is inferred from the shape
     mismatch).  Pages are dequantized after the gather — the fp32
     materialization the Pallas kernel exists to avoid.
+
+    A 4-D q (B, K, H, D) is the MULTI-QUERY decode window (speculative
+    verify): query j of slot b sits at absolute position
+    ``lengths[b] - K + j``, so the window is causally masked inside
+    itself and the result is (B, K, H, D) — see
+    ``paged_attention_window_ref``.
     """
+    if q.ndim == 4:
+        return paged_attention_window_ref(
+            q, k_pages, v_pages, block_tables, lengths, window=window,
+            scale=scale, k_scale=k_scale, v_scale=v_scale)
     from repro.quant.quantize import unpack_int4
     B, H, D = q.shape
     KV = k_pages.shape[2]
@@ -94,6 +104,61 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     p = e / jnp.where(l == 0.0, 1.0, l)
     out = jnp.einsum("bkgt,btkd->bkgd", p, v)
     return out.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_attention_window_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray,
+                               block_tables: jnp.ndarray,
+                               lengths: jnp.ndarray, *, window: int = 0,
+                               scale: Optional[float] = None,
+                               k_scale: Optional[jnp.ndarray] = None,
+                               v_scale: Optional[jnp.ndarray] = None
+                               ) -> jnp.ndarray:
+    """Multi-query paged decode attention: a K-token step window per slot.
+
+    q: (B, K, H, D) — K consecutive query tokens whose k/v rows are
+    already scattered into the pool; ``lengths`` counts the context
+    INCLUDING the whole window, so query j's absolute position is
+    ``lengths[b] - K + j`` and it attends tokens at positions
+    ``<= lengths[b] - K + j`` (causal inside the window).  K=1 is
+    exactly ``paged_attention_ref``.  Quantized-page handling (int8
+    pages + lane-major scales, nibble-packed int4) is identical to the
+    single-query path.  The speculative-decode verify step runs all K
+    drafted positions through this in ONE pass, which is what amortizes
+    the page (and weight) traffic K-ways.
+    """
+    from repro.quant.quantize import unpack_int4
+    B, K, H, D = q.shape
+    KV = k_pages.shape[2]
+    page = k_scale.shape[-1] if k_scale is not None else k_pages.shape[1]
+    if k_scale is not None and k_pages.shape[1] != page:     # packed int4
+        k_pages = unpack_int4(k_pages, axis=1)
+        v_pages = unpack_int4(v_pages, axis=1)
+    G = H // KV
+    sc = scale if scale is not None else 1.0 / (D ** 0.5)
+    k = k_pages[block_tables].astype(jnp.float32)      # (B, n, page, KV, D)
+    v = v_pages[block_tables].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * jnp.moveaxis(k_scale[block_tables], -1, -2)[..., None]
+    if v_scale is not None:
+        v = v * jnp.moveaxis(v_scale[block_tables], -1, -2)[..., None]
+    S = block_tables.shape[1] * page
+    k = k.reshape(B, S, KV, D)
+    v = v.reshape(B, S, KV, D)
+    qg = q.reshape(B, K, KV, G, D).astype(jnp.float32) * sc
+    s = jnp.einsum("bjkgd,btkd->bjkgt", qg, k)         # (B, K, KV, G, S)
+    q_abs = lengths[:, None] - K + jnp.arange(K)[None]           # (B, K)
+    idx = jnp.arange(S)[None, None]
+    valid = idx <= q_abs[..., None]                              # (B, K, S)
+    if window:
+        valid &= (q_abs[..., None] - idx) < window
+    s = jnp.where(valid[:, :, None, None], s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m) * valid[:, :, None, None]
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.where(l == 0.0, 1.0, l)
+    out = jnp.einsum("bjkgt,btkd->bjkgd", p, v)
+    return out.reshape(B, K, H, D).astype(q.dtype)
 
 
 def quantize_rowwise_ref(x: jnp.ndarray, bits: int = 8):

@@ -5,10 +5,12 @@ Local mode runs a reduced config end-to-end — the paper's deployment
 scenario (INT8/INT4 weight-only) on real arrays.  ``--engine paged``
 drives the full scheduler stack (paged KV cache, prefix store, lazy
 allocation/preemption) instead of the static ``engine.generate`` path;
-``--cache-dtype {fp32,int8,int4}`` picks the page precision and
+``--cache-dtype {fp32,int8,int4}`` picks the page precision,
 ``--devices N`` serves the pool tensor-parallel over N devices
 (KV-head-sharded ``ShardedPagedBackend`` — on CPU run under
-``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``), and
+``--spec-k K`` turns on self-speculative decoding (n-gram prompt-lookup
+drafts verified K tokens per step; outputs stay token-for-token greedy).
 """
 from __future__ import annotations
 
@@ -64,7 +66,8 @@ def _run_paged(args, spec, params):
     cfg = SchedulerConfig(
         max_slots=min(8, args.batch), page_size=16,
         max_seq=args.prompt_len + args.steps + 16,
-        kv_budget_bytes=64e6, cache_dtype=args.cache_dtype)
+        kv_budget_bytes=64e6, cache_dtype=args.cache_dtype,
+        spec_k=args.spec_k)
     backend = make_backend(params, spec, cfg, devices=args.devices)
     eng = ContinuousBatchingEngine(params, spec, cfg, backend=backend)
     t0 = time.time()
@@ -74,13 +77,21 @@ def _run_paged(args, spec, params):
     usable = eng.layout.num_pages - 1
     occ = eng.stats["occupancy_sum"] / max(1, eng.stats["iterations"])
     print(f"[serve] paged engine ({args.cache_dtype} pages, "
-          f"tp={backend.tp}): {len(done)} requests, {tok} tokens in "
-          f"{dt:.2f}s ({tok / dt:.1f} tok/s)")
+          f"tp={backend.tp}, spec_k={cfg.spec_k}): {len(done)} requests, "
+          f"{tok} tokens in {dt:.2f}s ({tok / dt:.1f} tok/s)")
     print(f"[serve] pool: {eng.layout.num_pages} pages x "
           f"{eng.layout.page_size} tok, mean occupancy {occ:.2f}, "
           f"preemptions {int(eng.stats['preemptions'])}, "
           f"prefix hits {int(eng.stats['prefix_hit_tokens'])} tok "
           f"({usable} usable pages)")
+    if cfg.spec_k > 1:
+        st = eng.stats
+        acc = st["spec_accepted"] / max(1, st["spec_drafted"])
+        print(f"[serve] spec decode: {int(st['spec_steps'])} windows, "
+              f"{int(st['spec_accepted'])}/{int(st['spec_drafted'])} drafts "
+              f"accepted ({acc:.2f}), "
+              f"{st['decode_tokens'] / max(1, st['iterations']):.2f} "
+              "tokens/iteration")
     print(np.stack([c.tokens[:8] for c in done[:4]]))
 
 
@@ -107,6 +118,10 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="tensor-parallel degree for the paged engine "
                          "(KV-head-sharded page pool)")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="self-speculative decode window for the paged "
+                         "engine: verify up to K tokens per step from "
+                         "n-gram prompt-lookup drafts (1 = off)")
     args = ap.parse_args()
 
     spec = ARCHS[args.arch]

@@ -644,6 +644,60 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
     return out, new_kv
 
 
+def _attn_decode_window_paged(spec, p, x, pos, lens, kv, block_tables, *,
+                              kind, mesh=None) -> Tuple[jnp.ndarray, Dict]:
+    """Paged attention for a K-token DECODE WINDOW (speculative verify).
+
+    ``x`` is (B, K, d): the last committed token plus K-1 drafted
+    tokens per slot; ``pos`` (B,) the context length BEFORE the window
+    (token j lands at absolute position ``pos + j``); ``lens`` (B,) how
+    many window positions are real for each slot — rows past ``lens``
+    are padding whose K/V scatter routes to the null page and whose
+    logits the caller ignores (slots whose draft missed run a shorter
+    window inside the same fixed-shape step).  All K rows scatter
+    before the attention, so the multi-query paged op reads the window
+    causally from the SAME pages sequential decode would (bitwise-equal
+    values: per-token quantization, per-position rope), which is what
+    makes draft verification exact.  ``mesh`` runs the attention
+    tensor-parallel per KV-head shard exactly as the single-query path.
+    """
+    from repro.kernels import ops as kops
+    B, K = x.shape[:2]
+    H, KV, D = spec.num_heads, spec.num_kv_heads, spec.head_dim
+    page = kv["k_scale"].shape[-1] if "k_scale" in kv else kv["k_pages"].shape[1]
+    q = qdot(x, p["wq"]).reshape(B, K, H, D)
+    k = qdot(x, p["wk"]).reshape(B, K, KV, D)
+    v = qdot(x, p["wv"]).reshape(B, K, KV, D)
+    posb = pos[:, None] + jnp.arange(K)[None]            # (B, K) absolute
+    q = L.rope(q, posb, spec.rope_theta)
+    k = L.rope(k, posb, spec.rope_theta)
+
+    valid = jnp.arange(K)[None] < lens[:, None]          # (B, K)
+    page_idx = jnp.minimum(posb // page, block_tables.shape[1] - 1)
+    tgt_page = jnp.where(
+        valid, block_tables[jnp.arange(B)[:, None], page_idx], 0)
+    tgt_off = posb % page
+    new_kv = dict(kv)
+    for name, rows in (("k", k), ("v", v)):
+        new_kv.update(_scatter_kv_rows(
+            kv, name, rows.reshape(B * K, KV, D),
+            tgt_page.reshape(-1), tgt_off.reshape(-1)))
+
+    window = spec.sliding_window if kind == "attn_local" else 0
+    if mesh is not None:
+        o = kops.paged_attention_sharded(
+            mesh, q, new_kv["k_pages"], new_kv["v_pages"],
+            block_tables, pos + K, window=window,
+            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
+    else:
+        o = kops.paged_attention(
+            q, new_kv["k_pages"], new_kv["v_pages"], block_tables,
+            pos + K, window=window,
+            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
+    out = qdot(o.reshape(B, K, H * D), p["wo"])
+    return out, new_kv
+
+
 def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
                        tgt_page, tgt_off, *, kind, mesh=None):
     """Attention for a prompt SUFFIX against cached prefix pages.
@@ -816,6 +870,52 @@ def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
         new_groups.append(new_layers)
     logits = _lm_head(params, spec, x)
     new_cache = {"pos": pos + 1, "block_tables": bt, "groups": new_groups}
+    return logits, new_cache
+
+
+def decode_window_paged(params, spec: ModelSpec, cache, tokens, lens, *,
+                        mesh=None) -> Tuple[jnp.ndarray, Params]:
+    """K-token decode window over a paged cache (speculative verify).
+
+    ``tokens`` is (B, K): the last committed token followed by K-1
+    drafted tokens per slot; ``lens`` (B,) how many of the K are real
+    (draft misses run shorter windows inside the same compiled shape).
+    Returns logits for ALL K positions (B, K, vocab) — position j's
+    logits are exactly what sequential ``decode_step_paged`` would
+    produce after committing tokens[:, :j+1] — and the cache with every
+    real window row scattered into the pool but ``pos`` UNCHANGED: the
+    caller decides how many drafts were accepted and advances ``pos``
+    by that many (the rollback that keeps rejected-draft KV outside the
+    valid context; those rows are overwritten before they can ever be
+    read).  K=1 with ``lens=1`` degenerates to ``decode_step_paged``
+    minus the pos advance — the serve backend keeps K=1 on the original
+    path so the non-speculative program is byte-identical.
+    """
+    pos = cache["pos"]
+    bt = cache["block_tables"]
+    x = jnp.take(params["global"]["embed"], tokens, axis=0)
+    if spec.name.startswith("gemma"):
+        x = x * math.sqrt(spec.d_model)
+    new_groups = []
+    for g, gp, cg in zip(group_plan(spec), params["groups"], cache["groups"]):
+        base = _base_kind(g.kind)
+        new_layers = []
+        for li, cslice in enumerate(cg):
+            pslice = jax.tree_util.tree_map(lambda v: v[li], gp)
+            xn = L.norm(spec, pslice, "norm1", x)
+            h, kv_new = _attn_decode_window_paged(
+                spec, pslice, xn, pos, lens, cslice, bt, kind=base, mesh=mesh)
+            y = x + h
+            y2 = L.norm(spec, pslice, "norm2", y)
+            if "router_w" in pslice:
+                h2, _ = L.moe_block(spec, pslice, y2, group_size=y2.shape[0])
+            else:
+                h2 = L.mlp_block(spec, pslice, y2)
+            x = y + h2
+            new_layers.append(kv_new)
+        new_groups.append(new_layers)
+    logits = _lm_head(params, spec, x)
+    new_cache = {"pos": pos, "block_tables": bt, "groups": new_groups}
     return logits, new_cache
 
 

@@ -10,21 +10,37 @@ KV-head dim of the ``model`` mesh axis, block tables replicated,
 Pallas paged attention invoked per shard via ``shard_map``; weights
 replicated so output is token-for-token the single-device engine).
 
+With ``SchedulerConfig.spec_k > 1`` the engine decodes SELF-
+SPECULATIVELY: each slot drafts up to ``spec_k - 1`` tokens from its
+own context (n-gram prompt lookup, ``serve.spec_decode`` — no second
+model), one multi-query paged decode step verifies the whole window
+(``models.lm.decode_window_paged`` -> the K-query Pallas kernel), and
+greedy acceptance commits the matching prefix plus a bonus token.
+Emissions are token-for-token the ``spec_k = 1`` greedy engine —
+speculation changes how many tokens an iteration commits, never which.
+
 Paged KV precision support matrix (``SchedulerConfig.cache_dtype`` x
-backend) — every cell is exercised by tier-1 tests / the CI serve
-smokes (prefill, decode, prefix-cache, CoW per cell; sharded cells add
-preemption + recompute parity in
-tests/test_serve_backend_multidevice.py):
+backend x decode mode) — every cell is exercised by tier-1 tests / the
+CI serve smokes (prefill, decode, prefix-cache, CoW per cell; sharded
+cells add preemption + recompute parity in
+tests/test_serve_backend_multidevice.py; spec-decode cells assert
+token identity with the non-speculative engine in
+tests/test_spec_decode.py and the ``--spec-decode`` benchmark gate):
 
 =========  ==========================  ===============================
 dtype      single device (tp=1)        sharded (tp=2 / tp=4)
 =========  ==========================  ===============================
-``fp32``   yes (all 4 paths)           yes — token-identical to tp=1
-``int8``   yes (all 4 paths)           yes — token-identical to tp=1
+``fp32``   yes (all 4 paths;           yes — token-identical to tp=1
+           spec_k windows identical    (spec_k windows per shard,
+           to greedy)                  identical to tp=1 greedy)
+``int8``   yes (all 4 paths;           yes — token-identical to tp=1
+           spec_k windows identical
+           to greedy)
 ``int4``   yes (nibble-packed pages;   yes — token-identical to tp=1
            mid-byte splits RMW-        (packed pools + scale pages
-           preserve the neighbour      shard on the KV-head dim)
-           token)
+           preserve the neighbour      shard on the KV-head dim;
+           token; window scatters      spec_k gate in CI)
+           split by offset parity)
 =========  ==========================  ===============================
 
 KV-head counts the model axis does not divide fall back to replicated
@@ -56,3 +72,4 @@ from repro.serve.paged_cache import (PageAllocator, PrefixCache, PrefixMatch,
                                      plan_for_layout)
 from repro.serve.scheduler import (Completion, ContinuousBatchingEngine,
                                    Request, SchedulerConfig)
+from repro.serve.spec_decode import NGramDraftTable

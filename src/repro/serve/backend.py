@@ -102,6 +102,33 @@ def _decode_fn(params, cache, tokens, active, *, spec, mesh=None):
     return jnp.argmax(logits[:, 0], axis=-1), cache
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "mesh"),
+                   donate_argnums=(1,))
+def _decode_window_fn(params, cache, tokens, active, lens, *, spec,
+                      mesh=None):
+    """Fused speculative verify step: score a K-token window per slot
+    (last committed token + K-1 drafts), greedy-accept drafts ON DEVICE,
+    and advance each slot's pos by exactly the emitted count — the
+    rollback that keeps rejected-draft KV outside the valid context.
+    Returns (out (B, K) greedy tokens per window position, n_emit (B,)
+    how many of them are committed: accepted drafts + the bonus token).
+    Acceptance compares the drafted token at window position j+1 with
+    the verified argmax at position j, so every emitted token is
+    token-for-token what sequential greedy decode would produce.
+    """
+    pos0 = cache["pos"]
+    logits, cache = lm.decode_window_paged(params, spec, cache, tokens,
+                                           lens, mesh=mesh)
+    out = jnp.argmax(logits, axis=-1)                       # (B, K)
+    K = tokens.shape[1]
+    j = jnp.arange(K - 1)
+    ok = (tokens[:, 1:] == out[:, :-1]) & (j[None] < lens[:, None] - 1)
+    accepted = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    n_emit = (accepted + 1) * active
+    cache["pos"] = (pos0 + n_emit) * active                 # pin inactive at 0
+    return out, n_emit, cache
+
+
 class PagedKVBackend:
     """Interface the scheduler drives; implementations own the device
     cache pytree and the jitted steps.  All token returns are host ints
@@ -125,8 +152,21 @@ class PagedKVBackend:
         """Suffix-only prefill against cached prefix pages."""
         raise NotImplementedError
 
-    def decode(self, tokens: np.ndarray, active: np.ndarray) -> np.ndarray:
-        """One batched decode step; returns (B,) sampled next tokens."""
+    def decode(self, tokens: np.ndarray, active: np.ndarray,
+               lens: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """One batched decode step over a K-token window.
+
+        ``tokens`` is (B, K): each active slot's last committed token
+        followed by up to K-1 speculatively drafted tokens; ``lens``
+        (B,) counts the real window positions per slot (None means the
+        plain non-speculative step: K == 1, one token per slot).
+        Returns ``(out, n_emit)``: ``out`` (B, K) the greedy token at
+        every verified window position and ``n_emit`` (B,) how many of
+        them each slot commits this step (always 1 on the K=1 path,
+        accepted drafts + 1 under speculation).  K=1 with ``lens=None``
+        runs the exact pre-speculative program.
+        """
         raise NotImplementedError
 
     def copy_page(self, src_page: int, dst_page: int) -> None:
@@ -167,6 +207,8 @@ class SingleDeviceBackend(PagedKVBackend):
                                              mesh=self.mesh)
         self._decode = functools.partial(_decode_fn, spec=spec,
                                          mesh=self.mesh)
+        self._decode_window = functools.partial(_decode_window_fn, spec=spec,
+                                                mesh=self.mesh)
 
     def _init_cache(self):
         """Build the paged device cache; subclasses override to create
@@ -191,10 +233,18 @@ class SingleDeviceBackend(PagedKVBackend):
             jnp.asarray(bt_row), n_prefix_pages=n_prefix_pages)
         return int(tok0)
 
-    def decode(self, tokens, active) -> np.ndarray:
-        nxt, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(active))
-        return np.asarray(nxt)
+    def decode(self, tokens, active, lens=None):
+        if tokens.shape[1] == 1 and lens is None:
+            # the pre-speculative path, byte-identical program: K=1 must
+            # bitwise-reproduce the sequential engine
+            nxt, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(active))
+            return np.asarray(nxt)[:, None], np.asarray(active, np.int32)
+        out, n_emit, self.cache = self._decode_window(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(active), jnp.asarray(lens))
+        return np.asarray(out), np.asarray(n_emit)
 
     def copy_page(self, src_page: int, dst_page: int) -> None:
         self.cache = pc.copy_page(self.cache, src_page, dst_page)

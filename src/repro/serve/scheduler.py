@@ -30,7 +30,21 @@ runs the vLLM-style alternative on top of the paged KV cache:
   resumes the sequence exactly, and its re-run prefill hits the cached
   prefix);
 * finished slots free their page references immediately and the next
-  queued request takes the slot on the same iteration.
+  queued request takes the slot on the same iteration;
+* with ``spec_k > 1`` every iteration runs SELF-SPECULATIVE decoding:
+  each live slot drafts up to ``spec_k - 1`` tokens from its own
+  context (n-gram prompt lookup, ``serve.spec_decode.NGramDraftTable``
+  — no second model), the whole window is verified in ONE multi-query
+  paged decode step (``models.lm.decode_window_paged``), and greedy
+  acceptance commits the matching prefix plus one bonus token.  Slots
+  whose lookup misses simply run a 1-token window inside the same
+  fixed-shape step, and the slot's position only advances over ACCEPTED
+  tokens, so rejected-draft KV never enters the valid context.  Decode
+  is memory-bound on every edge roofline the paper profiles (weights +
+  pages re-read per step), so each accepted token amortizes that
+  traffic — emissions stay token-for-token identical to ``spec_k=1``
+  greedy decode (asserted in tests/test_spec_decode.py and the
+  ``benchmarks/serve_throughput.py --spec-decode`` gate).
 
 Greedy decoding matches per-request static ``generate`` token-for-token
 with prefix caching on or off (asserted in tests/test_prefix_cache.py),
@@ -56,6 +70,7 @@ import numpy as np
 from repro.core.model_config import ModelSpec
 from repro.serve import paged_cache as pc
 from repro.serve.backend import PagedKVBackend, SingleDeviceBackend
+from repro.serve.spec_decode import NGramDraftTable
 
 
 @dataclass
@@ -85,6 +100,12 @@ class SchedulerConfig:
     # — the suffix x [gathered prefix; suffix] mask has no flash lowering
     attention_impl: str = "naive"
     enable_prefix_cache: bool = True
+    # self-speculative decoding: verify windows of up to spec_k tokens
+    # per slot per iteration (1 = off, the plain one-token decode step);
+    # drafts come from an n-gram prompt-lookup table over each request's
+    # own context (no draft model), matching on spec_ngram-grams
+    spec_k: int = 1
+    spec_ngram: int = 2
 
 
 @dataclass
@@ -97,6 +118,7 @@ class _Slot:
     last_token: int
     admit_seq: int                 # recency order for victim selection
     generated: List[int] = field(default_factory=list)
+    draft: Optional[NGramDraftTable] = None   # spec_k > 1: prompt lookup
 
     @property
     def done(self) -> bool:
@@ -175,7 +197,11 @@ class ContinuousBatchingEngine:
             "iterations": 0, "decode_tokens": 0, "prefill_tokens": 0,
             "prompt_tokens": 0, "prefix_hit_tokens": 0, "admitted": 0,
             "finished": 0, "preemptions": 0, "cow_copies": 0,
-            "prefix_evicted_pages": 0, "occupancy_sum": 0.0}
+            "prefix_evicted_pages": 0, "occupancy_sum": 0.0,
+            # speculative decode: windows with >= 1 drafted token,
+            # drafted-token count, and how many of them were accepted
+            # (measured acceptance = spec_accepted / spec_drafted)
+            "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0}
 
     # -- queue ------------------------------------------------------------
 
@@ -319,9 +345,17 @@ class ContinuousBatchingEngine:
                 npp = _pow2_pages(pc.pages_needed(matched, page), row_len)
                 tok0 = self.backend.admit_prefix(
                     padded, i, matched, suffix_len, row, n_prefix_pages=npp)
+            draft = None
+            if self.cfg.spec_k > 1:
+                # lookup context = prompt + committed output; a resumed
+                # (preempted) request's prompt already carries its prior
+                # output, so the fresh table loses nothing
+                draft = NGramDraftTable(self.cfg.spec_ngram)
+                draft.extend(req.prompt.tolist())
+                draft.extend([tok0])
             self.slots[i] = _Slot(req.uid, req.prompt, plen,
                                   req.max_new_tokens, pages, tok0,
-                                  self._admit_seq, [tok0])
+                                  self._admit_seq, [tok0], draft)
             self._admit_seq += 1
             self.stats["admitted"] += 1
             self.stats["prompt_tokens"] += plen
@@ -330,10 +364,13 @@ class ContinuousBatchingEngine:
             if self.prefix_cache is not None:
                 self.prefix_cache.register_prompt(req.prompt, pages)
 
-    def _grow(self) -> None:
-        """Lazy decode allocation: give every live slot the page its next
-        KV write lands in, escalating free-list pressure to prefix-store
-        eviction and then preemption of the newest slot."""
+    def _grow(self, window: Optional[Dict[int, int]] = None) -> None:
+        """Lazy decode allocation: give every live slot the page(s) its
+        next KV write lands in, escalating free-list pressure to
+        prefix-store eviction and then preemption of the newest slot.
+        ``window`` maps slot index -> decode-window width (speculative
+        verify writes ``w`` consecutive rows, which can cross a page
+        boundary); default is the plain one-token step."""
         page = self.cfg.page_size
         updates: List[tuple] = []           # (slot_row, page_idx, page_id)
         for i in sorted(range(len(self.slots)),
@@ -342,8 +379,9 @@ class ContinuousBatchingEngine:
             slot = self.slots[i]
             if slot is None or slot.done:
                 continue
+            w = window.get(i, 1) if window is not None else 1
             write_pos = slot.prompt_len + len(slot.generated) - 1
-            need_idx = write_pos // page
+            need_idx = (write_pos + w - 1) // page
             while slot is self.slots[i] and need_idx >= len(slot.pages):
                 if self._reserve(1):
                     new_page = self.alloc.alloc(1)[0]
@@ -374,13 +412,15 @@ class ContinuousBatchingEngine:
             self.stats["finished"] += 1
 
     def step(self) -> List[Completion]:
-        """Grow + admit + decode one token for every live slot; returns
-        the requests that finished this iteration.  Growth runs FIRST so
-        existing slots claim their next decode page before a new
-        admission can take it (paired with the admission headroom, this
-        keeps a just-prefilled newcomer from being the instant victim);
-        a second growth pass covers newcomers whose page-aligned prompt
-        makes their first decode write start a fresh page.
+        """Grow + admit + decode one WINDOW (one token unless speculating)
+        for every live slot; returns the requests that finished this
+        iteration.  Growth runs FIRST so existing slots claim their next
+        decode page before a new admission can take it (paired with the
+        admission headroom, this keeps a just-prefilled newcomer from
+        being the instant victim); a second growth pass covers newcomers
+        whose page-aligned prompt makes their first decode write start a
+        fresh page — and, under speculation, every slot's drafted window
+        width (a verify step scatters up to ``spec_k`` rows).
         """
         completions: List[Completion] = []
         self._grow()                      # may preempt; slots can change
@@ -388,22 +428,51 @@ class ContinuousBatchingEngine:
         self._finish(completions)         # max_new == 1 finishes at prefill
         if self.num_active == 0:
             return completions
-        self._grow()
-        B = self.cfg.max_slots
-        tokens = np.zeros((B, 1), np.int32)
-        active = np.zeros((B,), np.int32)
+        K = max(1, self.cfg.spec_k)
+        # draft a window per live slot: the last committed token plus up
+        # to K-1 prompt-lookup drafts, capped by the remaining budget so
+        # a verify step never writes KV past what the request may emit
+        windows: Dict[int, List[int]] = {}
         for i, slot in enumerate(self.slots):
-            if slot is not None and not slot.done:
-                tokens[i, 0] = slot.last_token
-                active[i] = 1
+            if slot is None or slot.done:
+                continue
+            win = [slot.last_token]
+            rem = slot.max_new - len(slot.generated)
+            if K > 1 and slot.draft is not None and rem > 1:
+                win += slot.draft.propose(min(K, rem) - 1)
+            windows[i] = win
+        self._grow(window={i: len(w) for i, w in windows.items()})
+        B = self.cfg.max_slots
+        tokens = np.zeros((B, K), np.int32)
+        active = np.zeros((B,), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, slot in enumerate(self.slots):
+            # _grow may have preempted a drafted slot (then slots[i] is
+            # None until the next admission pass) — skip its window
+            if slot is None or slot.done or i not in windows:
+                continue
+            win = windows[i]
+            tokens[i, :len(win)] = win
+            lens[i] = len(win)
+            active[i] = 1
         if not active.any():
             return completions
-        nxt = self.backend.decode(tokens, active)
+        out, n_emit = (self.backend.decode(tokens, active) if K == 1
+                       else self.backend.decode(tokens, active, lens))
         for i, slot in enumerate(self.slots):
-            if slot is not None and active[i]:
-                slot.last_token = int(nxt[i])
-                slot.generated.append(int(nxt[i]))
-                self.stats["decode_tokens"] += 1
+            if slot is None or not active[i]:
+                continue
+            ne = int(n_emit[i])
+            emitted = [int(t) for t in out[i, :ne]]
+            slot.generated.extend(emitted)
+            slot.last_token = emitted[-1]
+            if slot.draft is not None:
+                slot.draft.extend(emitted)
+            self.stats["decode_tokens"] += ne
+            if lens[i] > 1:
+                self.stats["spec_steps"] += 1
+                self.stats["spec_drafted"] += int(lens[i]) - 1
+                self.stats["spec_accepted"] += ne - 1
         usable = self.layout.num_pages - 1
         self.stats["occupancy_sum"] += (usable - self.alloc.free_pages) / usable
         self.stats["iterations"] += 1

@@ -155,6 +155,46 @@ print('OK')
     assert "OK" in out
 
 
+def test_sharded_spec_decode_token_parity():
+    """Self-speculative decoding over the KV-head-sharded backend: the
+    tp=2 engine with spec_k=4 verify windows (multi-query paged
+    attention per shard under shard_map) emits token-for-token the
+    single-device NON-speculative greedy output, for every cache dtype
+    — speculation and sharding compose without touching emissions."""
+    out = _run(PRELUDE + """
+# decode budgets long enough that greedy streams reach their
+# repetitive tails — otherwise the n-gram table never proposes and
+# nothing would actually be speculated
+rng = np.random.default_rng(0)
+T = rng.integers(0, 128, size=16).astype(np.int32)
+reqs = [Request(i, np.concatenate(
+    [T, rng.integers(0, 128, size=5 + i).astype(np.int32)]), 14)
+    for i in range(4)]
+
+def run_spec(tp, cache_dtype, spec_k):
+    cfg = SchedulerConfig(max_slots=3, page_size=16, max_seq=96,
+                          num_pages=24, cache_dtype=cache_dtype,
+                          enable_prefix_cache=True, spec_k=spec_k)
+    backend = make_backend(params, spec, cfg, devices=tp)
+    eng = ContinuousBatchingEngine(params, spec, cfg, backend=backend)
+    done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                    for r in reqs])
+    eng.alloc.check()
+    return done, eng
+
+for cache_dtype in ('fp32', 'int8', 'int4'):
+    base, _ = run_spec(1, cache_dtype, 1)
+    done, eng = run_spec(2, cache_dtype, 4)
+    assert eng.backend.pools_sharded
+    assert eng.stats['spec_steps'] > 0 and eng.stats['spec_accepted'] > 0, \
+        (cache_dtype, eng.stats)
+    for a, b in zip(base, done):
+        assert np.array_equal(a.tokens, b.tokens), (cache_dtype, a.uid)
+print('OK')
+""")
+    assert "OK" in out
+
+
 def test_per_device_budget_scales_pool():
     """make_layout(tp=N): the same per-device byte budget addresses ~N x
     more pages (each device stores only its KV-head slice of a page),
