@@ -36,10 +36,22 @@ def tier1() -> None:
           "--cache-dtype", "int4",
           "--json", "BENCH_serve_prefix_int4.json"], {}),
         # sharded serve gate: the tensor-parallel paged backend
-        # (KV-head-sharded int4 pools over 2 devices) must emit
-        # token-for-token the single-device continuous outputs
+        # (KV-head-sharded int4 pools + column/row-parallel weights
+        # over 2 devices) must stay within the tolerance band of the
+        # single-device continuous outputs with per-device weight
+        # bytes <= 0.6x the replicated baseline
         ([sys.executable, bench, "--smoke", "--devices", "2",
           "--cache-dtype", "int4"],
+         {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}),
+        # routed dp serve gate: dp=2 replicas x tp=2 devices each
+        # behind the prefix-aware router, int4 pages, 8 forced host
+        # devices — prefix routing must beat random routing on
+        # prefix-cache hit tokens, per-request outputs stay within
+        # the tolerance band of the dp=1 engine, and aggregate decode
+        # tokens/s reaches >= 1.6x the dp=1 rate
+        ([sys.executable, bench, "--smoke", "--dp", "2", "--devices", "2",
+          "--cache-dtype", "int4",
+          "--json", "BENCH_serve_dp_router.json"],
          {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}),
         # self-speculative decoding gate: outputs identical to
         # non-speculative greedy, >= 1.3x decode tokens/s on the

@@ -40,13 +40,29 @@ gate's outputs-identical assertion holds per dtype, so
 quantized prefix/CoW path.
 
 ``--devices N`` serves the continuous engine tensor-parallel: the page
-pools shard over the KV-head dim of an N-way model axis
+pools shard over the KV-head dim of an N-way model axis and the
+weights shard column/row-parallel over the same axis
 (``serve.backend.ShardedPagedBackend``) with replicated block tables.
-The sharded run must be token-for-token identical to the single-device
-continuous run (asserted), and the report adds measured per-device
-page-pool occupancy next to ``predict_serve_throughput(tp=N)``'s
-prediction.  On CPU run under
+The sharded run must stay within the tolerance band of the
+single-device continuous run (matching-prefix fraction >= 0.9 per
+request — the sharded psum's reduction order may flip greedy argmax
+near-ties), measured per-device WEIGHT bytes must be <= 0.6x the
+replicated baseline, and the report adds measured per-device page-pool
+occupancy next to ``predict_serve_throughput(tp=N)``'s prediction plus
+the analytical tp x dp cluster grid (tokens/s/device and
+cost-per-million-tokens per cell).  On CPU run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``--dp N`` runs N independent scheduler+backend replicas behind the
+prefix-aware router (``serve.router.PrefixRouter``): the 4-template
+shared-prefix workload routes by rendezvous-hashed template prefix vs
+a seeded-random baseline.  Gates: prefix routing's aggregate
+prefix-cache hit tokens beat random routing's, per-request outputs
+stay within the tolerance band of the dp=1 engine, and the fleet's
+aggregate decode tokens/s (sum of per-replica rates over their own
+busy time — replicas are time-sliced on a test host, independent on
+real hardware) reaches >= 1.6x the dp=1 rate.  Combine with
+``--devices`` for tp-per-replica (dp x tp disjoint device slices).
 """
 from __future__ import annotations
 
@@ -78,6 +94,33 @@ def _workload(n: int, prompt_buckets, new_lo: int, new_hi: int, vocab: int,
         prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
         reqs.append(Request(i, prompt, nnew))
     return reqs
+
+
+def _match_frac(a, b) -> float:
+    """Matching-prefix fraction of two greedy token streams (mirrors
+    tests/tolerance.py, re-stated here so the benchmark stays runnable
+    without the tests tree on PYTHONPATH)."""
+    a = np.asarray(a).ravel()
+    b = np.asarray(b).ravel()
+    n = min(len(a), len(b))
+    m = 0
+    while m < n and a[m] == b[m]:
+        m += 1
+    return m / max(1, max(len(a), len(b)))
+
+
+def _check_band(pairs, min_frac: float = 0.9, context: str = ""):
+    """Tolerance-band parity gate: each completion pair must share a
+    matching prefix covering >= ``min_frac`` of the longer stream.
+    Sharded psums reduce in a different order than single-device adds,
+    so greedy streams may fork at an argmax near-tie and diverge from
+    there — elementwise equality is the wrong contract."""
+    for a, b in pairs:
+        f = _match_frac(a.tokens, b.tokens)
+        if f < min_frac:
+            raise SystemExit(
+                f"FAIL: {context} uid {a.uid} token match {f:.2f} < "
+                f"{min_frac} ({a.tokens} vs {b.tokens})")
 
 
 def _run_static(params, spec, reqs, batch: int, max_seq: int) -> int:
@@ -156,6 +199,26 @@ def _predicted(spec, slots, avg_prompt, avg_new, max_seq,
     return predict_serve_throughput(spec, hw, precision.get("fp32"), plan,
                                     slots=slots, avg_prompt=avg_prompt,
                                     avg_new=avg_new, tp=tp)
+
+
+def _grid_rows(spec, layout, slots, avg_prompt, avg_new,
+               cache_dtype: str = "fp32", tps=(1, 2, 4), dps=(1, 2)):
+    """Analytical tp x dp cluster grid at this run's operating point:
+    one row per (tp, dp) cell with aggregate tokens/s, tokens/s/device
+    and cost-per-million-tokens (amortized board $/hr + electricity)."""
+    from repro.core import hardware, precision
+    from repro.core.latency import serve_cluster_grid
+    from repro.serve.paged_cache import plan_for_layout
+    plan = plan_for_layout(spec, layout, cache_dtype)
+    grid = serve_cluster_grid(spec, hardware.get("rpi5"),
+                              precision.get("fp32"), plan, slots=slots,
+                              avg_prompt=avg_prompt, avg_new=avg_new,
+                              tps=tps, dps=dps)
+    keep = ("tp", "dp", "devices", "aggregate_tokens_per_s",
+            "tokens_per_s_per_device", "cost_per_million_tokens",
+            "energy_j_per_token")
+    return [{"engine": "analytical_grid",
+             **{k: r[k] for k in keep if k in r}} for r in grid]
 
 
 def _shared_prefix_workload(n: int, n_templates: int, template_len: int,
@@ -363,11 +426,16 @@ def run_spec(smoke: bool = False, cache_dtype: str = "fp32",
                 results[k] = {"engine": eng, "done": done, "seconds": dt}
 
     base, spec_run = results[1], results[spec_k]
-    for a, b in zip(base["done"], spec_run["done"]):
-        if not np.array_equal(a.tokens, b.tokens):
-            raise SystemExit(
-                f"FAIL: spec-decode output mismatch uid {a.uid}: "
-                f"{a.tokens} vs {b.tokens}")
+    if devices > 1:
+        # sharded weights reduce via psum: band contract (see _check_band)
+        _check_band(zip(base["done"], spec_run["done"]),
+                    context=f"spec-decode tp={devices}")
+    else:
+        for a, b in zip(base["done"], spec_run["done"]):
+            if not np.array_equal(a.tokens, b.tokens):
+                raise SystemExit(
+                    f"FAIL: spec-decode output mismatch uid {a.uid}: "
+                    f"{a.tokens} vs {b.tokens}")
     st = spec_run["engine"].stats
     measured_acc = st["spec_accepted"] / max(1, st["spec_drafted"])
     predicted_acc = _simulate_acceptance(reqs, base["done"], spec_k,
@@ -438,6 +506,105 @@ def _energy_rows(spec, layout, slots, avg_prompt, avg_new,
             "int4_vs_fp16_reduction": 1.0 - e["int4"] / e["fp16"]}
 
 
+def run_dp(smoke: bool = False, cache_dtype: str = "fp32", dp: int = 2,
+           tp: int = 1):
+    """Data-parallel routed serving gate on the 4-template workload.
+
+    Three fleets over the same requests: a dp=1 baseline (one engine
+    behind the router, so its rate is measured identically), the dp=N
+    prefix-routed fleet, and the dp=N seeded-random fleet.  Gates:
+
+    * prefix routing's aggregate prefix-cache hit tokens beat random
+      routing's (affinity keeps a template's pages hot on ONE replica;
+      spraying cold-prefills it everywhere);
+    * per-request outputs within the tolerance band of the dp=1 engine
+      (which replica decodes a request changes batch composition,
+      never the per-slot decode math; tp>1 adds psum-order skew);
+    * aggregate decode tokens/s >= 1.6x the dp=1 rate.  The workload
+      queues hard against ``slots`` so dp=1 is slot-constrained and
+      each replica of the fleet runs near-full occupancy; rates are
+      per-replica tokens over OWN busy seconds (time-sliced host).
+    """
+    from repro.serve.router import PrefixRouter, make_replicas
+    from repro.serve.scheduler import Request, SchedulerConfig
+    if smoke:
+        n, n_templates, template_len = 16, 4, 64
+        suffix_lo, suffix_hi, new_lo, new_hi = 8, 16, 16, 24
+        max_seq, slots, width, layers = 160, 4, 64, 2
+    else:
+        n, n_templates, template_len = 32, 4, 96
+        suffix_lo, suffix_hi, new_lo, new_hi = 8, 24, 16, 32
+        max_seq, slots, width, layers = 256, 4, 64, 2
+    spec, params = _build(width=width, layers=layers)
+    reqs = _shared_prefix_workload(n, n_templates, template_len, suffix_lo,
+                                   suffix_hi, new_lo, new_hi, vocab=256)
+    cfg = SchedulerConfig(max_slots=slots, page_size=16, max_seq=max_seq,
+                          kv_budget_bytes=64e6, enable_prefix_cache=True,
+                          cache_dtype=cache_dtype)
+
+    def fleet(n_rep: int, mode: str):
+        """Fresh engines each call: prefix stores must start cold so
+        hit counters compare fleets, not run history.  Jit caches are
+        module-level, so only the warm calls pay compiles."""
+        engines = make_replicas(params, spec, cfg, dp=n_rep, tp=tp)
+        router = PrefixRouter(engines, mode=mode, seed=0,
+                              page_size=cfg.page_size)
+        t0 = time.perf_counter()
+        done = router.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                           for r in reqs])
+        dt = time.perf_counter() - t0
+        for eng in engines:
+            eng.alloc.check()
+        return router, done, dt
+
+    fleet(1, "prefix")                        # warm passes: compile every
+    fleet(dp, "prefix")                       # mesh (dp x tp slices differ)
+    base_router, base_done, base_dt = fleet(1, "prefix")
+    routed, routed_done, routed_dt = fleet(dp, "prefix")
+    rand_router, _, _ = fleet(dp, "random")
+
+    base_stats = base_router.aggregate_stats()
+    dp_stats = routed.aggregate_stats()
+    rand_stats = rand_router.aggregate_stats()
+    assert len(routed_done) == len(reqs)
+    _check_band(zip(base_done, routed_done), context=f"dp={dp} routed")
+
+    base_rate = base_stats["aggregate_decode_tokens_per_s"]
+    agg_rate = dp_stats["aggregate_decode_tokens_per_s"]
+    scaling = agg_rate / base_rate
+    hit_prefix = dp_stats["prefix_hit_tokens"]
+    hit_random = rand_stats["prefix_hit_tokens"]
+    rows = [
+        {"engine": "dp1_baseline", "tp": tp, "cache_dtype": cache_dtype,
+         "decode_tokens": base_stats["decode_tokens"],
+         "prefix_hit_tokens": base_stats["prefix_hit_tokens"],
+         "decode_tokens_per_s": base_rate, "seconds": base_dt},
+        {"engine": f"dp{dp}_prefix_routed", "tp": tp,
+         "decode_tokens": dp_stats["decode_tokens"],
+         "prefix_hit_tokens": hit_prefix,
+         "spilled": dp_stats["spilled"],
+         "rebalanced": dp_stats["rebalanced"],
+         "assigned": dp_stats["assigned"],
+         "aggregate_decode_tokens_per_s": agg_rate, "seconds": routed_dt},
+        {"engine": f"dp{dp}_random_routed", "tp": tp,
+         "prefix_hit_tokens": hit_random,
+         "assigned": rand_stats["assigned"],
+         "aggregate_decode_tokens_per_s":
+             rand_stats["aggregate_decode_tokens_per_s"]},
+        {"engine": "measured", "dp_scaling": scaling,
+         "prefix_hit_tokens_prefix_vs_random": [hit_prefix, hit_random],
+         "outputs_within_band_of_dp1": True},
+        *_grid_rows(spec, routed.engines[routed.replica_ids[0]].layout,
+                    slots,
+                    float(np.mean([len(r.prompt) for r in reqs])),
+                    float(np.mean([r.max_new_tokens for r in reqs])),
+                    cache_dtype, tps=tuple(sorted({1, tp})),
+                    dps=tuple(sorted({1, dp}))),
+    ]
+    return ("serve_dp_router", routed_dt * 1e6, rows, scaling,
+            hit_prefix, hit_random)
+
+
 def run(smoke: bool = False, cache_dtype: str = "fp32", devices: int = 1):
     if smoke:
         n, slots, buckets, new_lo, new_hi = 6, 4, [32, 64, 128], 8, 24
@@ -469,16 +636,27 @@ def run(smoke: bool = False, cache_dtype: str = "fp32", devices: int = 1):
             cont_stats, cont_done, cont_eng = out[1], out[2], out[3]
 
     if devices > 1:
-        # parity gate: the sharded backend must emit token-for-token the
-        # single-device continuous outputs (same scheduler decisions,
-        # same logits — the backend contract)
+        # parity gate: the sharded backend (sharded weights + pools)
+        # must stay within the tolerance band of the single-device
+        # continuous outputs — psum reduction order may flip greedy
+        # argmax near-ties, so the contract is matching-prefix
+        # fraction, not elementwise equality
         _, _, base_done, base_eng = _run_continuous(
             params, spec, reqs, slots, max_seq, device_bytes, cache_dtype,
             devices=1)
-        for a, b in zip(base_done, cont_done):
-            if not np.array_equal(a.tokens, b.tokens):
-                raise SystemExit(
-                    f"FAIL: sharded (tp={devices}) output mismatch uid {a.uid}")
+        _check_band(zip(base_done, cont_done),
+                    context=f"sharded tp={devices}")
+        # weight-sharding accounting: with column/row-parallel weights
+        # each device holds ~1/tp of every projection, so per-device
+        # weight bytes must drop to <= 0.6x the replicated baseline
+        # (the ISSUE acceptance bar; exact ratio ~1/tp + pads)
+        dev_bytes = cont_eng.backend.param_bytes_per_device()
+        rep_bytes = base_eng.backend.param_bytes_per_device()
+        if cont_eng.backend.weights_sharded and \
+                dev_bytes > 0.6 * rep_bytes:
+            raise SystemExit(
+                f"FAIL: per-device weight bytes {dev_bytes} > 0.6x "
+                f"replicated {rep_bytes} at tp={devices}")
         occ = (cont_stats["occupancy_sum"]
                / max(1, cont_stats["iterations"]))
         # budget-addressable pages per device BEFORE the max_slots cap:
@@ -492,7 +670,11 @@ def run(smoke: bool = False, cache_dtype: str = "fp32", devices: int = 1):
             for t in (1, devices)}
         extra_rows.append({
             "engine": f"sharded_tp{devices}",
-            "outputs_identical_to_tp1": True,
+            "outputs_within_band_of_tp1": True,
+            "weights_sharded": cont_eng.backend.weights_sharded,
+            "param_bytes_per_device": dev_bytes,
+            "param_bytes_replicated": rep_bytes,
+            "param_bytes_ratio": dev_bytes / rep_bytes,
             "num_pages": cont_eng.layout.num_pages,
             "budget_pages_per_device_tp1": budget_pages[1],
             f"budget_pages_per_device_tp{devices}": budget_pages[devices],
@@ -518,6 +700,10 @@ def run(smoke: bool = False, cache_dtype: str = "fp32", devices: int = 1):
                      float(np.mean([len(r.prompt) for r in reqs])),
                      float(np.mean([r.max_new_tokens for r in reqs])),
                      tp=devices),
+        *_grid_rows(spec, cont_eng.layout, slots,
+                    float(np.mean([len(r.prompt) for r in reqs])),
+                    float(np.mean([r.max_new_tokens for r in reqs])),
+                    cache_dtype),
     ]
     us = results["continuous"]["seconds"] * 1e6
     return "serve_throughput", us, rows
@@ -554,13 +740,44 @@ def main():
                          "+ per-token scales)")
     ap.add_argument("--devices", type=int, default=1,
                     help="tensor-parallel degree: shard the page pools "
-                         "over the KV-head dim of N devices (parity vs "
-                         "single-device asserted; on CPU force host "
-                         "devices via XLA_FLAGS)")
+                         "over the KV-head dim and the weights "
+                         "column/row-parallel over N devices (tolerance-"
+                         "band parity vs single-device asserted; on CPU "
+                         "force host devices via XLA_FLAGS)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replica count: run the routed "
+                         "serving gate (prefix-aware router over N "
+                         "independent engines; --devices becomes the "
+                         "per-replica tp, so dp x devices host devices "
+                         "are needed)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the result rows to PATH as JSON "
                          "(the BENCH_*.json CI artifacts)")
     args = ap.parse_args()
+    if args.dp > 1:
+        if args.prefix or args.spec_decode:
+            raise SystemExit("--dp composes with --devices (per-replica "
+                             "tp), not with --prefix/--spec-decode")
+        name, us, rows, scaling, hit_p, hit_r = run_dp(
+            smoke=args.smoke, cache_dtype=args.cache_dtype, dp=args.dp,
+            tp=args.devices)
+        print(f"## {name}")
+        for r in rows:
+            print(r)
+        if args.json:
+            _dump_json(args.json, name, rows)
+        if hit_p <= hit_r:
+            raise SystemExit(
+                f"FAIL: prefix routing hit tokens {hit_p} <= random "
+                f"routing {hit_r} — affinity is not paying")
+        floor = 1.6
+        status = "PASS" if scaling >= floor else "FAIL"
+        print(f"{status}: dp={args.dp} aggregate/dp=1 decode tokens/s = "
+              f"{scaling:.2f}x (floor {floor}x, outputs within band, "
+              f"prefix hits {int(hit_p)} > random {int(hit_r)})")
+        if scaling < floor:
+            raise SystemExit(1)
+        return
     if args.spec_decode:
         if args.spec_k < 2:
             raise SystemExit("--spec-decode needs --spec-k >= 2")
@@ -610,8 +827,9 @@ def main():
     if args.json:
         _dump_json(args.json, name, rows)
     if args.devices > 1:
-        print(f"PASS: sharded tp={args.devices} outputs identical to "
-              "single-device continuous")
+        print(f"PASS: sharded tp={args.devices} (sharded weights + pools) "
+              "outputs within tolerance band of single-device continuous, "
+              "per-device weight bytes <= 0.6x replicated")
     speedup = next(r["speedup"] for r in rows
                    if r["engine"] == "measured_speedup")
     if args.smoke:

@@ -173,6 +173,16 @@ def tp_shards_kv(spec: ModelSpec, tp: int) -> bool:
     return tp > 1 and spec.num_kv_heads % tp == 0 and spec.num_heads % tp == 0
 
 
+def tp_shards_weights(spec: ModelSpec, tp: int) -> bool:
+    """True iff the sharded backend also splits the WEIGHTS column/row-
+    parallel at this tp.  The backend gates weight sharding on the
+    pools sharding (the odd-KV fallback keeps everything replicated for
+    the bitwise contract), and the megatron split additionally wants
+    the MLP hidden dim divisible so mlp_wi/mlp_wo pair up — per-device
+    weight traffic and FLOPs divide by tp exactly when this holds."""
+    return tp_shards_kv(spec, tp) and spec.d_ff % tp == 0
+
+
 def kv_cache_dtype_bytes(cache_dtype: str):
     """(bytes per stored KV value, scales present) for a paged-cache
     dtype name — the one mapping every byte-accounting consumer

@@ -40,6 +40,12 @@ class HardwareSpec:
     # whole step duration, which is why measured INT4 energy savings
     # (paper: 35-50%) sit well below the naive dynamic byte/FLOP ratio.
     p_static: float = 0.0
+    # Amortized device cost ($/hr per device): purchase price spread
+    # over a ~3-year service life for the edge boards, the on-demand
+    # cloud rate for the TPU.  Feeds cost-per-million-tokens in the
+    # tp x dp serve grid (core.latency.serve_cluster_grid); electricity
+    # is priced separately from the energy model.
+    cost_per_hour: float = 0.05
     # Peak scaling for reduced precision compute, relative to fp32 peak.
     precision_speedup: Dict[str, float] = None  # type: ignore[assignment]
 
@@ -77,6 +83,7 @@ RPI4 = HardwareSpec(
     mem_capacity=8 * GB,
     u_compute=0.50, u_memory=0.55, u_storage=0.85, u_h2d=0.80, u_net=0.70,
     e_flop=2.0e-10, e_byte=6.0e-10, p_static=2.7,
+    cost_per_hour=0.003,           # ~$75 board over 3 years
 )
 
 RPI5 = HardwareSpec(
@@ -89,6 +96,7 @@ RPI5 = HardwareSpec(
     mem_capacity=16 * GB,
     u_compute=0.55, u_memory=0.60, u_storage=0.85, u_h2d=0.80, u_net=0.70,
     e_flop=1.2e-10, e_byte=4.5e-10, p_static=3.3,
+    cost_per_hour=0.005,           # ~$120 board + NVMe over 3 years
 )
 
 JETSON_ORIN_NANO = HardwareSpec(
@@ -101,6 +109,7 @@ JETSON_ORIN_NANO = HardwareSpec(
     mem_capacity=8 * GB,
     u_compute=0.45, u_memory=0.65, u_storage=0.80, u_h2d=0.85, u_net=0.70,
     e_flop=2.5e-11, e_byte=3.0e-10, p_static=7.0,
+    cost_per_hour=0.010,           # ~$250 module over 3 years
 )
 
 # The deployment target for the framework itself (assignment constants).
@@ -114,6 +123,8 @@ TPU_V5E = HardwareSpec(
     mem_capacity=16 * GB,
     u_compute=1.0, u_memory=1.0, u_storage=0.8, u_h2d=0.8, u_net=1.0,
     e_flop=5.0e-13, e_byte=1.0e-10,
+    cost_per_hour=1.20,            # on-demand per-chip cloud rate
+
     # Roofline terms use the bf16 peak directly.
     precision_speedup={"fp32": 0.5, "fp16": 1.0, "bf16": 1.0, "int8": 2.0, "int4": 2.0},
 )

@@ -14,7 +14,7 @@ from typing import Dict
 from repro.core.analytical import (Analysis, PagedCachePlan,
                                    effective_slots, expected_accepted_tokens,
                                    mean_pages_held, mixed_iteration_flops,
-                                   tp_shards_kv)
+                                   tp_shards_kv, tp_shards_weights)
 from repro.core.hardware import HardwareSpec
 from repro.core.model_config import ModelSpec
 from repro.core.precision import PrecisionSpec
@@ -77,18 +77,23 @@ class IterationCost:
     (weights re-read every step), prefill adds a compute term.
     ``decode_tokens`` counts tokens COMMITTED (under speculative decode
     one iteration commits the accepted window, so it can exceed the
-    live-slot count); ``flops``/``bytes_moved`` carry the raw counts
-    the times were derived from, for the eq.-(15) energy model.
+    live-slot count); ``flops``/``bytes_moved`` carry the raw CLUSTER
+    totals the times were derived from, for the eq.-(15) energy model.
+    ``collective_s`` is the per-iteration all-reduce time of the
+    weight-sharded tensor-parallel path (zero on one device): it
+    overlaps neither compute nor the weight stream on edge
+    interconnects, so the iteration rooflines over all three terms.
     """
     compute_s: float
     memory_s: float
     decode_tokens: float           # useful tokens emitted this iteration
     flops: float = 0.0
     bytes_moved: float = 0.0
+    collective_s: float = 0.0
 
     @property
     def iteration_s(self) -> float:
-        return max(self.compute_s, self.memory_s)
+        return max(self.compute_s, self.memory_s, self.collective_s)
 
     @property
     def tokens_per_s(self) -> float:
@@ -122,13 +127,21 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
     ``tp`` models the tensor-parallel sharded backend (``plan`` holding
     the GLOBAL per-page bytes): the page pools are partitioned over the
     KV-head dim, so each device moves 1/tp of the KV bytes per
-    iteration, while the weights stay REPLICATED — every device
-    re-reads them (the sharded backend trades no weight traffic for
-    exact single-device numerics and ~tp x the KV capacity), and the
-    FLOP term is charged in full (projections/MLP run replicated;
-    decode is memory-bound on every edge roofline anyway).  A ``tp``
-    that does not divide the head counts replicates the pools (the
-    sharding-layer fallback), so it divides nothing here either.
+    iteration, and the WEIGHTS shard column/row-parallel over the same
+    axis (``analytical.tp_shards_weights``) — per-device weight traffic
+    AND FLOPs divide by tp, which is the per-device bandwidth relief
+    small-batch decode is bound by.  The price is a COLLECTIVE term:
+    the megatron block all-reduces a (tokens, d_model) f32 activation
+    twice per layer (after attention-wo and after mlp_wo; a ring moves
+    2(tp-1)/tp of the payload per device), charged against the board's
+    network link — on 1 GbE edge clusters this term caps tp scaling
+    well below linear, exactly the behaviour the interconnect
+    deserves.  A ``tp`` that does not divide the head counts (or the
+    MLP hidden dim) falls back to replication in the corresponding
+    layer of the stack, so the matching term here divides by nothing
+    either.  ``flops``/``bytes_moved`` on the result stay CLUSTER
+    totals (the fleet does the same work, just spread out), so the
+    energy model prices all tp devices, not one shard.
 
     ``spec_k`` > 1 models self-speculative decoding: every live slot
     verifies a ``spec_k``-token window per iteration, so the FLOP term
@@ -152,20 +165,30 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
     flops = mixed_iteration_flops(spec, prefill_tokens,
                                   decode_slots * spec_k,
                                   avg_context, cached_prefix_tokens)
-    kv_bytes = plan.bytes_per_token * (
+    kv_global = plan.bytes_per_token * (
         decode_slots * (avg_context + spec_k - 1)
-        + prefill_tokens + cached_prefix_tokens
-    ) / (tp if tp_shards_kv(spec, tp) else 1)
+        + prefill_tokens + cached_prefix_tokens)
+    kv_dev = kv_global / (tp if tp_shards_kv(spec, tp) else 1)
     weight_bytes = P * precision.bytes_per_param
+    w_div = tp if tp_shards_weights(spec, tp) else 1
     emitted = decode_slots * expected_accepted_tokens(acceptance_rate, spec_k)
     # weight-only quantized GEMV unpacks/rescales per use: charge the
     # dequant overhead as extra compute work (time AND flop energy)
     eff_flops = flops * precision.dequant_overhead
-    t_comp = eff_flops / (hw.flops_at(precision.name) * hw.u_compute)
-    t_mem = (weight_bytes + kv_bytes) / (hw.mem_bw * hw.u_memory)
+    t_comp = (eff_flops / w_div) / (hw.flops_at(precision.name)
+                                    * hw.u_compute)
+    t_mem = (weight_bytes / w_div + kv_dev) / (hw.mem_bw * hw.u_memory)
+    t_coll = 0.0
+    if w_div > 1:
+        # 2 psums/layer over the live (tokens, d_model) f32 activations
+        tokens = prefill_tokens + decode_slots * spec_k
+        coll_bytes = (2 * spec.num_layers * tokens * spec.d_model * 4.0
+                      * 2 * (tp - 1) / tp)
+        t_coll = coll_bytes / (hw.net_bw * hw.u_net)
     return IterationCost(t_comp, t_mem, emitted,
                          flops=eff_flops,
-                         bytes_moved=weight_bytes + kv_bytes)
+                         bytes_moved=weight_bytes + kv_global,
+                         collective_s=t_coll)
 
 
 def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
@@ -173,7 +196,7 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
                              *, slots: int, avg_prompt: float,
                              avg_new: float, prefix_hit_rate: float = 0.0,
                              admission: str = "lazy",
-                             tp: int = 1, spec_k: int = 1,
+                             tp: int = 1, dp: int = 1, spec_k: int = 1,
                              acceptance_rate: float = 0.0
                              ) -> Dict[str, float]:
     """Steady-state continuous batching vs static-batch throughput.
@@ -205,8 +228,9 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     operating point the throughput numbers describe.
 
     ``tp`` is the tensor-parallel degree of the sharded paged backend
-    (``plan`` stays the GLOBAL pool): per-device KV traffic drops to
-    1/tp (weights replicated — see ``mixed_iteration_cost``) and the
+    (``plan`` stays the GLOBAL pool): per-device KV traffic AND weight
+    traffic/FLOPs drop to 1/tp with the megatron collective charged
+    against the network link (see ``mixed_iteration_cost``), and the
     result gains per-device page-pool terms — ``per_device_pool_bytes``
     (each device's KV-head slice of the whole pool) and
     ``per_device_pool_occupancy`` (identical on every device: a page's
@@ -214,6 +238,18 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     tables, which are replicated host state) — the numbers
     ``benchmarks/serve_throughput.py --devices N`` prints measured
     occupancy against.
+
+    ``dp`` is the data-parallel replica count (``serve/router.py``):
+    replicas are fully independent engines, so aggregate throughput is
+    dp x the per-replica rate and the cluster serves dp x the slots —
+    dp>1 adds ``dp``/``aggregate_tokens_per_s``/``cluster_slots``.
+    Whenever the cluster has more than one device (tp>1 or dp>1) the
+    result also carries ``tokens_per_s_per_device`` (the scaling-
+    efficiency number: collectives and replicated leaves pull it below
+    the dp=tp=1 rate) and ``cost_per_million_tokens`` (amortized
+    device-hours at ``hw.cost_per_hour`` plus electricity from the
+    energy model at ``ELECTRICITY_USD_PER_KWH``).  The tp=1, dp=1 cell
+    is byte-identical to the pre-cluster model.
     """
     avg_ctx = avg_prompt + avg_new / 2
     live = effective_slots(plan, slots, avg_prompt, avg_new, admission)
@@ -254,7 +290,73 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
         out["per_device_pool_bytes"] = plan.total_bytes / kv_shard
         out["per_device_pool_occupancy"] = min(
             1.0, live * held / max(1.0, plan.usable_pages))
+    if dp > 1:
+        out["dp"] = float(dp)
+        out["aggregate_tokens_per_s"] = dp * cont.tokens_per_s
+        out["cluster_slots"] = dp * live
+    if tp > 1 or dp > 1:
+        devices = tp * dp
+        agg = dp * cont.tokens_per_s
+        out["tokens_per_s_per_device"] = agg / devices
+        out["cost_per_million_tokens"] = cost_per_million_tokens(
+            agg, devices, out["energy_j_per_token"], hw)
     return out
+
+
+#: Electricity price the cost model charges the energy term at ($/kWh).
+ELECTRICITY_USD_PER_KWH = 0.25
+
+
+def cost_per_million_tokens(aggregate_tokens_per_s: float, devices: int,
+                            energy_j_per_token: float,
+                            hw: HardwareSpec) -> float:
+    """$ per 1M tokens of a cluster: amortized device-hours
+    (``hw.cost_per_hour`` per device, all devices billed for the wall
+    time 1M tokens take at the aggregate rate) plus electricity for
+    the energy the model says those tokens dissipate."""
+    if aggregate_tokens_per_s <= 0:
+        return float("inf")
+    device_usd = (devices * hw.cost_per_hour / 3600.0) \
+        / aggregate_tokens_per_s * 1e6
+    energy_usd = energy_j_per_token * 1e6 \
+        * ELECTRICITY_USD_PER_KWH / 3.6e6
+    return device_usd + energy_usd
+
+
+def serve_cluster_grid(spec: ModelSpec, hw: HardwareSpec,
+                       precision: PrecisionSpec, plan: PagedCachePlan, *,
+                       slots: int, avg_prompt: float, avg_new: float,
+                       tps=(1, 2, 4), dps=(1, 2),
+                       **predict_kw) -> list:
+    """The tp x dp serve sweep: one ``predict_serve_throughput`` cell
+    per (tp, dp), each row annotated with tp/dp/devices and — for every
+    cell, including tp=1, dp=1 — the per-device rate and
+    cost-per-million-tokens, so cluster shapes compare on one axis:
+    what does a million tokens cost, and how much of each device's
+    dp=tp=1 rate survives the collectives.  tp values that don't
+    divide the head counts still appear (the fallback replicates, the
+    row shows no win) — silent omission would read as 'not modelled'.
+    """
+    rows = []
+    for tp in tps:
+        for dp in dps:
+            cell = predict_serve_throughput(
+                spec, hw, precision, plan, slots=slots,
+                avg_prompt=avg_prompt, avg_new=avg_new, tp=tp, dp=dp,
+                **predict_kw)
+            agg = cell.get("aggregate_tokens_per_s",
+                           cell["continuous_tokens_per_s"])
+            devices = tp * dp
+            row = dict(cell)
+            row.update({
+                "tp": tp, "dp": dp, "devices": devices,
+                "aggregate_tokens_per_s": agg,
+                "tokens_per_s_per_device": agg / devices,
+                "cost_per_million_tokens": cost_per_million_tokens(
+                    agg, devices, cell["energy_j_per_token"], hw),
+            })
+            rows.append(row)
+    return rows
 
 
 @dataclass

@@ -120,7 +120,7 @@ def paged_attention_sharded(mesh, q, k_pages, v_pages, block_tables,
                             lengths, *, window: int = 0,
                             scale: Optional[float] = None,
                             k_scale=None, v_scale=None, axis: str = "model",
-                            impl: str = "auto"):
+                            impl: str = "auto", gather_output: bool = True):
     """Tensor-parallel paged decode attention over a KV-head-sharded pool.
 
     The page pools (and lane-major scale pages) live sharded over the
@@ -128,12 +128,18 @@ def paged_attention_sharded(mesh, q, k_pages, v_pages, block_tables,
     lengths are replicated host state.  Attention heads never mix, so
     each shard runs the plain ``paged_attention`` op — the Pallas
     kernel on TPU — over its own KV-head slice with NO collective
-    inside the op; q arrives replicated and is sliced to the shard's
-    head group by ``shard_map``.  The (B, H, D) output is constrained
-    back to replicated so the caller's wo projection (and everything
-    after it) executes the exact single-device program — this is what
-    makes the sharded backend token-for-token identical to the
-    single-device one.
+    inside the op; ``shard_map`` slices q to the shard's head group
+    (a no-op reshard when the caller already computed q from
+    column-parallel wq).
+
+    ``gather_output=True`` constrains the (B, H, D) output back to
+    replicated so a caller with REPLICATED weights executes the exact
+    single-device wo projection (the PR-4/5 bitwise-parity contract,
+    still used by the odd-KV replicate fallback).
+    ``gather_output=False`` leaves the output HEAD-SHARDED, so a
+    row-parallel wo consumes its local head slice natively and GSPMD
+    inserts the single psum of the megatron block — no replicated
+    gather of attention output or weights anywhere on the path.
 
     Requires ``axis`` to divide both the query and the KV head counts
     (``parallel.sharding.ShardingRules.cache_entry_pspec`` enforces the
@@ -161,6 +167,8 @@ def paged_attention_sharded(mesh, q, k_pages, v_pages, block_tables,
                                    scale=scale, impl=impl)
         f = shard_map_compat(local, mesh, (qs, ps, ps, bs, ls), qs)
         o = f(q, k_pages, v_pages, block_tables, lengths)
+    if not gather_output:
+        return o                                  # head-sharded, per qs
     return jax.lax.with_sharding_constraint(o, NamedSharding(mesh, P()))
 
 

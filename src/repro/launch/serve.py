@@ -7,10 +7,15 @@ drives the full scheduler stack (paged KV cache, prefix store, lazy
 allocation/preemption) instead of the static ``engine.generate`` path;
 ``--cache-dtype {fp32,int8,int4}`` picks the page precision,
 ``--devices N`` serves the pool tensor-parallel over N devices
-(KV-head-sharded ``ShardedPagedBackend`` — on CPU run under
-``XLA_FLAGS=--xla_force_host_platform_device_count=N``), and
-``--spec-k K`` turns on self-speculative decoding (n-gram prompt-lookup
-drafts verified K tokens per step; outputs stay token-for-token greedy).
+(KV-head-sharded pools + column/row-parallel weights via
+``ShardedPagedBackend`` — on CPU run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``),
+``--dp R`` runs R independent engine replicas behind the prefix-aware
+rendezvous router (``serve.router.PrefixRouter``; with ``--devices``
+each replica gets its own tp-device slice, so R x N host devices),
+and ``--spec-k K`` turns on self-speculative decoding (n-gram
+prompt-lookup drafts verified K tokens per step; outputs stay
+token-for-token greedy).
 """
 from __future__ import annotations
 
@@ -68,6 +73,9 @@ def _run_paged(args, spec, params):
         max_seq=args.prompt_len + args.steps + 16,
         kv_budget_bytes=64e6, cache_dtype=args.cache_dtype,
         spec_k=args.spec_k)
+    if args.dp > 1:
+        _run_routed(args, spec, params, cfg, reqs)
+        return
     backend = make_backend(params, spec, cfg, devices=args.devices)
     eng = ContinuousBatchingEngine(params, spec, cfg, backend=backend)
     t0 = time.time()
@@ -95,6 +103,30 @@ def _run_paged(args, spec, params):
     print(np.stack([c.tokens[:8] for c in done[:4]]))
 
 
+def _run_routed(args, spec, params, cfg, reqs):
+    """``--dp R``: R independent scheduler+backend replicas behind the
+    prefix-aware rendezvous router; reports fleet aggregate stats."""
+    from repro.serve.router import PrefixRouter, make_replicas
+    engines = make_replicas(params, spec, cfg, dp=args.dp,
+                            tp=args.devices)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    t0 = time.time()
+    done = router.run(reqs)
+    dt = time.time() - t0
+    tok = sum(len(c.tokens) for c in done)
+    agg = router.aggregate_stats()
+    print(f"[serve] routed fleet (dp={args.dp} x tp={args.devices}, "
+          f"{args.cache_dtype} pages): {len(done)} requests, {tok} tokens "
+          f"in {dt:.2f}s ({tok / dt:.1f} tok/s wall, "
+          f"{agg['aggregate_decode_tokens_per_s']:.1f} decode tok/s "
+          "aggregate)")
+    print(f"[serve] router: assigned {agg['assigned']}, "
+          f"spilled {int(agg['spilled'])}, "
+          f"rebalanced {int(agg['rebalanced'])}, "
+          f"prefix hits {int(agg['prefix_hit_tokens'])} tok")
+    print(np.stack([c.tokens[:8] for c in done[:4]]))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -117,7 +149,12 @@ def main():
                     help="paged KV page precision (--engine paged)")
     ap.add_argument("--devices", type=int, default=1,
                     help="tensor-parallel degree for the paged engine "
-                         "(KV-head-sharded page pool)")
+                         "(KV-head-sharded page pool + column/row-"
+                         "parallel weights)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replicas for the paged engine: "
+                         "independent engines behind the prefix-aware "
+                         "router (--devices becomes per-replica tp)")
     ap.add_argument("--spec-k", type=int, default=1,
                     help="self-speculative decode window for the paged "
                          "engine: verify up to K tokens per step from "

@@ -594,7 +594,8 @@ def _scatter_kv_rows(kv: Dict, name: str, rows: jnp.ndarray,
 
 
 def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
-                       kind, mesh=None) -> Tuple[jnp.ndarray, Dict]:
+                       kind, mesh=None,
+                       shard_params=False) -> Tuple[jnp.ndarray, Dict]:
     """Paged-cache decode attention for one layer.
 
     ``pos`` is the per-slot context length vector (B,) — the new token's
@@ -609,8 +610,15 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
     attention runs TENSOR-PARALLEL: the pools stay sharded over the
     KV-head dim and the paged attention op executes per shard under
     ``shard_map`` (heads are embarrassingly parallel — no collective
-    inside the op; the output is all-gathered so the wo projection runs
-    replicated, keeping logits bitwise-identical to a single device).
+    inside the op).  ``shard_params=False`` (replicated weights, the
+    odd-KV fallback contract) all-gathers the attention output so the
+    wo projection runs replicated, keeping logits bitwise-identical to
+    a single device.  ``shard_params=True`` means the weights live
+    column/row-parallel (``ShardingRules.param_pspec``): q/k/v arrive
+    head-sharded straight from column-parallel wq/wk/wv (shard_map's
+    in_specs make that a no-op reshard), the attention output STAYS
+    head-sharded, and row-parallel wo reduces with the megatron block's
+    single psum — no replicated-weight gathers anywhere on the path.
     """
     from repro.kernels import ops as kops
     B = x.shape[0]
@@ -634,7 +642,8 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
         o = kops.paged_attention_sharded(
             mesh, q[:, 0], new_kv["k_pages"], new_kv["v_pages"],
             block_tables, pos + 1, window=window,
-            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
+            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"),
+            gather_output=not shard_params)
     else:
         o = kops.paged_attention(
             q[:, 0], new_kv["k_pages"], new_kv["v_pages"], block_tables,
@@ -645,7 +654,8 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
 
 
 def _attn_decode_window_paged(spec, p, x, pos, lens, kv, block_tables, *,
-                              kind, mesh=None) -> Tuple[jnp.ndarray, Dict]:
+                              kind, mesh=None,
+                              shard_params=False) -> Tuple[jnp.ndarray, Dict]:
     """Paged attention for a K-token DECODE WINDOW (speculative verify).
 
     ``x`` is (B, K, d): the last committed token plus K-1 drafted
@@ -658,8 +668,10 @@ def _attn_decode_window_paged(spec, p, x, pos, lens, kv, block_tables, *,
     before the attention, so the multi-query paged op reads the window
     causally from the SAME pages sequential decode would (bitwise-equal
     values: per-token quantization, per-position rope), which is what
-    makes draft verification exact.  ``mesh`` runs the attention
-    tensor-parallel per KV-head shard exactly as the single-query path.
+    makes draft verification exact.  ``mesh``/``shard_params`` run the
+    attention tensor-parallel per KV-head shard exactly as the
+    single-query path (head-sharded output into row-parallel wo when
+    the weights are sharded, replicated gather otherwise).
     """
     from repro.kernels import ops as kops
     B, K = x.shape[:2]
@@ -688,7 +700,8 @@ def _attn_decode_window_paged(spec, p, x, pos, lens, kv, block_tables, *,
         o = kops.paged_attention_sharded(
             mesh, q, new_kv["k_pages"], new_kv["v_pages"],
             block_tables, pos + K, window=window,
-            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
+            k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"),
+            gather_output=not shard_params)
     else:
         o = kops.paged_attention(
             q, new_kv["k_pages"], new_kv["v_pages"], block_tables,
@@ -715,9 +728,10 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
 
     With ``mesh`` the pools are sharded over the KV-head dim; the
     gathered prefix rows are constrained back to replicated before the
-    dense suffix attention so the math (and its reduction order) is the
-    single-device program — suffix prefill is a one-off per admission,
-    so the all-gather is cheap next to the decode-loop savings.
+    dense suffix attention (suffix prefill is a one-off per admission,
+    so the all-gather is cheap next to the decode-loop savings).  The
+    q/k/v/wo projections around it are partitioned by GSPMD from the
+    committed weight shardings when the backend shards its params.
     """
     from repro.quant.quantize import unpack_int4
     B, S = xn.shape[:2]
@@ -835,7 +849,8 @@ def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
 
 
 def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
-                      mesh=None) -> Tuple[jnp.ndarray, Params]:
+                      mesh=None,
+                      shard_params=False) -> Tuple[jnp.ndarray, Params]:
     """One decode step over a PAGED cache (per-slot positions).
 
     Same layer unroll as ``decode_step`` but attention reads/writes go
@@ -843,7 +858,11 @@ def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
     batch into one step without padding every slot to the longest —
     the continuous-batching scheduler's inner loop.  ``mesh`` enables
     the tensor-parallel attention path (pools sharded over KV heads,
-    paged attention per shard via ``shard_map``).
+    paged attention per shard via ``shard_map``); ``shard_params``
+    declares that the weights themselves are column/row-parallel so the
+    attention output stays head-sharded into row-parallel wo (GSPMD
+    partitions the MLP / embed / lm-head matmuls from the committed
+    param shardings on its own).
     """
     pos = cache["pos"]
     bt = cache["block_tables"]
@@ -858,7 +877,8 @@ def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
             pslice = jax.tree_util.tree_map(lambda v: v[li], gp)
             xn = L.norm(spec, pslice, "norm1", x)
             h, kv_new = _attn_decode_paged(spec, pslice, xn, pos, cslice,
-                                           bt, kind=base, mesh=mesh)
+                                           bt, kind=base, mesh=mesh,
+                                           shard_params=shard_params)
             y = x + h
             y2 = L.norm(spec, pslice, "norm2", y)
             if "router_w" in pslice:
@@ -874,7 +894,8 @@ def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
 
 
 def decode_window_paged(params, spec: ModelSpec, cache, tokens, lens, *,
-                        mesh=None) -> Tuple[jnp.ndarray, Params]:
+                        mesh=None,
+                        shard_params=False) -> Tuple[jnp.ndarray, Params]:
     """K-token decode window over a paged cache (speculative verify).
 
     ``tokens`` is (B, K): the last committed token followed by K-1
@@ -904,7 +925,8 @@ def decode_window_paged(params, spec: ModelSpec, cache, tokens, lens, *,
             pslice = jax.tree_util.tree_map(lambda v: v[li], gp)
             xn = L.norm(spec, pslice, "norm1", x)
             h, kv_new = _attn_decode_window_paged(
-                spec, pslice, xn, pos, lens, cslice, bt, kind=base, mesh=mesh)
+                spec, pslice, xn, pos, lens, cslice, bt, kind=base,
+                mesh=mesh, shard_params=shard_params)
             y = x + h
             y2 = L.norm(spec, pslice, "norm2", y)
             if "router_w" in pslice:
@@ -920,7 +942,7 @@ def decode_window_paged(params, spec: ModelSpec, cache, tokens, lens, *,
 
 
 def decode_step(params, spec: ModelSpec, cache, tokens, *,
-                mesh=None) -> Tuple[jnp.ndarray, Params]:
+                mesh=None, shard_params=False) -> Tuple[jnp.ndarray, Params]:
     """One decoding step for the whole batch. tokens: (B, 1) int32.
 
     Decode unrolls a python loop over layers with PER-LAYER cache buffers:
@@ -933,7 +955,8 @@ def decode_step(params, spec: ModelSpec, cache, tokens, *,
     to ``decode_step_paged``.
     """
     if "block_tables" in cache:
-        return decode_step_paged(params, spec, cache, tokens, mesh=mesh)
+        return decode_step_paged(params, spec, cache, tokens, mesh=mesh,
+                                 shard_params=shard_params)
     pos = cache["pos"]
     x = jnp.take(params["global"]["embed"], tokens, axis=0)
     if spec.name.startswith("gemma"):

@@ -31,6 +31,12 @@ def _div(n: int, k: int) -> bool:
     return k > 0 and n % k == 0
 
 
+#: (name, shape, tp) triples whose replicate-fallback warning already
+#: fired — module-level so tp sweeps (one ShardingRules per engine)
+#: warn once per distinct degradation, not once per sweep point.
+_PAGED_FALLBACK_WARNED: set = set()
+
+
 class ShardingRules:
     """Produces NamedShardings for params / batches / caches of one arch."""
 
@@ -215,11 +221,14 @@ class ShardingRules:
         runs (and stays token-identical), it just gains no per-device
         capacity.  Crashing here would make whole architectures (odd
         GQA head counts) unservable on a given cluster size.  The
-        divisibility is a property of (spec, tp), so warn ONCE per
-        rules instance, not once per pool entry per layer."""
-        if not getattr(self, "_warned_paged_fallback", False):
+        divisibility is a property of (name, shape, tp), so warn ONCE
+        per such triple ACROSS rules instances — tp sweeps build a
+        fresh ``ShardingRules`` per engine, and a per-instance flag
+        would re-emit the same warning for every point of the sweep."""
+        key = (name, tuple(shape), self.tp)
+        if key not in _PAGED_FALLBACK_WARNED:
             import warnings
-            self._warned_paged_fallback = True
+            _PAGED_FALLBACK_WARNED.add(key)
             warnings.warn(
                 f"paged KV pool {name!r} {shape}: num_kv_heads={kv} is not "
                 f"divisible by the model-axis size {self.tp}; replicating "

@@ -8,7 +8,17 @@ ship — ``SingleDeviceBackend`` (one device holds the whole pool) and
 ``ShardedPagedBackend`` (tensor-parallel: pools partitioned over the
 KV-head dim of the ``model`` mesh axis, block tables replicated,
 Pallas paged attention invoked per shard via ``shard_map``; weights
-replicated so output is token-for-token the single-device engine).
+sharded column-parallel for wq/wk/wv/w_gate/w_up and row-parallel for
+wo/w_down over the same axis, so per-shard attention consumes
+per-shard QKV natively and each sublayer reduces with ONE psum).
+
+Above the backends sits the DATA-PARALLEL axis: ``router.PrefixRouter``
+fronts N fully independent scheduler+backend replicas
+(``router.make_replicas`` slices ``jax.devices()`` into disjoint
+tp-sized groups), rendezvous-hashing each prompt's page-aligned
+template prefix to a replica so a template's prefix pages stay hot on
+ONE pool, with occupancy-aware overflow spill and steal-from-deepest
+rebalance on replica drain.
 
 With ``SchedulerConfig.spec_k > 1`` the engine decodes SELF-
 SPECULATIVELY: each slot drafts up to ``spec_k - 1`` tokens from its
@@ -20,32 +30,43 @@ Emissions are token-for-token the ``spec_k = 1`` greedy engine —
 speculation changes how many tokens an iteration commits, never which.
 
 Paged KV precision support matrix (``SchedulerConfig.cache_dtype`` x
-backend x decode mode) — every cell is exercised by tier-1 tests / the
-CI serve smokes (prefill, decode, prefix-cache, CoW per cell; sharded
-cells add preemption + recompute parity in
-tests/test_serve_backend_multidevice.py; spec-decode cells assert
-token identity with the non-speculative engine in
+parallelism axes x decode mode) — every cell is exercised by tier-1
+tests / the CI serve smokes (prefill, decode, prefix-cache, CoW per
+cell; sharded cells add preemption + recompute parity in
+tests/test_serve_backend_multidevice.py; routed cells in
+tests/test_serve_router.py + the ``--dp`` benchmark gate; spec-decode
+cells assert token identity with the non-speculative engine in
 tests/test_spec_decode.py and the ``--spec-decode`` benchmark gate):
 
-=========  ==========================  ===============================
-dtype      single device (tp=1)        sharded (tp=2 / tp=4)
-=========  ==========================  ===============================
-``fp32``   yes (all 4 paths;           yes — token-identical to tp=1
-           spec_k windows identical    (spec_k windows per shard,
-           to greedy)                  identical to tp=1 greedy)
-``int8``   yes (all 4 paths;           yes — token-identical to tp=1
-           spec_k windows identical
-           to greedy)
-``int4``   yes (nibble-packed pages;   yes — token-identical to tp=1
-           mid-byte splits RMW-        (packed pools + scale pages
-           preserve the neighbour      shard on the KV-head dim;
-           token; window scatters      spec_k gate in CI)
-           split by offset parity)
-=========  ==========================  ===============================
+=========  ====================  =======================  ==============
+dtype      single device         tp-sharded (tp=2/4):     dp replicas
+           (tp=1, dp=1)          KV pools + weights       (router)
+=========  ====================  =======================  ==============
+``fp32``   yes (all 4 paths;     yes — within tolerance   yes — within
+           spec_k windows        band of tp=1 (psum       band of dp=1
+           identical to          order may flip argmax    (replica
+           greedy)               near-ties; matching-     choice only
+                                 prefix fraction >= 0.9)  changes batch
+                                                          composition)
+``int8``   yes (all 4 paths)     yes — within band        yes — within
+                                                          band
+``int4``   yes (nibble-packed    yes — within band        yes — within
+           pages; mid-byte       (packed pools + scale    band (CI:
+           splits RMW-preserve   pages shard on the       dp=2 x tp=2
+           the neighbour token)  KV-head dim; spec_k      int4 smoke)
+                                 gate in CI)
+=========  ====================  =======================  ==============
 
-KV-head counts the model axis does not divide fall back to replicated
-pools with a warning (the engine still runs and still matches tp=1 —
-it just gains no per-device capacity).
+Tolerance band = per-request matching-prefix fraction >= 0.9
+(``tests/tolerance.assert_close_tokens``): the sharded psum reduces in
+a different order than single-device adds, so greedy streams may fork
+at an argmax near-tie.  KV-head counts the model axis does not divide
+fall back to replicated pools AND replicated weights with a
+once-per-(name, shape) warning — that cell keeps the old bitwise
+token-for-token contract (nothing reduces across shards).  dp
+replicas compose with any tp cell: each replica owns a disjoint
+device slice, a private pool and prefix store, and the router never
+reaches past ``submit``/``step``/``queue``/``num_active``.
 
 Quantized pages store per-token-per-head f32 scales next to the int8
 pools in LANE-MAJOR (P, KV, page) layout — the token dim rides the
@@ -59,10 +80,15 @@ dequantizes int8 / unpacks int4 in VMEM inside the online-softmax loop
 — ``benchmarks/kernel_bench.py`` reports the page-byte ratios (0.27x
 fp32 for int8, 0.14x for int4 at head_dim 64) plus the physical scale
 tile bytes of both layouts; ``benchmarks/serve_throughput.py
---cache-dtype int4 --prefix`` gates output equivalence end to end and
+--cache-dtype int4 --prefix`` gates output equivalence end to end,
 ``--devices N`` gates the sharded backend against single-device
-outputs while reporting measured vs ``predict_serve_throughput(tp=N)``
-per-device page-pool occupancy.
+outputs (tolerance band + per-device weight bytes <= 0.6x replicated)
+while reporting measured vs ``predict_serve_throughput(tp=N)``
+per-device page-pool occupancy, and ``--dp R`` gates the routed fleet
+(prefix-aware beats random routing on prefix-cache hits, aggregate
+decode tokens/s >= 1.6x dp=1) next to the analytical tp x dp cluster
+grid (``core.latency.serve_cluster_grid``: tokens/s/device and
+cost-per-million-tokens per cell).
 """
 from repro.serve.backend import (PagedKVBackend, ShardedPagedBackend,
                                  SingleDeviceBackend, make_backend)
@@ -70,6 +96,8 @@ from repro.serve.engine import ServeConfig, generate, load_quantized, make_prefi
 from repro.serve.paged_cache import (PageAllocator, PrefixCache, PrefixMatch,
                                      copy_page, make_layout, pages_needed,
                                      plan_for_layout)
+from repro.serve.router import (PrefixRouter, make_replicas, pick_replica,
+                                route_key)
 from repro.serve.scheduler import (Completion, ContinuousBatchingEngine,
                                    Request, SchedulerConfig)
 from repro.serve.spec_decode import NGramDraftTable

@@ -23,17 +23,26 @@ Two backends ship:
   tables and per-slot positions stay replicated host state, and the
   paged-attention op runs PER SHARD under ``shard_map``
   (``kernels.ops.paged_attention_sharded`` — the Pallas kernel on TPU).
-  Weights are kept replicated and the attention output is gathered
-  before the output projection, so every matmul executes the exact
-  single-device program: the sharded engine is token-for-token
-  IDENTICAL to ``SingleDeviceBackend`` for all three cache dtypes
-  (asserted in tests/test_serve_backend_multidevice.py).  What tp buys
+  The WEIGHTS shard too: wq/wk/wv and mlp_wi column-parallel, wo and
+  mlp_wo row-parallel (``ShardingRules.param_pspec``), so per-shard
+  attention consumes per-shard QKV natively, the head-sharded
+  attention output flows straight into row-parallel wo, and GSPMD
+  inserts the megatron block's single psum per sublayer — no
+  replicated-weight gathers anywhere on the decode path.  What tp buys
   is per-device KV capacity (each device stores ceil(KV/tp) heads of
   every page, so the same per-device byte budget addresses ~tp x more
-  pages — ``make_layout(tp=)``) and 1/tp of the decode-loop KV traffic
-  (``core.latency.mixed_iteration_cost(tp=)``).  KV-head counts that
-  the axis does not divide fall back to replicated pools (clear
-  warning, no crash): the engine still runs, it just gains no capacity.
+  pages — ``make_layout(tp=)``), 1/tp of the decode-loop KV traffic,
+  AND 1/tp of the per-device weight traffic + FLOPs
+  (``core.latency.mixed_iteration_cost(tp=)``); small-batch decode is
+  weight-traffic-bound, so the weight split is the per-device
+  bandwidth relief.  The parity contract is a TOLERANCE BAND, not
+  bitwise identity: psum reduction order differs from the
+  single-device program, so greedy streams may diverge after an
+  argmax near-tie (tests/tolerance.py's ``assert_close_tokens`` bands
+  the matching prefix).  KV-head counts the axis does not divide fall
+  back to FULLY replicated state — pools AND weights — which keeps the
+  old exact token-for-token contract (clear warning, no crash): the
+  engine still runs, it just gains no capacity.
 """
 from __future__ import annotations
 
@@ -92,20 +101,22 @@ def _admit_prefix_fn(params, batch, cache, slot, prefix_len, true_len,
     return jnp.argmax(logits[0, 0]), new_cache
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "mesh"),
+@functools.partial(jax.jit, static_argnames=("spec", "mesh", "shard_params"),
                    donate_argnums=(1,))
-def _decode_fn(params, cache, tokens, active, *, spec, mesh=None):
-    logits, cache = lm.decode_step(params, spec, cache, tokens, mesh=mesh)
+def _decode_fn(params, cache, tokens, active, *, spec, mesh=None,
+               shard_params=False):
+    logits, cache = lm.decode_step(params, spec, cache, tokens, mesh=mesh,
+                                   shard_params=shard_params)
     # pin inactive slots at pos 0 so their (clamped) block-table lookups
     # stay on the null page indefinitely
     cache["pos"] = cache["pos"] * active
     return jnp.argmax(logits[:, 0], axis=-1), cache
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "mesh"),
+@functools.partial(jax.jit, static_argnames=("spec", "mesh", "shard_params"),
                    donate_argnums=(1,))
 def _decode_window_fn(params, cache, tokens, active, lens, *, spec,
-                      mesh=None):
+                      mesh=None, shard_params=False):
     """Fused speculative verify step: score a K-token window per slot
     (last committed token + K-1 drafts), greedy-accept drafts ON DEVICE,
     and advance each slot's pos by exactly the emitted count — the
@@ -118,7 +129,8 @@ def _decode_window_fn(params, cache, tokens, active, lens, *, spec,
     """
     pos0 = cache["pos"]
     logits, cache = lm.decode_window_paged(params, spec, cache, tokens,
-                                           lens, mesh=mesh)
+                                           lens, mesh=mesh,
+                                           shard_params=shard_params)
     out = jnp.argmax(logits, axis=-1)                       # (B, K)
     K = tokens.shape[1]
     j = jnp.arange(K - 1)
@@ -190,6 +202,9 @@ class SingleDeviceBackend(PagedKVBackend):
 
     #: Mesh handed to the jitted steps; None on a single device.
     mesh = None
+    #: True when _place() committed column/row-parallel weight
+    #: shardings (the sharded backend with dividable head counts).
+    weights_sharded = False
 
     def __init__(self, params: Any, spec: ModelSpec, cfg):
         self.params, self.spec, self.cfg = params, spec, cfg
@@ -206,9 +221,11 @@ class SingleDeviceBackend(PagedKVBackend):
         self._admit_pref = functools.partial(_admit_prefix_fn, spec=spec,
                                              mesh=self.mesh)
         self._decode = functools.partial(_decode_fn, spec=spec,
-                                         mesh=self.mesh)
+                                         mesh=self.mesh,
+                                         shard_params=self.weights_sharded)
         self._decode_window = functools.partial(_decode_window_fn, spec=spec,
-                                                mesh=self.mesh)
+                                                mesh=self.mesh,
+                                                shard_params=self.weights_sharded)
 
     def _init_cache(self):
         """Build the paged device cache; subclasses override to create
@@ -218,6 +235,23 @@ class SingleDeviceBackend(PagedKVBackend):
 
     def _place(self) -> None:
         """Hook for subclasses to device_put the params (shardings)."""
+
+    def param_bytes_per_device(self) -> int:
+        """Bytes of weight state ONE device holds (= per-device weight
+        traffic of a decode step, since decode streams every weight
+        once).  Uses the committed shardings' ``shard_shape``, so it
+        measures what sharding actually achieved: replicated leaves
+        (norms, the odd-KV fallback) count in full, column/row-split
+        leaves count their slice."""
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self.params):
+            sh = getattr(leaf, "sharding", None)
+            if sh is not None:
+                shape = sh.shard_shape(leaf.shape)
+            else:
+                shape = leaf.shape
+            total += int(np.prod(shape)) * leaf.dtype.itemsize
+        return total
 
     def admit_full(self, padded_tokens, slot, true_len, bt_row) -> int:
         tok0, self.cache = self._admit(
@@ -262,9 +296,9 @@ class SingleDeviceBackend(PagedKVBackend):
 
 class ShardedPagedBackend(SingleDeviceBackend):
     """Tensor-parallel paged serving: pools sharded over the KV-head dim
-    of the ``model`` mesh axis, block tables replicated, attention per
-    shard.  See the module docstring for the exactness/capacity
-    contract."""
+    of the ``model`` mesh axis, weights column/row-parallel over the
+    same axis, block tables replicated, attention per shard.  See the
+    module docstring for the tolerance/capacity contract."""
 
     def __init__(self, params: Any, spec: ModelSpec, cfg,
                  tp: Optional[int] = None,
@@ -302,11 +336,21 @@ class ShardedPagedBackend(SingleDeviceBackend):
 
     def _place(self) -> None:
         from jax.sharding import NamedSharding, PartitionSpec as P
-        # replicated weights: every device runs the full projections/MLP
-        # so logits (and greedy tokens) are bitwise the single-device
-        # program; TP buys KV capacity + traffic, not weight sharding
-        rep = NamedSharding(self._mesh, P())
-        self.params = jax.device_put(self.params, rep)
+        if getattr(self, "pools_sharded", False):
+            # column/row-parallel weights over the same "model" axis as
+            # the pools: per-shard QKV feeds per-shard attention, the
+            # head-sharded output reduces through row-parallel wo with
+            # one psum, and per-device weight bytes drop ~1/tp — the
+            # bandwidth relief small-batch decode is bound by
+            self.params = jax.device_put(
+                self.params, self.rules.param_shardings(self.params))
+            self.weights_sharded = True
+        else:
+            # odd-KV fallback: pools replicate, so weights replicate
+            # too and every matmul executes the exact single-device
+            # program — this branch keeps the bitwise parity contract
+            rep = NamedSharding(self._mesh, P())
+            self.params = jax.device_put(self.params, rep)
 
     @property
     def mesh(self):
@@ -320,10 +364,14 @@ class ShardedPagedBackend(SingleDeviceBackend):
 
 
 def make_backend(params: Any, spec: ModelSpec, cfg, *,
-                 devices: int = 1) -> PagedKVBackend:
+                 devices: int = 1,
+                 device_list: Optional[List] = None) -> PagedKVBackend:
     """Backend factory the launcher/benchmarks use: ``devices`` == 1 is
-    the single-device pool, > 1 the KV-head-sharded tensor-parallel
-    backend over the first ``devices`` jax devices."""
+    the single-device pool, > 1 the tensor-parallel backend (KV pools
+    AND weights sharded) over the first ``devices`` jax devices —
+    or over an explicit ``device_list`` (the dp router hands each
+    replica its own disjoint slice)."""
     if devices <= 1:
         return SingleDeviceBackend(params, spec, cfg)
-    return ShardedPagedBackend(params, spec, cfg, tp=devices)
+    return ShardedPagedBackend(params, spec, cfg, tp=devices,
+                               devices=device_list)

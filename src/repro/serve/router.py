@@ -1,0 +1,238 @@
+"""Prefix-aware data-parallel router: N engines, one front door.
+
+Tensor parallelism (``ShardedPagedBackend``) shrinks per-device weight
+and KV traffic; DATA parallelism multiplies aggregate slots by running
+N fully independent scheduler+backend replicas.  The piece that makes
+dp work for templated serving is the ROUTER: each replica owns a
+private page pool and prefix cache, so two requests sharing a template
+prefix only reuse pages if they land on the SAME replica.  Spraying
+requests round-robin would cold-prefill every template on every
+replica; hashing the template prefix pins each template's traffic to
+one replica, so its prefix pages stay hot there.
+
+Routing is rendezvous (highest-random-weight) hashing over the live
+replica ids: every (key, replica) pair gets an independent hash score
+and the key goes to the max.  Unlike modular hashing, removing a
+replica only remaps the keys that replica owned — every other key's
+max is untouched — which is exactly the drain/failure behaviour a
+serve fleet wants (tests/test_serve_router.py pins this).
+
+The key is the PAGE-ALIGNED template prefix (first ``route_pages``
+pages of the prompt, floored to a page boundary): page granularity is
+what the prefix cache can actually share, and flooring keeps a
+template's requests — which differ only past the template — on one
+key even when their suffixes differ in length.
+
+Two liveness escape hatches temper the affinity:
+
+* overflow SPILL at submit: if the hashed replica is backed up by
+  ``spill_slack`` more pending requests than the least-loaded replica,
+  the request goes to the latter (losing affinity beats queuing).
+* REBALANCE on drain: an idle replica steals queued (not yet admitted)
+  requests from the back of the deepest queue, so the fleet never
+  sits half-idle while one replica has a backlog.
+
+Replicas are plain ``ContinuousBatchingEngine`` instances — the router
+never reaches past ``submit``/``step``/``queue``/``num_active``, so
+any mix of single-device and tensor-parallel backends works; tp x dp
+clusters give each replica its own disjoint device slice
+(``make_replicas``).  Outputs are per-request identical-in-band to a
+single dp=1 engine: which replica decodes a request changes batch
+composition, never the per-slot decode math.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def route_key(prompt, *, page_size: int = 16, route_pages: int = 2) -> bytes:
+    """Page-aligned template-prefix key for a prompt.
+
+    Takes the first ``route_pages * page_size`` tokens floored to a
+    page boundary (whole short prompts key on themselves): requests
+    sharing a template agree on these pages even though their suffixes
+    differ, so they hash to the same replica."""
+    toks = np.asarray(prompt, dtype=np.int64).ravel()
+    n = min(len(toks), route_pages * page_size)
+    aligned = (n // page_size) * page_size
+    return toks[: aligned if aligned else n].tobytes()
+
+
+def _score(key: bytes, replica_id: str) -> int:
+    h = hashlib.blake2b(key + b"|" + replica_id.encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
+
+def pick_replica(key: bytes, replica_ids: Sequence[str]) -> str:
+    """Rendezvous hashing: the live replica with the max (key, id) hash
+    score.  Deterministic in (key, id set); removing an id never
+    changes the winner of a key it did not win."""
+    if not replica_ids:
+        raise ValueError("no live replicas")
+    return max(replica_ids, key=lambda r: _score(key, r))
+
+
+class PrefixRouter:
+    """Front door over N scheduler replicas (see module docstring).
+
+    ``engines`` maps replica id -> ``ContinuousBatchingEngine`` (or a
+    list, ids becoming "r0".."rN-1").  Pass ``engines=None`` ids-only
+    for pure routing-policy use (the determinism tests).  ``mode`` is
+    "prefix" (rendezvous on the template prefix) or "random" (seeded
+    uniform — the affinity-free baseline the benchmark compares
+    against)."""
+
+    def __init__(self, engines=None, *, replica_ids: Optional[Sequence[str]] = None,
+                 page_size: int = 16, route_pages: int = 2,
+                 spill_slack: int = 4, mode: str = "prefix", seed: int = 0):
+        if engines is None:
+            if replica_ids is None:
+                raise ValueError("need engines or replica_ids")
+            self.engines: Dict[str, Any] = {r: None for r in replica_ids}
+        elif isinstance(engines, dict):
+            self.engines = dict(engines)
+        else:
+            self.engines = {f"r{i}": e for i, e in enumerate(engines)}
+        if mode not in ("prefix", "random"):
+            raise ValueError(f"unknown route mode {mode!r}")
+        self.page_size = page_size
+        self.route_pages = route_pages
+        self.spill_slack = spill_slack
+        self.mode = mode
+        self._rng = np.random.default_rng(seed)
+        self.busy_s: Dict[str, float] = {r: 0.0 for r in self.engines}
+        self.stats: Dict[str, float] = {
+            "routed": 0, "spilled": 0, "rebalanced": 0}
+        self.assigned: Dict[str, int] = {r: 0 for r in self.engines}
+
+    # -- routing policy (pure, engine-free) ---------------------------------
+    @property
+    def replica_ids(self) -> List[str]:
+        return list(self.engines)
+
+    def route(self, prompt) -> str:
+        """The replica this prompt's template prefix hashes to — the
+        policy only, no load awareness (``submit`` adds spill)."""
+        if self.mode == "random":
+            ids = self.replica_ids
+            return ids[int(self._rng.integers(len(ids)))]
+        key = route_key(prompt, page_size=self.page_size,
+                        route_pages=self.route_pages)
+        return pick_replica(key, self.replica_ids)
+
+    def remove(self, replica_id: str) -> None:
+        """Drop a replica from the live set (drain/failure).  Keys it
+        owned remap by rendezvous; every other key keeps its replica."""
+        del self.engines[replica_id]
+
+    # -- load-aware dispatch ------------------------------------------------
+    def _load(self, rid: str) -> int:
+        eng = self.engines[rid]
+        return len(eng.queue) + eng.num_active
+
+    def submit(self, req) -> str:
+        """Route + enqueue one request; returns the replica id chosen.
+        Spills off the hashed replica only when it leads the least-
+        loaded one by more than ``spill_slack`` pending requests."""
+        target = self.route(req.prompt)
+        if self.engines[target] is not None and len(self.engines) > 1:
+            least = min(self.engines, key=self._load)
+            if self._load(target) - self._load(least) > self.spill_slack:
+                target = least
+                self.stats["spilled"] += 1
+        self.stats["routed"] += 1
+        self.assigned[target] = self.assigned.get(target, 0) + 1
+        if self.engines[target] is not None:
+            self.engines[target].submit(req)
+        return target
+
+    def rebalance(self) -> int:
+        """Let idle replicas steal queued (never admitted) work from
+        the back of the deepest queue; returns requests moved."""
+        moved = 0
+        idle = [r for r, e in self.engines.items()
+                if e is not None and e.num_active == 0 and not e.queue]
+        for rid in idle:
+            donor = max(self.engines, key=lambda r: len(self.engines[r].queue))
+            dq = self.engines[donor].queue
+            if donor == rid or len(dq) < 2:
+                continue
+            req = dq.pop()                       # tail: head keeps FCFS
+            self.engines[rid].submit(req)
+            moved += 1
+        self.stats["rebalanced"] += moved
+        return moved
+
+    # -- serve loop ---------------------------------------------------------
+    def step(self) -> List:
+        """One scheduler iteration on every replica that has work,
+        tracking per-replica busy seconds (each replica's decode rate
+        is its tokens over ITS OWN busy time: replicas are independent
+        engines that a test host merely time-slices, so the fleet's
+        aggregate rate is the sum of per-replica rates)."""
+        out: List = []
+        for rid, eng in self.engines.items():
+            if eng is None or (eng.num_active == 0 and not eng.queue):
+                continue
+            t0 = time.perf_counter()
+            out.extend(eng.step())
+            self.busy_s[rid] += time.perf_counter() - t0
+        self.rebalance()
+        return out
+
+    def run(self, requests: Sequence) -> List:
+        """Route and drain a whole workload; completions sorted by uid."""
+        for req in requests:
+            self.submit(req)
+        done: List = []
+        while any(e is not None and (e.num_active or e.queue)
+                  for e in self.engines.values()):
+            done.extend(self.step())
+        return sorted(done, key=lambda c: c.uid)
+
+    def aggregate_stats(self) -> Dict[str, float]:
+        """Fleet totals: summed engine counters, per-replica busy time
+        and the aggregate decode rate (sum of per-replica rates)."""
+        agg: Dict[str, float] = dict(self.stats)
+        rate = 0.0
+        for rid, eng in self.engines.items():
+            if eng is None:
+                continue
+            for k, v in eng.stats.items():
+                agg[k] = agg.get(k, 0) + v
+            if self.busy_s[rid] > 0:
+                rate += eng.stats["decode_tokens"] / self.busy_s[rid]
+        agg["aggregate_decode_tokens_per_s"] = rate
+        agg["busy_s"] = dict(self.busy_s)
+        agg["assigned"] = dict(self.assigned)
+        return agg
+
+
+def make_replicas(params, spec, cfg, *, dp: int, tp: int = 1) -> List:
+    """dp independent engines over disjoint device slices: replica r
+    runs on ``jax.devices()[r*tp:(r+1)*tp]`` (tp=1 replicas share the
+    default device on a test host — independent on real hardware)."""
+    import jax
+
+    from repro.serve.backend import make_backend
+    from repro.serve.scheduler import ContinuousBatchingEngine
+
+    if tp > 1 and dp * tp > len(jax.devices()):
+        raise RuntimeError(
+            f"dp={dp} x tp={tp} needs {dp * tp} devices, "
+            f"have {len(jax.devices())}")
+    engines = []
+    for r in range(dp):
+        if tp > 1:
+            devs = jax.devices()[r * tp:(r + 1) * tp]
+            backend = make_backend(params, spec, cfg, devices=tp,
+                                   device_list=devs)
+        else:
+            backend = make_backend(params, spec, cfg, devices=1)
+        engines.append(ContinuousBatchingEngine(params, spec, cfg,
+                                                backend=backend))
+    return engines

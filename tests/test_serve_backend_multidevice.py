@@ -2,11 +2,14 @@
 
 The tensor-parallel ``ShardedPagedBackend`` partitions the KV page
 pools (and lane-major int8/int4 scale pages) over the KV-head dim of
-the ``model`` mesh axis, keeps block tables replicated host state, and
-runs the paged attention per shard under ``shard_map`` — its contract
-is TOKEN-FOR-TOKEN identity with ``SingleDeviceBackend`` (weights stay
-replicated and the attention output is gathered before the output
-projection, so every matmul executes the exact single-device program).
+the ``model`` mesh axis AND the weights column/row-parallel over the
+same axis, keeps block tables replicated host state, and runs the
+paged attention per shard under ``shard_map``.  Sharded weights change
+matmul reduction order (per-shard partials + one psum), so the parity
+contract vs ``SingleDeviceBackend`` is a TOLERANCE BAND on the greedy
+stream (``tolerance.assert_close_tokens`` — matching-prefix fraction),
+not bitwise identity; only the odd-KV replicate fallback, which keeps
+weights replicated too, still promises exact tokens.
 
 jax locks the device count at first init, so these run in subprocesses
 with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the same
@@ -25,7 +28,10 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def _run(code: str, timeout=900):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    # tests/ on the path so subprocess code can import the shared
+    # tolerance helpers
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), os.path.join(ROOT, "tests")])
     p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=timeout,
                        env=env)
@@ -35,6 +41,7 @@ def _run(code: str, timeout=900):
 
 PRELUDE = """
 import numpy as np, jax, jax.numpy as jnp
+from tolerance import assert_close_tokens
 from repro.configs import ASSIGNED
 from repro.models import lm
 from repro.serve.backend import (ShardedPagedBackend, SingleDeviceBackend,
@@ -78,16 +85,19 @@ def run_engine(tp, cache_dtype, num_pages=24, page_size=16, slots=3,
 
 @pytest.mark.parametrize("cache_dtype", ["fp32", "int8", "int4"])
 def test_sharded_backend_token_parity(cache_dtype):
-    """tp=2 and tp=4 sharded engines emit token-for-token the
-    single-device outputs on a shared-prefix workload (full-page
+    """tp=2 and tp=4 sharded engines stay within the tolerance band of
+    the single-device outputs on a shared-prefix workload (full-page
     sharing + mid-page CoW + suffix prefill), for every cache dtype;
-    pools really shard and every page reference unwinds."""
+    pools AND weights really shard, per-device weight bytes drop below
+    0.6x the replicated baseline, and every page reference unwinds."""
     out = _run(PRELUDE + f"""
 base, base_eng = run_engine(1, {cache_dtype!r})
 assert base_eng.stats['prefix_hit_tokens'] > 0
+rep_bytes = base_eng.backend.param_bytes_per_device()
 for tp in (2, 4):
     done, eng = run_engine(tp, {cache_dtype!r})
     assert eng.backend.pools_sharded, 'pools failed to shard'
+    assert eng.backend.weights_sharded, 'weights failed to shard'
     assert eng.backend.tp == tp
     # the pool entry really is partitioned over the model axis
     entry = eng.backend.cache['groups'][0][0]
@@ -95,8 +105,15 @@ for tp in (2, 4):
     assert kspec[2] == 'model', f'KV dim not sharded: {{kspec}}'
     bspec = eng.backend.cache['block_tables'].sharding.spec
     assert all(s is None for s in bspec), f'block tables sharded: {{bspec}}'
+    # a projection weight really is split (column-parallel wq)
+    wq = eng.backend.params['groups'][0]['wq']
+    assert 'model' in tuple(wq.sharding.spec), wq.sharding.spec
+    # per-device weight traffic <= 0.6x replicated (norms/biases stay
+    # replicated, so the ratio lands near 1/tp but above it)
+    dev_bytes = eng.backend.param_bytes_per_device()
+    assert dev_bytes <= 0.6 * rep_bytes, (dev_bytes, rep_bytes)
     for a, b in zip(base, done):
-        assert np.array_equal(a.tokens, b.tokens), (tp, a.uid)
+        assert_close_tokens(a.tokens, b.tokens, context=f'tp={{tp}} {{a.uid}}')
 print('OK')
 """)
     assert "OK" in out
@@ -104,10 +121,11 @@ print('OK')
 
 def test_sharded_backend_preemption_parity_int4():
     """A pool too small for all admitted contexts forces preemption on
-    both backends; the sharded int4 engine still matches the
-    single-device engine token-for-token and unwinds every reference
-    (the recompute-requeue path crosses admit/release/CoW on sharded
-    pools)."""
+    both backends; the weight-sharded int4 engine stays within the
+    tolerance band of the single-device engine and unwinds every
+    reference (the recompute-requeue path crosses admit/release/CoW on
+    sharded pools).  Preemption COUNTS stay exactly equal: the
+    allocator's page arithmetic depends on lengths, not token values."""
     out = _run(PRELUDE + """
 rng = np.random.default_rng(2)
 T = rng.integers(0, 128, size=16).astype(np.int32)
@@ -121,7 +139,7 @@ done, e2 = run_engine(2, 'int4', num_pages=11, page_size=8, slots=4,
 assert e1.stats['preemptions'] >= 1 and e2.stats['preemptions'] >= 1
 assert e1.stats['preemptions'] == e2.stats['preemptions']
 for a, b in zip(base, done):
-    assert np.array_equal(a.tokens, b.tokens)
+    assert_close_tokens(a.tokens, b.tokens, context=f'uid={a.uid}')
 e2.prefix_cache.flush(); e2.alloc.check()
 assert e2.alloc.free_pages == e2.layout.num_pages - 1
 print('OK')
@@ -131,8 +149,10 @@ print('OK')
 
 def test_odd_kv_heads_fall_back_to_replication():
     """A KV-head count the model axis does not divide must WARN and
-    replicate the pools (no crash, no shard_map) — and the engine still
-    matches single-device output."""
+    replicate the pools AND the weights (no crash, no shard_map) — the
+    fallback keeps the exact bitwise token contract, so this stays
+    ``np.array_equal``, not the tolerance band.  The warning fires once
+    per (name, shape): a second engine over the same spec adds none."""
     out = _run(PRELUDE + """
 import warnings
 spec1 = spec.with_(num_kv_heads=1)          # MQA: kv=1, tp=2 cannot divide
@@ -148,19 +168,29 @@ with warnings.catch_warnings(record=True) as w:
 msgs = [str(x.message) for x in w]
 assert any('divisible' in m and 'replicating' in m for m in msgs), msgs
 assert not eng.backend.pools_sharded and eng.backend.mesh is None
+assert not eng.backend.weights_sharded
 for a, b in zip(base, done):
     assert np.array_equal(a.tokens, b.tokens)
+# per-(name, shape) dedup: the same degradation re-created in a new
+# engine (fresh ShardingRules instance) must NOT warn again
+with warnings.catch_warnings(record=True) as w2:
+    warnings.simplefilter('always')
+    run_engine(2, 'int8', reqs=reqs[:1], spec=spec1, params=params1)
+again = [str(x.message) for x in w2 if 'replicating' in str(x.message)]
+assert not again, again
 print('OK')
 """)
     assert "OK" in out
 
 
 def test_sharded_spec_decode_token_parity():
-    """Self-speculative decoding over the KV-head-sharded backend: the
+    """Self-speculative decoding over the weight-sharded backend: the
     tp=2 engine with spec_k=4 verify windows (multi-query paged
-    attention per shard under shard_map) emits token-for-token the
-    single-device NON-speculative greedy output, for every cache dtype
-    — speculation and sharding compose without touching emissions."""
+    attention per shard under shard_map) stays within the tolerance
+    band of the single-device NON-speculative greedy output, for every
+    cache dtype — speculation and sharding compose, and acceptance is
+    still self-consistent (every emitted token is the verify program's
+    own argmax)."""
     out = _run(PRELUDE + """
 # decode budgets long enough that greedy streams reach their
 # repetitive tails — otherwise the n-gram table never proposes and
@@ -189,7 +219,8 @@ for cache_dtype in ('fp32', 'int8', 'int4'):
     assert eng.stats['spec_steps'] > 0 and eng.stats['spec_accepted'] > 0, \
         (cache_dtype, eng.stats)
     for a, b in zip(base, done):
-        assert np.array_equal(a.tokens, b.tokens), (cache_dtype, a.uid)
+        assert_close_tokens(a.tokens, b.tokens,
+                            context=f'{cache_dtype} uid={a.uid}')
 print('OK')
 """)
     assert "OK" in out

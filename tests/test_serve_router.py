@@ -1,0 +1,97 @@
+"""Router policy tests: pure host logic, no devices, no engines.
+
+The dp serve fleet's correctness-critical property is DETERMINISTIC
+AFFINITY: a template's requests must keep landing on one replica (or
+its prefix pages never hit), and replica removal must not reshuffle
+the rest of the fleet (or a drain cold-starts every template).  Both
+are properties of the rendezvous hash alone, so they test without
+building a single engine.
+"""
+import numpy as np
+import pytest
+
+from repro.serve.router import PrefixRouter, pick_replica, route_key
+
+
+def _templated_prompts(n_templates=4, per_template=6, template_len=40,
+                       seed=0, vocab=256):
+    rng = np.random.default_rng(seed)
+    groups = []
+    for _ in range(n_templates):
+        t = rng.integers(0, vocab, size=template_len).astype(np.int32)
+        prompts = [np.concatenate(
+            [t, rng.integers(0, vocab,
+                             size=int(rng.integers(4, 12))).astype(np.int32)])
+            for _ in range(per_template)]
+        groups.append(prompts)
+    return groups
+
+
+def test_same_template_same_replica():
+    """Every request sharing a template prefix routes to one replica,
+    across router instances (determinism, not an instance cache)."""
+    for dp in (2, 3, 4):
+        r1 = PrefixRouter(replica_ids=[f"r{i}" for i in range(dp)])
+        r2 = PrefixRouter(replica_ids=[f"r{i}" for i in range(dp)])
+        for prompts in _templated_prompts():
+            picks = {r1.route(p) for p in prompts}
+            assert len(picks) == 1, f"template split across {picks}"
+            assert {r2.route(p) for p in prompts} == picks
+
+
+def test_distinct_templates_spread_at_dp2():
+    """4 distinct templates must use >= 2 replicas at dp=2 — a hash
+    that collapsed everything onto one replica would make dp useless
+    for the templated workload."""
+    router = PrefixRouter(replica_ids=["r0", "r1"])
+    picks = {router.route(prompts[0])
+             for prompts in _templated_prompts(n_templates=4)}
+    assert len(picks) >= 2, picks
+
+
+def test_removal_only_remaps_own_keys():
+    """Rendezvous property: dropping one replica remaps ONLY the keys
+    it owned; every other key keeps its replica."""
+    ids = [f"r{i}" for i in range(4)]
+    router = PrefixRouter(replica_ids=list(ids))
+    groups = _templated_prompts(n_templates=12, per_template=1)
+    before = {i: router.route(g[0]) for i, g in enumerate(groups)}
+    victim = before[0]                    # some replica that owns keys
+    router.remove(victim)
+    after = {i: router.route(g[0]) for i, g in enumerate(groups)}
+    for i, owner in before.items():
+        if owner == victim:
+            assert after[i] != victim     # remapped somewhere live
+        else:
+            assert after[i] == owner, (i, owner, after[i])
+
+
+def test_route_key_page_alignment():
+    """Suffixes of different length past the page-aligned template
+    prefix must not change the key; a different template must."""
+    rng = np.random.default_rng(3)
+    t = rng.integers(0, 256, size=20).astype(np.int32)   # 1+ page @ 16
+    a = np.concatenate([t, rng.integers(0, 256, size=5).astype(np.int32)])
+    b = np.concatenate([t, rng.integers(0, 256, size=11).astype(np.int32)])
+    assert route_key(a, page_size=16) == route_key(b, page_size=16)
+    t2 = rng.integers(0, 256, size=20).astype(np.int32)
+    c = np.concatenate([t2, a[20:]])
+    assert route_key(a, page_size=16) != route_key(c, page_size=16)
+    # sub-page prompts key on themselves (still deterministic)
+    short = t[:7]
+    assert route_key(short, page_size=16) == route_key(short.copy(),
+                                                       page_size=16)
+
+
+def test_pick_replica_rejects_empty():
+    with pytest.raises(ValueError):
+        pick_replica(b"key", [])
+
+
+def test_random_mode_ignores_prefix():
+    """The benchmark's baseline: random mode spreads one template's
+    requests across replicas (seeded, so the comparison reproduces)."""
+    router = PrefixRouter(replica_ids=["r0", "r1"], mode="random", seed=0)
+    prompts = _templated_prompts(n_templates=1, per_template=32)[0]
+    picks = {router.route(p) for p in prompts}
+    assert picks == {"r0", "r1"}
