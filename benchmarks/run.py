@@ -53,6 +53,13 @@ def tier1() -> None:
           "--cache-dtype", "int4",
           "--json", "BENCH_serve_dp_router.json"],
          {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}),
+        # open-loop SLO gate: Poisson arrivals at a qps where the
+        # unchunked engine's long-prompt admissions blow the p99
+        # inter-token SLO — chunked prefill must cut p99 ITL and hold
+        # goodput at equal pool bytes with identical outputs; the
+        # JSON artifact carries the latency percentiles
+        ([sys.executable, bench, "--open-loop", "--qps", "8", "--smoke",
+          "--json", "BENCH_serve_open_loop.json"], {}),
         # self-speculative decoding gate: outputs identical to
         # non-speculative greedy, >= 1.3x decode tokens/s on the
         # repetitive workload, measured acceptance inside the

@@ -1,7 +1,7 @@
-"""Continuous batching vs static ``generate``, plus the shared-prefix
-and self-speculative-decoding gates.
+"""Continuous batching vs static ``generate``, plus the shared-prefix,
+self-speculative-decoding and open-loop chunked-prefill gates.
 
-Three experiments:
+Experiments:
 
 * default — N requests with prompts spread over 32-512 tokens and
   varied decode budgets.  Static batching pads every batch member to
@@ -63,6 +63,24 @@ aggregate decode tokens/s (sum of per-replica rates over their own
 busy time — replicas are time-sliced on a test host, independent on
 real hardware) reaches >= 1.6x the dp=1 rate.  Combine with
 ``--devices`` for tp-per-replica (dp x tp disjoint device slices).
+
+``--open-loop`` is the chunked-prefill SLO gate: an interactive mix
+(short chat turns + every 4th request a long document prompt) arrives
+on an OPEN-LOOP Poisson clock at ``--qps`` — arrivals keep their
+schedule whether or not the engine has capacity, which is what lets
+queueing delay and admission spikes stack up (the closed-loop drivers
+above can never see them).  The same workload runs on an unchunked
+engine and on one with ``--prefill-chunk`` tokens of per-iteration
+prefill budget, at EQUAL pool bytes.  Reports p50/p99 TTFT and
+inter-token latency plus goodput-under-SLO (tokens of requests meeting
+both SLOs per second of makespan); gates that the unchunked engine
+VIOLATES the ITL SLO at the target qps (else the operating point is
+too easy to mean anything), that chunking cuts p99 ITL, that goodput
+does not drop, and that outputs stay token-for-token identical —
+chunking changes scheduling, never per-slot decode math.
+``core.latency.predict_serve_throughput(chunk_tokens=)``'s TTFT/ITL
+decomposition prints next to the measurements.  Full (non-smoke) mode
+sweeps 0.5x/1x/1.5x the target qps for the goodput curve.
 """
 from __future__ import annotations
 
@@ -605,6 +623,232 @@ def run_dp(smoke: bool = False, cache_dtype: str = "fp32", dp: int = 2,
             hit_prefix, hit_random)
 
 
+def _poisson_arrivals(n: int, qps: float, seed: int = 0) -> np.ndarray:
+    """Open-loop arrival clock: exponential inter-arrival gaps at rate
+    ``qps`` (a Poisson process).  Open-loop means arrivals do NOT wait
+    for capacity — the generator keeps its schedule even when the
+    engine is backed up, which is what exposes queueing delay; the
+    closed-loop drivers above (submit everything, drain) measure
+    throughput but can never see a latency spike stack up."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / max(1e-9, qps), size=n))
+
+
+def _open_loop_workload(n: int, long_every: int, short_buckets, long_len: int,
+                        short_new, long_new, vocab: int, seed: int = 0):
+    """Interactive mix: mostly short chat-turn prompts with real decode
+    budgets, plus every ``long_every``-th request a ``long_len``-token
+    document prompt with a short answer.  The long prompts are the ITL
+    hazard: admitted unchunked, their whole prefill lands inside one
+    co-scheduled iteration and every live decoder's next token waits
+    behind it."""
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        if long_every and i % long_every == long_every - 1:
+            plen = long_len
+            nnew = int(rng.integers(long_new[0], long_new[1] + 1))
+        else:
+            plen = int(rng.choice(short_buckets))
+            nnew = int(rng.integers(short_new[0], short_new[1] + 1))
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        reqs.append(Request(i, prompt, nnew))
+    return reqs
+
+
+def _open_loop_once(eng, reqs, arrivals):
+    """One open-loop pass: submit each request at its arrival time,
+    step whenever there is work, and wall-clock-stamp every token the
+    moment the iteration that produced it returns (``eng.progress()``
+    counts tokens for LIVE slots; completions report their final
+    counts).  Returns (completions sorted by uid, per-uid stamp lists,
+    makespan seconds)."""
+    done = []
+    stamps = {r.uid: [] for r in reqs}
+    counts = {r.uid: 0 for r in reqs}
+    order = sorted(zip(arrivals, reqs), key=lambda p: p[0])
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(order) or eng.num_active or eng.queue:
+        now = time.perf_counter() - t0
+        while i < len(order) and order[i][0] <= now:
+            eng.submit(order[i][1])
+            i += 1
+        if eng.num_active == 0 and not eng.queue:
+            # idle ahead of the next arrival: honor the arrival clock
+            time.sleep(max(0.0, order[i][0] - (time.perf_counter() - t0)))
+            continue
+        out = eng.step()
+        now = time.perf_counter() - t0
+        prog = eng.progress()
+        for c in out:
+            prog[c.uid] = len(c.tokens)
+            done.append(c)
+        for uid, k in prog.items():
+            if k > counts[uid]:
+                stamps[uid].extend([now] * (k - counts[uid]))
+                counts[uid] = k
+    return sorted(done, key=lambda c: c.uid), stamps, \
+        time.perf_counter() - t0
+
+
+def _latency_metrics(reqs, arrivals, stamps, makespan: float,
+                     slo_ttft_s: float, slo_itl_s: float) -> Dict[str, float]:
+    """Per-request TTFT (first stamp minus arrival) and inter-token
+    gaps, fleet p50/p99 of both, and goodput-under-SLO: tokens of
+    requests meeting BOTH SLOs (TTFT and every inter-token gap) per
+    second of makespan.  Goodput is the serving metric that raw
+    tokens/s hides — a spike that blows one decoder's gap budget turns
+    that request's whole token count into waste."""
+    arr = {r.uid: a for r, a in zip(reqs, arrivals)}
+    ttfts, itls = [], []
+    good_reqs = good_tokens = 0
+    for r in reqs:
+        s = stamps[r.uid]
+        ttft = s[0] - arr[r.uid]
+        gaps = np.diff(np.asarray(s)) if len(s) > 1 else np.zeros(0)
+        ttfts.append(ttft)
+        itls.extend(gaps.tolist())
+        if ttft <= slo_ttft_s and (gaps.size == 0
+                                   or float(gaps.max()) <= slo_itl_s):
+            good_reqs += 1
+            good_tokens += len(s)
+    return {"ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
+            "ttft_p99_ms": float(np.percentile(ttfts, 99) * 1e3),
+            "itl_p50_ms": float(np.percentile(itls, 50) * 1e3),
+            "itl_p99_ms": float(np.percentile(itls, 99) * 1e3),
+            "good_requests": good_reqs,
+            "n_requests": len(reqs),
+            "goodput_tokens_per_s": good_tokens / max(1e-9, makespan),
+            "tokens_per_s": sum(len(s) for s in stamps.values())
+            / max(1e-9, makespan),
+            "makespan_s": makespan}
+
+
+def run_open_loop(smoke: bool = False, qps: float = 8.0, chunk: int = 32,
+                  cache_dtype: str = "fp32",
+                  slo_ttft_ms: float | None = None,
+                  slo_itl_ms: float | None = None):
+    """Open-loop SLO gate: chunked vs unchunked prefill at equal pool
+    bytes under Poisson arrivals (see module docstring).  Returns
+    (name, us, rows, gate) where gate carries the pass/fail inputs."""
+    from repro.core import hardware, precision
+    from repro.core.latency import predict_serve_throughput
+    from repro.serve.paged_cache import plan_for_layout
+    from repro.serve.scheduler import (ContinuousBatchingEngine, Request,
+                                       SchedulerConfig)
+    # width 256 puts the long-prompt prefill iteration well above the
+    # decode-iteration dispatch floor — at toy widths the admission
+    # spike drowns in host noise and the gate has nothing to flatten
+    if smoke:
+        n, long_every, long_len = 12, 4, 448
+        short_buckets, short_new, long_new = [16, 32], (24, 32), (4, 8)
+        max_seq, slots, width, layers = 512, 4, 256, 2
+        qps_points = [qps]
+    else:
+        n, long_every, long_len = 32, 4, 448
+        short_buckets, short_new, long_new = [16, 32, 48], (24, 48), (4, 8)
+        max_seq, slots, width, layers = 512, 4, 256, 2
+        qps_points = [qps * 0.5, qps, qps * 1.5]
+    spec, params = _build(width=width, layers=layers)
+    reqs = _open_loop_workload(n, long_every, short_buckets, long_len,
+                               short_new, long_new, vocab=256)
+
+    def make_engine(chunk_tokens: int):
+        cfg = SchedulerConfig(max_slots=slots, page_size=16,
+                              max_seq=max_seq, kv_budget_bytes=64e6,
+                              cache_dtype=cache_dtype,
+                              prefill_chunk_tokens=chunk_tokens)
+        return ContinuousBatchingEngine(params, spec, cfg)
+
+    variants = (0, chunk)
+    rows = []
+    gate = {}
+    for q in qps_points:
+        arrivals = _poisson_arrivals(n, q, seed=1)
+        runs = {}
+        for c in variants:                     # warm: compiles every bucket
+            _open_loop_once(make_engine(c), [
+                Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                for r in reqs], arrivals)
+        # interleaved best-of-2 (same idea as the spec gate's min-of-5):
+        # wall-clock latency percentiles jitter with host noise, so each
+        # variant keeps its calmer rep
+        for _ in range(2):
+            for c in variants:
+                eng = make_engine(c)
+                done, stamps, makespan = _open_loop_once(eng, [
+                    Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                    for r in reqs], arrivals)
+                eng.alloc.check()
+                assert len(done) == len(reqs)
+                p99 = float(np.percentile(
+                    [g for s in stamps.values()
+                     for g in np.diff(np.asarray(s)).tolist()], 99))
+                if c not in runs or p99 < runs[c]["p99"]:
+                    runs[c] = {"eng": eng, "done": done, "stamps": stamps,
+                               "makespan": makespan, "p99": p99}
+        for a, b in zip(runs[0]["done"], runs[chunk]["done"]):
+            if not np.array_equal(a.tokens, b.tokens):
+                raise SystemExit(
+                    f"FAIL: chunked-prefill output mismatch uid {a.uid}: "
+                    f"{a.tokens} vs {b.tokens}")
+        assert runs[0]["eng"].layout.num_pages == \
+            runs[chunk]["eng"].layout.num_pages, "pool bytes must match"
+        # SLO anchored on the unchunked engine's own steady decode rate:
+        # a gap 5x the median decode step reads as a stall to the user.
+        itl0 = [g for s in runs[0]["stamps"].values()
+                for g in np.diff(np.asarray(s)).tolist()]
+        slo_itl_s = (slo_itl_ms / 1e3 if slo_itl_ms is not None
+                     else 5.0 * float(np.percentile(itl0, 50)))
+        slo_ttft_s = (slo_ttft_ms / 1e3 if slo_ttft_ms is not None
+                      else float("inf"))
+        met = {c: _latency_metrics(reqs, arrivals, runs[c]["stamps"],
+                                   runs[c]["makespan"], slo_ttft_s,
+                                   slo_itl_s) for c in variants}
+        rows.append({"engine": "open_loop_unchunked", "qps": q,
+                     "cache_dtype": cache_dtype,
+                     "prefill_chunks": runs[0]["eng"].stats["prefill_chunks"],
+                     **met[0]})
+        rows.append({"engine": f"open_loop_chunk{chunk}", "qps": q,
+                     "prefill_chunks":
+                         runs[chunk]["eng"].stats["prefill_chunks"],
+                     **met[chunk]})
+        rows.append({"engine": "measured", "qps": q,
+                     "slo_itl_ms": slo_itl_s * 1e3,
+                     "slo_ttft_ms": (None if slo_ttft_s == float("inf")
+                                     else slo_ttft_s * 1e3),
+                     "num_pages": runs[0]["eng"].layout.num_pages,
+                     "outputs_identical": True,
+                     "p99_itl_ratio": met[chunk]["itl_p99_ms"]
+                     / max(1e-9, met[0]["itl_p99_ms"]),
+                     "goodput_ratio": met[chunk]["goodput_tokens_per_s"]
+                     / max(1e-9, met[0]["goodput_tokens_per_s"])})
+        if q == qps:
+            gate = {"qps": q, "slo_itl_ms": slo_itl_s * 1e3,
+                    "unchunked": met[0], "chunked": met[chunk]}
+    # analytical decomposition at the same operating point: the chunked
+    # prediction must call the worst-iteration spike (predicted_itl_
+    # worst_s) DOWN and TTFT chunks UP, mirroring the measured trade
+    avg_prompt = float(np.mean([len(r.prompt) for r in reqs]))
+    avg_new = float(np.mean([r.max_new_tokens for r in reqs]))
+    eng0 = make_engine(0)
+    plan = plan_for_layout(spec, eng0.layout, cache_dtype)
+    hw, prec = hardware.get("rpi5"), precision.get("fp32")
+    kw = dict(slots=slots, avg_prompt=avg_prompt, avg_new=avg_new)
+    keep = ("predicted_ttft_s", "predicted_itl_s", "predicted_itl_worst_s",
+            "chunk_tokens", "prefill_chunks_per_request")
+    for label, ct in (("analytical_unchunked", None),
+                      ("analytical_chunked", chunk)):
+        pred = predict_serve_throughput(spec, hw, prec, plan,
+                                        chunk_tokens=ct, **kw)
+        rows.append({"engine": label,
+                     **{k: pred[k] for k in keep if k in pred}})
+    us = gate["chunked"]["makespan_s"] * 1e6 if gate else 0.0
+    return "serve_open_loop", us, rows, gate
+
+
 def run(smoke: bool = False, cache_dtype: str = "fp32", devices: int = 1):
     if smoke:
         n, slots, buckets, new_lo, new_hi = 6, 4, [32, 64, 128], 8, 24
@@ -750,10 +994,60 @@ def main():
                          "independent engines; --devices becomes the "
                          "per-replica tp, so dp x devices host devices "
                          "are needed)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="open-loop Poisson-arrival SLO gate: chunked vs "
+                         "unchunked prefill at equal pool bytes, p50/p99 "
+                         "TTFT + inter-token latency, goodput under SLO")
+    ap.add_argument("--qps", type=float, default=8.0,
+                    help="open-loop target arrival rate (requests/s); "
+                         "full mode also measures 0.5x and 1.5x")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="per-iteration prefill token budget of the "
+                         "chunked engine in --open-loop (multiple of the "
+                         "page size)")
+    ap.add_argument("--slo-itl-ms", type=float, default=None,
+                    help="inter-token latency SLO in ms (default: 5x the "
+                         "unchunked engine's measured p50)")
+    ap.add_argument("--slo-ttft-ms", type=float, default=None,
+                    help="time-to-first-token SLO in ms (default: TTFT "
+                         "unconstrained; percentiles still reported)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the result rows to PATH as JSON "
                          "(the BENCH_*.json CI artifacts)")
     args = ap.parse_args()
+    if args.open_loop:
+        if args.prefix or args.spec_decode or args.dp > 1 \
+                or args.devices > 1:
+            raise SystemExit("--open-loop is a single-engine gate; it "
+                             "does not compose with --prefix/"
+                             "--spec-decode/--dp/--devices")
+        name, us, rows, gate = run_open_loop(
+            smoke=args.smoke, qps=args.qps, chunk=args.prefill_chunk,
+            cache_dtype=args.cache_dtype, slo_ttft_ms=args.slo_ttft_ms,
+            slo_itl_ms=args.slo_itl_ms)
+        print(f"## {name}")
+        for r in rows:
+            print(r)
+        if args.json:
+            _dump_json(args.json, name, rows)
+        un, ch = gate["unchunked"], gate["chunked"]
+        slo = gate["slo_itl_ms"]
+        if un["itl_p99_ms"] <= slo:
+            raise SystemExit(
+                f"FAIL: unchunked p99 ITL {un['itl_p99_ms']:.1f}ms meets "
+                f"the {slo:.1f}ms SLO — qps {gate['qps']} too low to "
+                "exercise the admission spike, raise --qps")
+        ok = (ch["itl_p99_ms"] < un["itl_p99_ms"]
+              and ch["goodput_tokens_per_s"] >= un["goodput_tokens_per_s"])
+        status = "PASS" if ok else "FAIL"
+        print(f"{status}: chunked p99 ITL {ch['itl_p99_ms']:.1f}ms vs "
+              f"unchunked {un['itl_p99_ms']:.1f}ms (SLO {slo:.1f}ms), "
+              f"goodput {ch['goodput_tokens_per_s']:.0f} vs "
+              f"{un['goodput_tokens_per_s']:.0f} tok/s, outputs identical "
+              f"at equal pool bytes")
+        if not ok:
+            raise SystemExit(1)
+        return
     if args.dp > 1:
         if args.prefix or args.spec_decode:
             raise SystemExit("--dp composes with --devices (per-replica "

@@ -106,7 +106,8 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
                          avg_context: float, cached_prefix_tokens: int = 0,
                          params: float | None = None,
                          tp: int = 1, spec_k: int = 1,
-                         acceptance_rate: float = 0.0) -> IterationCost:
+                         acceptance_rate: float = 0.0,
+                         chunk_tokens: int | None = None) -> IterationCost:
     """Analytical cost of one scheduler iteration — predicts continuous
     batching throughput from the same roofline terms as ``breakdown()``.
 
@@ -154,8 +155,22 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
     ``expected_accepted_tokens(acceptance_rate, spec_k)`` tokens, so
     on the memory-bound decode roofline tokens/s scales almost
     linearly with the acceptance rate — the whole speculative bet.
+
+    ``chunk_tokens`` mirrors the scheduler's CHUNKED-PREFILL budget
+    (``SchedulerConfig.prefill_chunk_tokens``): per iteration the
+    engine admits at most ``chunk_tokens`` of prefill work, carrying
+    the remainder of a long prompt across iterations, so the analytical
+    iteration clamps ``prefill_tokens`` to the same cap.  That bounds
+    the compute term a co-scheduled decode iteration can absorb — the
+    inter-token-latency spike of an unchunked long-prompt admission —
+    at the price of more admission iterations per request (TTFT), the
+    exact trade ``predict_serve_throughput`` decomposes.
     """
     from repro.core import blocks
+    if chunk_tokens is not None:
+        if chunk_tokens <= 0:
+            raise ValueError("chunk_tokens must be positive when given")
+        prefill_tokens = min(prefill_tokens, chunk_tokens)
     if tp > 1 and getattr(plan, "tp", 1) > 1:
         raise ValueError(
             f"plan already holds per-device bytes (built with tp="
@@ -197,7 +212,8 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
                              avg_new: float, prefix_hit_rate: float = 0.0,
                              admission: str = "lazy",
                              tp: int = 1, dp: int = 1, spec_k: int = 1,
-                             acceptance_rate: float = 0.0
+                             acceptance_rate: float = 0.0,
+                             chunk_tokens: int | None = None
                              ) -> Dict[str, float]:
     """Steady-state continuous batching vs static-batch throughput.
 
@@ -250,6 +266,22 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     device-hours at ``hw.cost_per_hour`` plus electricity from the
     energy model at ``ELECTRICITY_USD_PER_KWH``).  The tp=1, dp=1 cell
     is byte-identical to the pre-cluster model.
+
+    ``chunk_tokens`` models the scheduler's chunked-prefill budget and
+    turns on the latency DECOMPOSITION the open-loop benchmark
+    (``serve_throughput.py --open-loop``) plots predictions against.
+    Every call returns ``predicted_itl_s`` (steady-state inter-token
+    latency: one mixed iteration per committed window token),
+    ``predicted_itl_worst_s`` (the iteration a co-scheduled admission
+    burst lands in — unchunked that burst is the request's whole
+    uncached suffix, chunked it is capped at ``chunk_tokens``; this is
+    the p99-ITL spike chunking exists to flatten) and
+    ``predicted_ttft_s`` (admission iterations to first token:
+    one burst iteration unchunked, ``ceil(suffix/chunk_tokens)``
+    chunk-capped iterations chunked — the TTFT price of the flatter
+    tail).  With ``chunk_tokens`` set the steady-state iteration also
+    clamps its amortized prefill to the budget, and the result echoes
+    ``chunk_tokens``/``prefill_chunks_per_request``.
     """
     avg_ctx = avg_prompt + avg_new / 2
     live = effective_slots(plan, slots, avg_prompt, avg_new, admission)
@@ -260,7 +292,8 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
         prefill_tokens=int((avg_prompt - hit) * live / max(1.0, avg_new)),
         decode_slots=int(round(live)), avg_context=avg_ctx,
         cached_prefix_tokens=int(hit * live / max(1.0, avg_new)), tp=tp,
-        spec_k=spec_k, acceptance_rate=acceptance_rate)
+        spec_k=spec_k, acceptance_rate=acceptance_rate,
+        chunk_tokens=chunk_tokens)
     # static: same decode roofline but slots idle in the drain tail --
     # useful-token rate scales by mean/max occupancy (~avg/(2*avg) for a
     # uniform length spread) and every context pads to the batch max.
@@ -278,6 +311,25 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
            "energy_j_per_token": serve_energy_per_token(
                cont.flops, cont.bytes_moved, cont.iteration_s,
                cont.decode_tokens, hw, precision)}
+    # TTFT/ITL decomposition: the admission-burst iteration is the
+    # steady-state batch plus the prefill work ONE arriving request
+    # lands in a single iteration (whole uncached suffix unchunked,
+    # chunk_tokens-capped chunked).
+    suffix = max(0.0, avg_prompt - hit)
+    burst = int(min(suffix, chunk_tokens) if chunk_tokens else suffix)
+    n_chunks = (-(-int(suffix) // int(chunk_tokens))
+                if chunk_tokens and suffix else 1) or 1
+    worst = mixed_iteration_cost(
+        spec, hw, precision, plan, prefill_tokens=max(1, burst),
+        decode_slots=int(round(live)), avg_context=avg_ctx, tp=tp,
+        spec_k=spec_k, acceptance_rate=acceptance_rate)
+    per_tok = expected_accepted_tokens(acceptance_rate, spec_k)
+    out["predicted_itl_s"] = cont.iteration_s / per_tok
+    out["predicted_itl_worst_s"] = worst.iteration_s / per_tok
+    out["predicted_ttft_s"] = n_chunks * worst.iteration_s
+    if chunk_tokens:
+        out["chunk_tokens"] = float(chunk_tokens)
+        out["prefill_chunks_per_request"] = float(n_chunks)
     if spec_k > 1:
         out["spec_k"] = float(spec_k)
         out["acceptance_rate"] = min(1.0, max(0.0, acceptance_rate))

@@ -13,9 +13,13 @@ allocation/preemption) instead of the static ``engine.generate`` path;
 ``--dp R`` runs R independent engine replicas behind the prefix-aware
 rendezvous router (``serve.router.PrefixRouter``; with ``--devices``
 each replica gets its own tp-device slice, so R x N host devices),
-and ``--spec-k K`` turns on self-speculative decoding (n-gram
+``--spec-k K`` turns on self-speculative decoding (n-gram
 prompt-lookup drafts verified K tokens per step; outputs stay
-token-for-token greedy).
+token-for-token greedy), and ``--prefill-chunk T`` caps per-iteration
+prefill admission at T tokens (chunked prefill: long prompts stream in
+across iterations co-scheduled with decode, flattening the inter-token
+latency spike their one-shot admission would cause; outputs stay
+token-for-token identical).
 """
 from __future__ import annotations
 
@@ -72,7 +76,8 @@ def _run_paged(args, spec, params):
         max_slots=min(8, args.batch), page_size=16,
         max_seq=args.prompt_len + args.steps + 16,
         kv_budget_bytes=64e6, cache_dtype=args.cache_dtype,
-        spec_k=args.spec_k)
+        spec_k=args.spec_k,
+        prefill_chunk_tokens=args.prefill_chunk)
     if args.dp > 1:
         _run_routed(args, spec, params, cfg, reqs)
         return
@@ -92,6 +97,9 @@ def _run_paged(args, spec, params):
           f"preemptions {int(eng.stats['preemptions'])}, "
           f"prefix hits {int(eng.stats['prefix_hit_tokens'])} tok "
           f"({usable} usable pages)")
+    if cfg.prefill_chunk_tokens:
+        print(f"[serve] chunked prefill: {cfg.prefill_chunk_tokens}-token "
+              f"budget, {int(eng.stats['prefill_chunks'])} partial chunks")
     if cfg.spec_k > 1:
         st = eng.stats
         acc = st["spec_accepted"] / max(1, st["spec_drafted"])
@@ -159,6 +167,11 @@ def main():
                     help="self-speculative decode window for the paged "
                          "engine: verify up to K tokens per step from "
                          "n-gram prompt-lookup drafts (1 = off)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: per-iteration prefill token "
+                         "budget for the paged engine (multiple of the "
+                         "page size; 0 = admit whole prompts, the "
+                         "latency-spiky default)")
     args = ap.parse_args()
 
     spec = ARCHS[args.arch]

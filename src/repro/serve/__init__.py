@@ -29,6 +29,27 @@ greedy acceptance commits the matching prefix plus a bonus token.
 Emissions are token-for-token the ``spec_k = 1`` greedy engine —
 speculation changes how many tokens an iteration commits, never which.
 
+With ``SchedulerConfig.prefill_chunk_tokens > 0`` admission is
+CHUNKED: every iteration spends at most that many (bucket-padded)
+prefill tokens, long prompts stream in across iterations co-scheduled
+with decode (each chunk is a suffix prefill whose prefix is the chunks
+already written — the same program admission with a prefix-cache hit
+runs, no new kernel), and a partially-prefilled slot holds its pages
+but decodes nothing until its last chunk lands.  Chunking bounds the
+per-iteration admission work, which is what caps the p99 inter-token
+latency spike a long prompt's one-shot admission inflicts on every
+live decoder — the open-loop Poisson benchmark gate
+(``serve_throughput.py --open-loop``) measures exactly that trade
+(p50/p99 TTFT + ITL, goodput under SLO) against
+``core.latency.predict_serve_throughput(chunk_tokens=)``'s analytical
+decomposition.  Outputs stay token-for-token the unchunked engine's:
+like speculation, chunking changes the scheduling of work, never the
+per-slot decode math.  Chunked admission composes with every cell
+below — prefix hits shrink the suffix the chunks cover, spec windows
+start after the final chunk, preempted victims re-chunk on recompute,
+and both backends reuse the ``admit_prefix`` jit cache
+(``PagedKVBackend.prefill_chunk``).
+
 Paged KV precision support matrix (``SchedulerConfig.cache_dtype`` x
 parallelism axes x decode mode) — every cell is exercised by tier-1
 tests / the CI serve smokes (prefill, decode, prefix-cache, CoW per
@@ -36,7 +57,10 @@ cell; sharded cells add preemption + recompute parity in
 tests/test_serve_backend_multidevice.py; routed cells in
 tests/test_serve_router.py + the ``--dp`` benchmark gate; spec-decode
 cells assert token identity with the non-speculative engine in
-tests/test_spec_decode.py and the ``--spec-decode`` benchmark gate):
+tests/test_spec_decode.py and the ``--spec-decode`` benchmark gate;
+chunked-prefill cells assert token identity plus the per-iteration
+budget bound in tests/test_serve_scheduler.py and the ``--open-loop``
+benchmark gate):
 
 =========  ====================  =======================  ==============
 dtype      single device         tp-sharded (tp=2/4):     dp replicas

@@ -164,6 +164,20 @@ class PagedKVBackend:
         """Suffix-only prefill against cached prefix pages."""
         raise NotImplementedError
 
+    def prefill_chunk(self, padded_chunk: np.ndarray, slot: int,
+                      prefix_len: int, true_len: int, bt_row: np.ndarray,
+                      *, n_prefix_pages: int) -> int:
+        """One chunk of a CHUNKED prefill: write the chunk's KV at
+        absolute positions [prefix_len, prefix_len + true_len) of
+        ``slot``, attending the chunk's queries over the gathered pages
+        already written (prefix-cache hits + earlier chunks).  This is
+        the same suffix-prefill program as ``admit_prefix`` — chunking
+        the budget is a SCHEDULER policy, not a new device path — but
+        the returned greedy token is meaningful only for the FINAL
+        chunk (where it seeds decoding); intermediate chunks' sampled
+        tokens are discarded by the caller."""
+        raise NotImplementedError
+
     def decode(self, tokens: np.ndarray, active: np.ndarray,
                lens: Optional[np.ndarray] = None
                ) -> Tuple[np.ndarray, np.ndarray]:
@@ -266,6 +280,14 @@ class SingleDeviceBackend(PagedKVBackend):
             jnp.int32(slot), jnp.int32(prefix_len), jnp.int32(true_len),
             jnp.asarray(bt_row), n_prefix_pages=n_prefix_pages)
         return int(tok0)
+
+    def prefill_chunk(self, padded_chunk, slot, prefix_len, true_len,
+                      bt_row, *, n_prefix_pages) -> int:
+        # the chunk program IS the suffix-prefill program (prefix = the
+        # rows already written), so both backends — this one and the
+        # tensor-parallel subclass — reuse the admit_prefix jit cache
+        return self.admit_prefix(padded_chunk, slot, prefix_len, true_len,
+                                 bt_row, n_prefix_pages=n_prefix_pages)
 
     def decode(self, tokens, active, lens=None):
         if tokens.shape[1] == 1 and lens is None:

@@ -33,7 +33,9 @@ Two liveness escape hatches temper the affinity:
   sits half-idle while one replica has a backlog.
 
 Replicas are plain ``ContinuousBatchingEngine`` instances — the router
-never reaches past ``submit``/``step``/``queue``/``num_active``, so
+never reaches past ``submit``/``step``/``queue``/``num_active`` plus
+the load/drain surface (``pending_cost`` for cost-aware spill,
+``take_queued``/``export_resume``/``adopt_resume`` on removal), so
 any mix of single-device and tensor-parallel backends works; tp x dp
 clusters give each replica its own disjoint device slice
 (``make_replicas``).  Outputs are per-request identical-in-band to a
@@ -126,22 +128,59 @@ class PrefixRouter:
 
     def remove(self, replica_id: str) -> None:
         """Drop a replica from the live set (drain/failure).  Keys it
-        owned remap by rendezvous; every other key keeps its replica."""
-        del self.engines[replica_id]
+        owned remap by rendezvous; every other key keeps its replica.
+        Requests still QUEUED on the removed engine are drained and
+        re-submitted through the router — rendezvous re-routes exactly
+        the removed replica's keys to survivors, and a queued recompute
+        request's resume record (prior output of a preempted
+        incarnation) follows it so its completion still splices.
+        Requests already ADMITTED (live slots) are not migrated: drain
+        a replica to ``num_active == 0`` before removing it."""
+        eng = self.engines.pop(replica_id)
+        if eng is None:
+            return
+        for req in eng.take_queued():
+            target = self.submit(req)
+            record = eng.export_resume(req.uid)
+            if record is not None and self.engines.get(target) is not None:
+                self.engines[target].adopt_resume(req.uid, record)
 
     # -- load-aware dispatch ------------------------------------------------
-    def _load(self, rid: str) -> int:
+    @property
+    def _live(self) -> List[str]:
+        """Replica ids with a real engine attached — ids-only / mixed
+        routers carry ``None`` placeholders that load probes and the
+        rebalance donor scan must skip (calling ``.queue`` on them was
+        the crash)."""
+        return [r for r, e in self.engines.items() if e is not None]
+
+    def _load(self, rid: str) -> float:
+        """Pending work on a live replica in bucket-padded TOKEN cost
+        (``engine.pending_cost``): a queue of sixteen chat turns and a
+        queue of one 2k-token prompt are not the same backlog, so spill
+        compares cost, not request count."""
         eng = self.engines[rid]
-        return len(eng.queue) + eng.num_active
+        if eng is None:
+            return 0.0
+        return float(eng.pending_cost)
 
     def submit(self, req) -> str:
         """Route + enqueue one request; returns the replica id chosen.
         Spills off the hashed replica only when it leads the least-
-        loaded one by more than ``spill_slack`` pending requests."""
+        loaded one by more than ``spill_slack`` requests' worth of mean
+        pending cost (the slack knob keeps its request-count units; the
+        comparison converts through the fleet's current mean cost per
+        pending request, so uniform workloads behave exactly as
+        before)."""
         target = self.route(req.prompt)
-        if self.engines[target] is not None and len(self.engines) > 1:
-            least = min(self.engines, key=self._load)
-            if self._load(target) - self._load(least) > self.spill_slack:
+        live = self._live
+        if self.engines[target] is not None and len(live) > 1:
+            least = min(live, key=self._load)
+            pending = sum(len(self.engines[r].queue)
+                          + self.engines[r].num_active for r in live)
+            unit = (sum(self._load(r) for r in live) / pending
+                    if pending else 1.0)
+            if self._load(target) - self._load(least) > self.spill_slack * unit:
                 target = least
                 self.stats["spilled"] += 1
         self.stats["routed"] += 1
@@ -154,10 +193,12 @@ class PrefixRouter:
         """Let idle replicas steal queued (never admitted) work from
         the back of the deepest queue; returns requests moved."""
         moved = 0
-        idle = [r for r, e in self.engines.items()
-                if e is not None and e.num_active == 0 and not e.queue]
+        live = self._live
+        idle = [r for r in live
+                if self.engines[r].num_active == 0
+                and not self.engines[r].queue]
         for rid in idle:
-            donor = max(self.engines, key=lambda r: len(self.engines[r].queue))
+            donor = max(live, key=lambda r: len(self.engines[r].queue))
             dq = self.engines[donor].queue
             if donor == rid or len(dq) < 2:
                 continue

@@ -20,9 +20,22 @@ runs the vLLM-style alternative on top of the paged KV cache:
 * suffix prefill is bucket-padded to a power of two so XLA compiles
   O(log max_seq) prefill shapes; ``true_len`` masking keeps logits
   exact;
-* every iteration decodes ONE token for ALL live slots in a single
-  fixed-shape jitted step; when a slot crosses a page boundary it
-  allocates its next page just-in-time — if the pool is dry the
+* with ``prefill_chunk_tokens`` set, admission is CHUNKED and
+  cost-aware: each iteration may spend at most that many (bucket-
+  padded) prefill tokens — the t2t ``bucket_boundaries`` idiom of
+  charging admission by padded token COST, not request count — so a
+  long prompt prefills as a sequence of fixed-budget chunks
+  co-scheduled with everyone else's decode instead of monopolizing an
+  iteration.  A chunk is just a suffix prefill whose prefix is the
+  chunks already written (plus any prefix-cache hit), so the partially
+  prefilled slot carries across iterations with no new kernel; only
+  the FINAL chunk's logits seed decoding, and chunking changes
+  scheduling only — per-request outputs stay token-for-token the
+  unchunked engine's (the ``--open-loop`` benchmark gate);
+* every iteration decodes one verify WINDOW — a single token unless
+  speculating (``spec_k``) — for ALL live fully-prefilled slots in a
+  single fixed-shape jitted step; when a slot crosses a page boundary
+  it allocates its next page just-in-time — if the pool is dry the
   scheduler first evicts unshared prefix-store pages (LRU), then
   PREEMPTS the newest-admitted slot: its non-shared pages are freed,
   its prefix-store pages survive by refcount, and the victim re-queues
@@ -106,6 +119,14 @@ class SchedulerConfig:
     # own context (no draft model), matching on spec_ngram-grams
     spec_k: int = 1
     spec_ngram: int = 2
+    # chunked prefill: per-ITERATION prefill-token budget (0 = off, the
+    # legacy admit-the-whole-prompt path).  Charged in bucket-padded
+    # (power-of-two-page) widths — admission is cost-aware in TOKENS,
+    # not request count — and a prompt wider than the budget carries a
+    # partially-prefilled slot across iterations (each chunk is a
+    # suffix prefill over the chunks already written).  Must be a
+    # positive multiple of page_size when set.
+    prefill_chunk_tokens: int = 0
 
 
 @dataclass
@@ -119,10 +140,18 @@ class _Slot:
     admit_seq: int                 # recency order for victim selection
     generated: List[int] = field(default_factory=list)
     draft: Optional[NGramDraftTable] = None   # spec_k > 1: prompt lookup
+    # prompt tokens whose KV is already written (prefix-cache hits plus
+    # completed chunks); < prompt_len means the slot is mid-prefill and
+    # sits out decode windows until its final chunk lands
+    prefilled: int = 0
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new
+
+    @property
+    def prefilling(self) -> bool:
+        return self.prefilled < self.prompt_len
 
 
 @dataclass
@@ -181,6 +210,13 @@ class ContinuousBatchingEngine:
         # engine itself never touches device state (an explicit backend
         # already owns its own params)
         self.spec, self.cfg = spec, cfg
+        if cfg.prefill_chunk_tokens:
+            if (cfg.prefill_chunk_tokens < cfg.page_size
+                    or cfg.prefill_chunk_tokens % cfg.page_size):
+                raise ValueError(
+                    f"prefill_chunk_tokens={cfg.prefill_chunk_tokens} must "
+                    f"be a positive multiple of page_size={cfg.page_size} "
+                    "(the budget is charged in page-granular bucket widths)")
         self.backend = backend if backend is not None else \
             SingleDeviceBackend(params, spec, cfg)
         self.layout = self.backend.layout
@@ -201,7 +237,16 @@ class ContinuousBatchingEngine:
             # speculative decode: windows with >= 1 drafted token,
             # drafted-token count, and how many of them were accepted
             # (measured acceptance = spec_accepted / spec_drafted)
-            "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0}
+            "spec_steps": 0, "spec_drafted": 0, "spec_accepted": 0,
+            # recompute re-prefills (preemption resumes) count here, NOT
+            # in prompt_tokens/prefix_hit_tokens: a resumed prompt
+            # includes prior OUTPUT and mostly re-hits its own pages, so
+            # folding it in would inflate the prefix-hit-rate fed to
+            # core/analytical.py
+            "recompute_prompt_tokens": 0, "recompute_hit_tokens": 0,
+            # chunked prefill: chunks issued for already-admitted slots
+            # (first chunks count under "admitted")
+            "prefill_chunks": 0}
 
     # -- queue ------------------------------------------------------------
 
@@ -224,6 +269,59 @@ class ContinuousBatchingEngine:
     @property
     def num_active(self) -> int:
         return sum(s is not None for s in self.slots)
+
+    @property
+    def pending_cost(self) -> int:
+        """Bucket-padded token cost of work not yet decoded: queued
+        prompts + their decode budgets, unfinished prefill remainders,
+        and live slots' remaining decode tokens.  The router's load
+        signal — COST, not request count — so one 2k-token prompt
+        weighs as much as the sixteen short requests it displaces."""
+        page, cap = self.cfg.page_size, self.cfg.max_seq
+        cost = 0
+        for r in self.queue:
+            cost += _bucket(len(r.prompt), page, cap) + r.max_new_tokens
+        for s in self.slots:
+            if s is None:
+                continue
+            if s.prefilling:
+                cost += _bucket(s.prompt_len - s.prefilled, page, cap)
+            cost += s.max_new - len(s.generated)
+        return cost
+
+    def progress(self) -> Dict[int, int]:
+        """Tokens emitted so far per LIVE request uid (a preempted
+        incarnation's prior output included, so counts are monotone
+        across recompute).  Open-loop drivers poll this after each
+        ``step()`` to timestamp first-token / inter-token latencies
+        without reaching into slots."""
+        out: Dict[int, int] = {}
+        for s in self.slots:
+            if s is None:
+                continue
+            res = self._resume.get(s.uid)
+            prior = len(res.prior) if res is not None else 0
+            out[s.uid] = prior + len(s.generated)
+        return out
+
+    def take_queued(self) -> List[Request]:
+        """Hand back every QUEUED (not yet admitted) request, emptying
+        the queue — the router's drain path on replica removal."""
+        out = list(self.queue)
+        self.queue.clear()
+        return out
+
+    def export_resume(self, uid: int) -> Optional[_Resume]:
+        """Detach a preempted request's resume record (prior output +
+        original prompt length) so it can follow the request to another
+        replica; None if ``uid`` was never preempted."""
+        return self._resume.pop(uid, None)
+
+    def adopt_resume(self, uid: int, record: _Resume) -> None:
+        """Install a resume record exported from another engine: the
+        re-routed recompute request's completion splices its prior
+        output exactly as if it had resumed here."""
+        self._resume[uid] = record
 
     # -- page pressure ----------------------------------------------------
 
@@ -269,12 +367,85 @@ class ContinuousBatchingEngine:
 
     # -- one iteration ----------------------------------------------------
 
+    def _chunk_quota(self, budget: int) -> int:
+        """Widest power-of-two-page prefill chunk whose BUCKET cost fits
+        the remaining budget (length-bucketed admission: the charge is
+        the padded compute width ``_bucket`` will pick, so quota must be
+        a pow2 page count — a 3-page quota would bucket to 4 pages and
+        overdraw)."""
+        pages = budget // self.cfg.page_size
+        if pages < 1:
+            return 0
+        b = 1
+        while b * 2 <= pages:
+            b *= 2
+        return b * self.cfg.page_size
+
+    def _complete_prefill(self, slot: _Slot, tok0: int) -> None:
+        """The final chunk landed: seed decoding with its sampled token,
+        build the spec-decode draft table, and publish the now-complete
+        prompt KV to the prefix store (registering earlier would let
+        other requests match pages whose rows aren't written yet)."""
+        slot.last_token = tok0
+        slot.generated.append(tok0)
+        if self.cfg.spec_k > 1:
+            draft = NGramDraftTable(self.cfg.spec_ngram)
+            draft.extend(slot.prompt.tolist())
+            draft.extend([tok0])
+            slot.draft = draft
+        if self.prefix_cache is not None:
+            self.prefix_cache.register_prompt(slot.prompt, slot.pages)
+
+    def _continue_prefills(self, budget: Optional[int]) -> Optional[int]:
+        """Advance partially-prefilled slots (admission order) by one
+        bucketed chunk each, consuming the iteration's prefill budget.
+        Each chunk is a suffix prefill whose prefix is everything
+        already written — prefix-cache hits plus earlier chunks — so
+        the backend path is ``prefill_chunk`` (== ``admit_prefix``'s
+        gathered-page attention) and only the final chunk's sampled
+        token is kept."""
+        if budget is None:
+            return None
+        page = self.cfg.page_size
+        row_len = self.layout.slots_pages(self.cfg.max_seq)
+        order = sorted(
+            (i for i, s in enumerate(self.slots)
+             if s is not None and s.prefilling),
+            key=lambda i: self.slots[i].admit_seq)
+        for i in order:
+            quota = self._chunk_quota(budget)
+            if quota == 0:
+                break
+            slot = self.slots[i]
+            chunk = min(slot.prompt_len - slot.prefilled, quota)
+            spad = _bucket(chunk, page, self.cfg.max_seq)
+            padded = np.zeros((1, spad), np.int32)
+            padded[0, :chunk] = slot.prompt[
+                slot.prefilled:slot.prefilled + chunk]
+            row = np.full((row_len,), pc.NULL_PAGE, np.int32)
+            row[:len(slot.pages)] = slot.pages
+            npp = _pow2_pages(pc.pages_needed(slot.prefilled, page), row_len)
+            tok0 = self.backend.prefill_chunk(
+                padded, i, slot.prefilled, chunk, row, n_prefix_pages=npp)
+            slot.prefilled += chunk
+            budget -= spad
+            self.stats["prefill_tokens"] += chunk
+            self.stats["prefill_chunks"] += 1
+            if not slot.prefilling:
+                self._complete_prefill(slot, tok0)
+        return budget
+
     def _admit(self) -> None:
         page = self.cfg.page_size
         row_len = self.layout.slots_pages(self.cfg.max_seq)
+        budget = (self.cfg.prefill_chunk_tokens
+                  if self.cfg.prefill_chunk_tokens else None)
+        budget = self._continue_prefills(budget)
         for i, slot in enumerate(self.slots):
             if slot is not None or not self.queue:
                 continue
+            if budget is not None and self._chunk_quota(budget) == 0:
+                break                 # this iteration's prefill budget spent
             req = self.queue[0]
             plen = len(req.prompt)
             n_prompt_pages = pc.pages_needed(plen, page)
@@ -331,7 +502,12 @@ class ContinuousBatchingEngine:
             row = np.full((row_len,), pc.NULL_PAGE, np.int32)
             row[:len(pages)] = pages
             suffix_len = plen - matched
-            if matched == 0:
+            # first prefill chunk this iteration: the whole suffix when
+            # unbudgeted (or it fits), else the widest bucket the
+            # remaining budget buys — the rest carries across iterations
+            chunk = (suffix_len if budget is None
+                     else min(suffix_len, self._chunk_quota(budget)))
+            if chunk == suffix_len and matched == 0:
                 spad = _bucket(plen, page, self.cfg.max_seq)
                 assert spad // page >= n_prompt_pages, \
                     "bucket narrower than the prompt's pages"
@@ -339,30 +515,39 @@ class ContinuousBatchingEngine:
                 padded[0, :plen] = req.prompt
                 tok0 = self.backend.admit_full(padded, i, plen, row)
             else:
-                spad = _bucket(suffix_len, page, self.cfg.max_seq)
+                spad = _bucket(chunk, page, self.cfg.max_seq)
                 padded = np.zeros((1, spad), np.int32)
-                padded[0, :suffix_len] = req.prompt[matched:]
+                padded[0, :chunk] = req.prompt[matched:matched + chunk]
                 npp = _pow2_pages(pc.pages_needed(matched, page), row_len)
-                tok0 = self.backend.admit_prefix(
-                    padded, i, matched, suffix_len, row, n_prefix_pages=npp)
-            draft = None
-            if self.cfg.spec_k > 1:
-                # lookup context = prompt + committed output; a resumed
-                # (preempted) request's prompt already carries its prior
-                # output, so the fresh table loses nothing
-                draft = NGramDraftTable(self.cfg.spec_ngram)
-                draft.extend(req.prompt.tolist())
-                draft.extend([tok0])
-            self.slots[i] = _Slot(req.uid, req.prompt, plen,
-                                  req.max_new_tokens, pages, tok0,
-                                  self._admit_seq, [tok0], draft)
+                tok0 = (self.backend.admit_prefix(
+                            padded, i, matched, chunk, row,
+                            n_prefix_pages=npp)
+                        if chunk == suffix_len else
+                        self.backend.prefill_chunk(
+                            padded, i, matched, chunk, row,
+                            n_prefix_pages=npp))
+            if budget is not None:
+                budget -= spad
+            slot = _Slot(req.uid, req.prompt, plen, req.max_new_tokens,
+                         pages, -1, self._admit_seq, [], None,
+                         prefilled=matched + chunk)
+            self.slots[i] = slot
             self._admit_seq += 1
             self.stats["admitted"] += 1
-            self.stats["prompt_tokens"] += plen
-            self.stats["prefill_tokens"] += suffix_len
-            self.stats["prefix_hit_tokens"] += matched
-            if self.prefix_cache is not None:
-                self.prefix_cache.register_prompt(req.prompt, pages)
+            self.stats["prefill_tokens"] += chunk
+            if req.uid in self._resume:
+                # recompute re-prefill: the prompt includes prior output
+                # and the match mostly re-hits this request's own pages
+                # — keep it out of the honest prompt/hit-rate counters
+                self.stats["recompute_prompt_tokens"] += plen
+                self.stats["recompute_hit_tokens"] += matched
+            else:
+                self.stats["prompt_tokens"] += plen
+                self.stats["prefix_hit_tokens"] += matched
+            if slot.prefilling:
+                self.stats["prefill_chunks"] += 1
+            else:
+                self._complete_prefill(slot, tok0)
 
     def _grow(self, window: Optional[Dict[int, int]] = None) -> None:
         """Lazy decode allocation: give every live slot the page(s) its
@@ -377,7 +562,10 @@ class ContinuousBatchingEngine:
                         key=lambda j: (self.slots[j].admit_seq
                                        if self.slots[j] else -1)):
             slot = self.slots[i]
-            if slot is None or slot.done:
+            if slot is None or slot.done or slot.prefilling:
+                # mid-prefill slots write no decode KV: their prompt
+                # pages were reserved at admission and their next chunk
+                # brings its own block-table row
                 continue
             w = window.get(i, 1) if window is not None else 1
             write_pos = slot.prompt_len + len(slot.generated) - 1
@@ -434,8 +622,8 @@ class ContinuousBatchingEngine:
         # a verify step never writes KV past what the request may emit
         windows: Dict[int, List[int]] = {}
         for i, slot in enumerate(self.slots):
-            if slot is None or slot.done:
-                continue
+            if slot is None or slot.done or slot.prefilling:
+                continue                  # mid-prefill: no token to decode yet
             win = [slot.last_token]
             rem = slot.max_new - len(slot.generated)
             if K > 1 and slot.draft is not None and rem > 1:

@@ -471,3 +471,76 @@ def test_dp_replicas_and_cluster_grid():
     # never be cheaper
     assert cost_per_million_tokens(10.0, 4, 0.0, hw) > \
         cost_per_million_tokens(10.0, 2, 0.0, hw)
+
+
+def test_chunked_prefill_latency_decomposition():
+    """``chunk_tokens`` mirrors the scheduler's chunked-prefill budget:
+    the worst (admission-burst) iteration's ITL drops, TTFT pays for it
+    in ceil(suffix/chunk) chunk iterations, and the steady-state ITL is
+    untouched — the exact trade the open-loop benchmark measures."""
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import mixed_iteration_cost, predict_serve_throughput
+    spec = ASSIGNED["granite-3-8b"].scaled_down()
+    plan = analytical.PagedCachePlan(page_size=16, num_pages=129,
+                                     page_bytes=4096.0,
+                                     bytes_per_token=256.0)
+    hw, prec = hardware.get("rpi5"), prec_mod.get("fp32")
+    kw = dict(slots=8, avg_prompt=256.0, avg_new=32.0)
+    base = predict_serve_throughput(spec, hw, prec, plan, **kw)
+    chunked = predict_serve_throughput(spec, hw, prec, plan,
+                                       chunk_tokens=64, **kw)
+    # every call carries the decomposition
+    for out in (base, chunked):
+        assert out["predicted_itl_s"] > 0
+        assert out["predicted_itl_worst_s"] >= out["predicted_itl_s"]
+        assert out["predicted_ttft_s"] > 0
+    # unchunked: one burst iteration carrying the whole 256-token prompt
+    assert base["predicted_ttft_s"] == base["predicted_itl_worst_s"]
+    assert "chunk_tokens" not in base
+    # chunked: flatter worst iteration, ceil(256/64)=4 chunk iterations
+    assert chunked["predicted_itl_worst_s"] < base["predicted_itl_worst_s"]
+    assert chunked["prefill_chunks_per_request"] == 4.0
+    assert chunked["chunk_tokens"] == 64.0
+    assert chunked["predicted_ttft_s"] == pytest.approx(
+        4 * chunked["predicted_itl_worst_s"]
+        * analytical.expected_accepted_tokens(0.0, 1))
+    # TTFT stays in the burst's ballpark: the model has no per-
+    # iteration dispatch cost (the measured open-loop TTFT pays one
+    # per chunk), and the burst's superlinear attention term can even
+    # edge the n-chunk sum slightly below it — chunking buys its worst-
+    # ITL cut without a large analytical TTFT regression, not for free
+    assert chunked["predicted_ttft_s"] >= 0.9 * base["predicted_ttft_s"]
+    assert chunked["predicted_itl_s"] == pytest.approx(
+        base["predicted_itl_s"])
+    # prefix hits shrink the burst both ways
+    warm = predict_serve_throughput(spec, hw, prec, plan,
+                                    prefix_hit_rate=0.75, chunk_tokens=64,
+                                    **kw)
+    assert warm["prefill_chunks_per_request"] == 1.0
+
+
+def test_mixed_iteration_cost_chunk_cap():
+    """``mixed_iteration_cost(chunk_tokens=)`` clamps the prefill term:
+    capped cost <= uncapped, equal when the burst already fits, and a
+    non-positive cap is rejected."""
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import mixed_iteration_cost
+    spec = ASSIGNED["granite-3-8b"].scaled_down()
+    plan = analytical.PagedCachePlan(page_size=16, num_pages=129,
+                                     page_bytes=4096.0,
+                                     bytes_per_token=256.0)
+    hw, prec = hardware.get("rpi5"), prec_mod.get("fp32")
+    kw = dict(decode_slots=8, avg_context=128.0)
+    full = mixed_iteration_cost(spec, hw, prec, plan,
+                                prefill_tokens=512, **kw)
+    capped = mixed_iteration_cost(spec, hw, prec, plan,
+                                  prefill_tokens=512, chunk_tokens=64, **kw)
+    same = mixed_iteration_cost(spec, hw, prec, plan,
+                                prefill_tokens=32, chunk_tokens=64, **kw)
+    uncapped_small = mixed_iteration_cost(spec, hw, prec, plan,
+                                          prefill_tokens=32, **kw)
+    assert capped.iteration_s < full.iteration_s
+    assert same.iteration_s == uncapped_small.iteration_s
+    with pytest.raises(ValueError):
+        mixed_iteration_cost(spec, hw, prec, plan, prefill_tokens=64,
+                             chunk_tokens=0, **kw)

@@ -343,7 +343,11 @@ def test_preempted_victim_rerun_reuses_cached_prefix():
     done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
                     for r in reqs])
     assert eng.stats["preemptions"] >= 1
-    assert eng.stats["prefix_hit_tokens"] >= 16     # victim's own pages
+    # the victim's re-run is a recompute resume: its self-hit lands in
+    # the recompute counters, while prefix_hit_tokens stays 0 because
+    # the two prompts are distinct (no cross-request sharing arrived)
+    assert eng.stats["recompute_hit_tokens"] >= 16  # victim's own pages
+    assert eng.stats["prefix_hit_tokens"] == 0
     scfg = ServeConfig(max_seq=48, attention_impl="naive")
     for r, c in zip(reqs, done):
         out = generate(params, spec, {"tokens": jnp.asarray(r.prompt[None])},

@@ -95,3 +95,127 @@ def test_random_mode_ignores_prefix():
     prompts = _templated_prompts(n_templates=1, per_template=32)[0]
     picks = {router.route(p) for p in prompts}
     assert picks == {"r0", "r1"}
+
+
+# ---------------------------------------------------------------------------
+# Engine-backed drain / guard tests (real engines, single device)
+# ---------------------------------------------------------------------------
+
+def _engines(n, cfg=None):
+    import jax
+    from repro.configs import ASSIGNED
+    from repro.models import lm
+    from repro.serve.scheduler import ContinuousBatchingEngine, SchedulerConfig
+    spec = ASSIGNED["granite-3-8b"].scaled_down(layers=2, width=64,
+                                                vocab=128)
+    params = lm.init(jax.random.PRNGKey(0), spec)
+    cfg = cfg or SchedulerConfig(max_slots=2, page_size=8, max_seq=48,
+                                 num_pages=24)
+    return spec, params, cfg, \
+        [ContinuousBatchingEngine(params, spec, cfg) for _ in range(n)]
+
+
+def _reqs(n, seed=0, vocab=128, plen=(10, 20), new=(4, 7)):
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, vocab, size=int(
+        rng.integers(plen[0], plen[1] + 1))).astype(np.int32),
+        int(rng.integers(new[0], new[1] + 1))) for i in range(n)]
+
+
+def test_remove_drains_queue_zero_lost():
+    """Removing a replica with QUEUED requests loses none of them: the
+    drained requests re-route to survivors, the survivor's own queue is
+    untouched, and the fleet's outputs stay per-uid identical to a
+    single dp=1 engine."""
+    from repro.serve.scheduler import ContinuousBatchingEngine
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    reqs = _reqs(10, seed=2)
+    for r in reqs:
+        router.submit(r)
+    # pre-step: everything is still queued on its hashed replica
+    queued = {rid: [q.uid for q in router.engines[rid].queue]
+              for rid in router.replica_ids}
+    victim = max(queued, key=lambda r: len(queued[r]))
+    survivor = next(r for r in router.replica_ids if r != victim)
+    victim_uids, survivor_uids = queued[victim], queued[survivor]
+    assert victim_uids, "workload must queue on the victim"
+    router.remove(victim)
+    after = [q.uid for q in router.engines[survivor].queue]
+    assert after[:len(survivor_uids)] == survivor_uids  # FCFS kept
+    assert sorted(after) == sorted(survivor_uids + victim_uids)
+    done = []
+    while any(e.num_active or e.queue for e in router.engines.values()):
+        done.extend(router.step())
+    done = sorted(done, key=lambda c: c.uid)
+    assert [c.uid for c in done] == [r.uid for r in reqs]
+    ref_eng = ContinuousBatchingEngine(params, spec, cfg)
+    ref = ref_eng.run([type(r)(r.uid, r.prompt.copy(), r.max_new_tokens)
+                       for r in reqs])
+    for a, b in zip(sorted(ref, key=lambda c: c.uid), done):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_remove_hands_off_resume_record():
+    """A queued RECOMPUTE request drained off a removed replica keeps
+    its prior output: the resume record follows it to the adopting
+    engine and the completion still splices prior + new tokens."""
+    from repro.serve.scheduler import Request, _Resume
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, 128, size=12).astype(np.int32)
+    victim = router.route(prompt)
+    # fabricate the scheduler's own preemption-requeue shape: prompt
+    # grown by the prior output, budget reduced, resume record parked
+    prior = [3, 5]
+    resumed = Request(0, np.concatenate(
+        [prompt, np.asarray(prior, np.int32)]), 4)
+    router.engines[victim].submit(resumed)
+    router.engines[victim]._resume[0] = _Resume(len(prompt), list(prior))
+    router.remove(victim)
+    done = []
+    while any(e.num_active or e.queue for e in router.engines.values()):
+        done.extend(router.step())
+    assert len(done) == 1
+    assert list(done[0].tokens[:2]) == prior
+    assert len(done[0].tokens) == len(prior) + resumed.max_new_tokens
+
+
+def test_mixed_mode_none_engine_guards():
+    """ids-only / mixed routers carry ``None`` engines: load probes,
+    spill, rebalance and removal must skip them instead of raising
+    AttributeError."""
+    spec, params, cfg, engines = _engines(1)
+    router = PrefixRouter(engines={"r0": engines[0], "r1": None},
+                          page_size=cfg.page_size)
+    assert router._load("r1") == 0.0
+    assert router.rebalance() == 0
+    for r in _reqs(6, seed=6):
+        target = router.submit(r)           # no crash whichever way it hashes
+        assert target in ("r0", "r1")
+    router.remove("r1")                     # None replica: quiet no-op
+    assert "r1" not in router.engines
+    # ids-only mode: the pure-policy surface stays engine-free
+    ids_only = PrefixRouter(replica_ids=["a", "b"])
+    assert ids_only.rebalance() == 0
+    assert ids_only.submit(_reqs(1, seed=7)[0]) in ("a", "b")
+    ids_only.remove("a")
+    assert ids_only.replica_ids == ["b"]
+
+
+def test_spill_uses_pending_cost_not_request_count():
+    """Load is bucket-padded token COST: one long-prompt request must
+    outweigh several short ones, steering spill at equal request
+    counts."""
+    spec, params, cfg, engines = _engines(2)
+    from repro.serve.scheduler import Request
+    long_req = Request(0, np.zeros(40, np.int32), 4)
+    shorts = [Request(1 + i, np.zeros(8, np.int32), 4) for i in range(2)]
+    engines[0].submit(long_req)
+    for s in shorts:
+        engines[1].submit(s)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    assert router._load("r0") > router._load("r1")
+    assert router._load("r0") == engines[0].pending_cost

@@ -273,3 +273,202 @@ def test_paged_cache_plan_budget():
                             kv_budget_bytes=2e6, max_slots=4)
     assert layout.num_pages <= plan.num_pages
     assert layout.num_pages <= 4 * layout.slots_pages(128) + 1
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill
+# ---------------------------------------------------------------------------
+
+class _RecordingBackend:
+    """Transparent proxy over a ``PagedKVBackend`` recording the padded
+    width of every prefill call, so tests can assert the scheduler's
+    per-iteration chunk-budget accounting against what actually reached
+    the device."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.calls = []            # (kind, padded_width)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def admit_full(self, padded, slot, true_len, row):
+        self.calls.append(("full", len(padded)))
+        return self._inner.admit_full(padded, slot, true_len, row)
+
+    def admit_prefix(self, padded, slot, prefix_len, true_len, row, *,
+                     n_prefix_pages):
+        self.calls.append(("prefix", len(padded)))
+        return self._inner.admit_prefix(padded, slot, prefix_len, true_len,
+                                        row, n_prefix_pages=n_prefix_pages)
+
+    def prefill_chunk(self, padded, slot, prefix_len, true_len, row, *,
+                      n_prefix_pages):
+        self.calls.append(("chunk", len(padded)))
+        return self._inner.prefill_chunk(padded, slot, prefix_len, true_len,
+                                         row, n_prefix_pages=n_prefix_pages)
+
+
+@pytest.mark.parametrize("cache_dtype", ["fp32", "int4"])
+def test_chunked_prefill_outputs_identical(cache_dtype):
+    """Chunked admission is a SCHEDULING change only: outputs must be
+    token-for-token the unchunked engine's, every iteration's padded
+    prefill tokens must fit the budget, and long prompts must actually
+    split (prefill_chunks > 0)."""
+    spec, params = _setup()
+    rng = np.random.default_rng(5)
+    shapes = [(40, 5), (9, 7), (33, 4), (21, 6), (56, 3), (14, 8)]
+    reqs = [Request(i, rng.integers(0, 128, size=l).astype(np.int32), n)
+            for i, (l, n) in enumerate(shapes)]
+    budget = 16
+    outs = {}
+    for chunk in (0, budget):
+        cfg = SchedulerConfig(max_slots=3, page_size=8, max_seq=80,
+                              num_pages=40, cache_dtype=cache_dtype,
+                              prefill_chunk_tokens=chunk)
+        eng = ContinuousBatchingEngine(params, spec, cfg)
+        rec = _RecordingBackend(eng.backend)
+        eng.backend = rec
+        for r in reqs:
+            eng.submit(Request(r.uid, r.prompt.copy(), r.max_new_tokens))
+        done = []
+        while eng.num_active or eng.queue:
+            before = len(rec.calls)
+            done.extend(eng.step())
+            if chunk:
+                spent = sum(w for _, w in rec.calls[before:])
+                assert spent <= budget, rec.calls[before:]
+        eng.alloc.check()
+        outs[chunk] = sorted(done, key=lambda c: c.uid)
+        if chunk:
+            assert eng.stats["prefill_chunks"] > 0
+            # both engines prefill every prompt token exactly once
+            assert eng.stats["prefill_tokens"] == sum(l for l, _ in shapes)
+    for a, b in zip(outs[0], outs[budget]):
+        assert a.uid == b.uid
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_chunked_prefill_composes_with_prefix_cache():
+    """Prefix-cache hits shrink the suffix the chunks cover; hit
+    accounting and outputs stay identical to the unchunked prefix-on
+    engine, and completed chunked prompts register for later hits."""
+    spec, params = _setup()
+    rng = np.random.default_rng(7)
+    template = rng.integers(0, 128, size=24).astype(np.int32)
+    reqs = []
+    for i in range(6):
+        suffix = rng.integers(0, 128,
+                              size=int(rng.integers(6, 14))).astype(np.int32)
+        reqs.append(Request(i, np.concatenate([template, suffix]),
+                            int(rng.integers(4, 7))))
+    stats = {}
+    outs = {}
+    for chunk in (0, 16):
+        cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=64,
+                              num_pages=40, enable_prefix_cache=True,
+                              prefill_chunk_tokens=chunk)
+        eng = ContinuousBatchingEngine(params, spec, cfg)
+        done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                        for r in reqs])
+        eng.alloc.check()
+        outs[chunk] = sorted(done, key=lambda c: c.uid)
+        stats[chunk] = dict(eng.stats)
+    for a, b in zip(outs[0], outs[16]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert stats[16]["prefix_hit_tokens"] > 0
+    assert stats[16]["prefix_hit_tokens"] == stats[0]["prefix_hit_tokens"]
+    assert stats[16]["prefill_tokens"] == stats[0]["prefill_tokens"]
+
+
+def test_chunked_prefill_under_preemption_and_recompute_stats():
+    """Chunking + pool pressure: preempted victims re-chunk on
+    recompute, outputs stay the static per-request generate, and
+    recompute traffic lands in its own counters — ``prompt_tokens`` /
+    ``prefix_hit_tokens`` keep meaning ARRIVED work, not work inflated
+    by the scheduler's own evictions."""
+    spec, params = _setup()
+    rng = np.random.default_rng(11)
+    reqs = [Request(i, rng.integers(0, 128, size=16).astype(np.int32), 20)
+            for i in range(5)]
+    cfg = SchedulerConfig(max_slots=4, page_size=8, max_seq=48,
+                          num_pages=10, prefill_chunk_tokens=16)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                    for r in reqs])
+    eng.alloc.check()
+    assert eng.stats["preemptions"] > 0, "pool sized to force preemption"
+    scfg = ServeConfig(max_seq=48, attention_impl="naive")
+    for r, c in zip(reqs, sorted(done, key=lambda c: c.uid)):
+        out = generate(params, spec, {"tokens": jnp.asarray(r.prompt[None])},
+                       r.max_new_tokens - 1, scfg)
+        np.testing.assert_array_equal(np.asarray(out["tokens"][0]), c.tokens)
+    # recompute accounting is separate and honest
+    assert eng.stats["prompt_tokens"] == sum(len(r.prompt) for r in reqs)
+    assert eng.stats["prefix_hit_tokens"] == 0
+    assert eng.stats["recompute_prompt_tokens"] > 0
+
+
+def test_prefill_chunk_tokens_validation():
+    spec, params = _setup()
+    for bad in (4, 12):            # below page size / not a multiple
+        cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=32,
+                              num_pages=16, prefill_chunk_tokens=bad)
+        with pytest.raises(ValueError):
+            ContinuousBatchingEngine(params, spec, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Preemption landing mid-speculative-window
+# ---------------------------------------------------------------------------
+
+class _BlockTableAuditBackend(_RecordingBackend):
+    """Proxy asserting every lazily-grown block-table write matches the
+    HOST's view of the owning slot at write time.  A preemption that
+    lands while decode windows are queued used to be able to flush a
+    victim's stale page updates — rows for a slot that was just
+    released, or page ids the host no longer owns."""
+
+    def __init__(self, inner, eng_ref):
+        super().__init__(inner)
+        self._eng = eng_ref
+
+    def write_block_entries(self, updates):
+        for row, idx, page in updates:
+            slot = self._eng()['eng'].slots[row]
+            assert slot is not None, \
+                f"block-table write for empty slot row {row}"
+            assert slot.pages[idx] == page, \
+                (row, idx, page, slot.pages)
+        return self._inner.write_block_entries(updates)
+
+
+def test_spec_window_preemption_block_tables_consistent():
+    """Forced preemption while spec_k=4 windows are in flight: every
+    surviving slot's device block table stays consistent with host
+    pages (audited at each write), outputs equal the non-speculative
+    greedy engine, and both preemption and speculation actually
+    happened."""
+    spec, params = _setup()
+    rng = np.random.default_rng(13)
+    reqs = [Request(i, rng.integers(0, 128, size=16).astype(np.int32), 20)
+            for i in range(5)]
+
+    def go(k):
+        cfg = SchedulerConfig(max_slots=4, page_size=8, max_seq=48,
+                              num_pages=10, spec_k=k)
+        eng = ContinuousBatchingEngine(params, spec, cfg)
+        holder = {'eng': eng}
+        eng.backend = _BlockTableAuditBackend(eng.backend, lambda: holder)
+        done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                        for r in reqs])
+        eng.alloc.check()
+        return eng, sorted(done, key=lambda c: c.uid)
+
+    base_eng, base = go(1)
+    spec_eng, spec_done = go(4)
+    assert spec_eng.stats["preemptions"] > 0
+    assert spec_eng.stats["spec_steps"] > 0
+    for a, b in zip(base, spec_done):
+        assert a.uid == b.uid
+        np.testing.assert_array_equal(a.tokens, b.tokens)
