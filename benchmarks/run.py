@@ -24,8 +24,17 @@ def tier1() -> None:
     # (jax pins the device count at first init, so it needs its own
     # process env, same mechanism as tests/test_sharding_multidevice.py)
     kbench = os.path.join(root, "benchmarks", "kernel_bench.py")
+    pytest_cmd = [sys.executable, "-m", "pytest", "-x", "-q"]
+    try:
+        # per-test timeout so an injected-fault hang (chaos tests sleep
+        # and kill backends) fails fast instead of stalling the gate;
+        # thread method because the suite is single-process jax
+        import pytest_timeout  # noqa: F401
+        pytest_cmd += ["--timeout=300", "--timeout-method=thread"]
+    except ImportError:
+        pass                   # local envs without the plugin still gate
     steps = [
-        ([sys.executable, "-m", "pytest", "-x", "-q"], {}),
+        (pytest_cmd, {}),
         ([sys.executable, bench, "--smoke",
           "--json", "BENCH_serve_throughput.json"], {}),
         ([sys.executable, bench, "--prefix", "--smoke"], {}),
@@ -71,6 +80,13 @@ def tier1() -> None:
         ([sys.executable, bench, "--spec-decode", "--smoke",
           "--devices", "2", "--cache-dtype", "int4"],
          {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}),
+        # fault-tolerance gate: dp=2 open-loop stream with a seeded
+        # chaos crash killing one replica mid-decode — zero lost
+        # requests, outputs within the tolerance band of the no-fault
+        # dp=1 run, and post-failover goodput >= 0.5x the dp=1
+        # same-window baseline under the model-anchored SLOs
+        ([sys.executable, bench, "--chaos", "--smoke",
+          "--json", "BENCH_serve_chaos.json"], {}),
         # kernel microbench JSON artifact (page-byte accounting rows)
         ([sys.executable, kbench, "--json", "BENCH_kernel_bench.json"],
          {}),

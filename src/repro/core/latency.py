@@ -411,6 +411,107 @@ def serve_cluster_grid(spec: ModelSpec, hw: HardwareSpec,
     return rows
 
 
+def failover_recovery_cost(spec: ModelSpec, hw: HardwareSpec,
+                           precision: PrecisionSpec, plan: PagedCachePlan,
+                           *, context_tokens: float) -> Dict[str, float]:
+    """Cost of moving ONE mid-flight request off a dead replica, both
+    ways the serve stack could pay it — EdgeProfiler's own traffic
+    methodology (bytes over a link vs FLOPs over a roofline) applied to
+    failover:
+
+    * **migrate** — ship the request's KV pages to a survivor over the
+      board link: ``context_tokens x plan.bytes_per_token`` bytes at
+      ``net_bw x u_net``.  ``plan`` carries the cache dtype, so int4
+      resume state moves ~1/8 the fp32 bytes — quantization flips
+      which regime is cheap, not just how cheap it is.
+    * **re-prefill** — recompute the context from the resume record's
+      token ids on the survivor (what ``export_active`` migration
+      actually does today): the full prefill FLOPs at the device's
+      effective rate, dequant overhead included.
+
+    Returns both times, the cheaper regime's name, and ``recovery_s``
+    (the min — what a transport-equipped fleet would pay).  On 1 GbE
+    edge boards (rpi/jetson class) int4 migration wins by orders of
+    magnitude; on ICI-linked accelerators with huge matmul rates,
+    re-prefill can win — the crossover is the point of modelling it.
+    """
+    if context_tokens < 0:
+        raise ValueError("context_tokens must be >= 0")
+    migrate_bytes = context_tokens * plan.bytes_per_token
+    migrate_s = migrate_bytes / (hw.net_bw * hw.u_net)
+    flops = (mixed_iteration_flops(spec, int(context_tokens), 0, 0.0)
+             * precision.dequant_overhead)
+    reprefill_s = flops / (hw.flops_at(precision.name) * hw.u_compute)
+    return {"migrate_bytes": migrate_bytes, "migrate_s": migrate_s,
+            "reprefill_flops": flops, "reprefill_s": reprefill_s,
+            "cheaper": "migrate" if migrate_s <= reprefill_s
+            else "reprefill",
+            "recovery_s": min(migrate_s, reprefill_s)}
+
+
+def serve_availability(spec: ModelSpec, hw: HardwareSpec,
+                       precision: PrecisionSpec, plan: PagedCachePlan, *,
+                       slots: int, avg_prompt: float, avg_new: float,
+                       dp: int, failed: int,
+                       offered_tokens_per_s: float | None = None,
+                       **predict_kw) -> Dict[str, float]:
+    """Fleet capacity and goodput with ``failed`` of ``dp`` replicas
+    dead — the analytical counterpart of the ``--chaos`` benchmark gate.
+
+    Replicas are independent engines behind the router, so degraded
+    capacity is simply the survivors' aggregate rate; what failure
+    actually costs a serve fleet is (a) the LOAD MULTIPLIER — the dead
+    replicas' traffic lands on ``dp - failed`` survivors, so each one
+    sees ``dp / (dp - failed)`` of its share, and (b) the one-time
+    RECOVERY of every mid-flight request (``failover_recovery_cost``
+    at the mean failover context, times the dead replicas' live
+    slots).  With ``offered_tokens_per_s`` given, ``goodput`` is the
+    offered load clipped to degraded capacity — the fraction the
+    degraded fleet still serves inside its SLO budget, matching how
+    the open-loop driver counts goodput.
+    """
+    if dp < 1:
+        raise ValueError("dp must be >= 1")
+    if not 0 <= failed < dp:
+        raise ValueError(f"failed={failed} must be in [0, dp={dp})")
+    survivors = dp - failed
+
+    def _agg(d: Dict[str, float]) -> float:
+        return d.get("aggregate_tokens_per_s", d["continuous_tokens_per_s"])
+
+    base = predict_serve_throughput(
+        spec, hw, precision, plan, slots=slots, avg_prompt=avg_prompt,
+        avg_new=avg_new, dp=dp, **predict_kw)
+    degraded = predict_serve_throughput(
+        spec, hw, precision, plan, slots=slots, avg_prompt=avg_prompt,
+        avg_new=avg_new, dp=survivors, **predict_kw)
+    cap0, cap1 = _agg(base), _agg(degraded)
+    # mean failover context: prompt fully written, half the output
+    # committed when the replica died
+    ctx = avg_prompt + avg_new / 2
+    rec = failover_recovery_cost(spec, hw, precision, plan,
+                                 context_tokens=ctx)
+    live = effective_slots(plan, slots, avg_prompt, avg_new,
+                           predict_kw.get("admission", "lazy"))
+    out = {"dp": float(dp), "failed": float(failed),
+           "survivors": float(survivors),
+           "aggregate_tokens_per_s": cap0,
+           "degraded_tokens_per_s": cap1,
+           "capacity_fraction": cap1 / max(1e-12, cap0),
+           "load_multiplier": dp / survivors,
+           "failover_context_tokens": ctx,
+           "failover_requests": failed * live,
+           "recovery_s_per_request": rec["recovery_s"],
+           "recovery_s_total": failed * live * rec["recovery_s"],
+           **{f"recovery_{k}": v for k, v in rec.items()}}
+    if offered_tokens_per_s is not None:
+        good = min(offered_tokens_per_s, cap1)
+        out["offered_tokens_per_s"] = offered_tokens_per_s
+        out["goodput_tokens_per_s"] = good
+        out["goodput_fraction"] = good / max(1e-12, offered_tokens_per_s)
+    return out
+
+
 @dataclass
 class RooflineTerms:
     compute_s: float

@@ -20,6 +20,24 @@ template prefix to a replica so a template's prefix pages stay hot on
 ONE pool, with occupancy-aware overflow spill and steal-from-deepest
 rebalance on replica drain.
 
+The router doubles as the fleet's HEALTH CHECKER and the stack is
+FAULT-AWARE end to end: ``faults.ChaosBackend`` wraps any backend and
+injects seeded deterministic faults (permanent crash-on-step, latency
+spikes, NaN-logit corruption) through the real serve surface;
+``step()`` evicts a replica after ``fail_after`` consecutive step
+exceptions or a missed ``heartbeat_s`` and migrates BOTH its queued
+and admitted work to survivors (``export_active`` resume records —
+zero requests lost even on a crash mid-decode; ``add()`` rejoins a
+recovered replica).  The request lifecycle is typed: ``Request``
+carries a ``deadline_s`` (late queued work sheds, never admits) and a
+NaN retry budget; every ``Completion`` reports ``ok`` / ``shed`` /
+``failed``.  With a ``router.ServeSLO`` policy (distilled from
+``core.latency.predict_serve_throughput``) ``submit`` applies
+analytical BACKPRESSURE — hashed-target TTFT violation spills,
+fleet-wide violation sheds — and ``core.latency.serve_availability`` /
+``failover_recovery_cost`` model degraded capacity, load multiplier
+and migrate-vs-reprefill recovery cost for the same fleet.
+
 With ``SchedulerConfig.spec_k > 1`` the engine decodes SELF-
 SPECULATIVELY: each slot drafts up to ``spec_k - 1`` tokens from its
 own context (n-gram prompt lookup, ``serve.spec_decode`` — no second
@@ -60,7 +78,8 @@ cells assert token identity with the non-speculative engine in
 tests/test_spec_decode.py and the ``--spec-decode`` benchmark gate;
 chunked-prefill cells assert token identity plus the per-iteration
 budget bound in tests/test_serve_scheduler.py and the ``--open-loop``
-benchmark gate):
+benchmark gate; fault-tolerance cells in tests/test_serve_faults.py
+and the ``--chaos`` benchmark gate):
 
 =========  ====================  =======================  ==============
 dtype      single device         tp-sharded (tp=2/4):     dp replicas
@@ -80,6 +99,34 @@ dtype      single device         tp-sharded (tp=2/4):     dp replicas
            the neighbour token)  KV-head dim; spec_k      int4 smoke)
                                  gate in CI)
 =========  ====================  =======================  ==============
+
+Fault-tolerance matrix (chaos mode x backend x dp — every cell through
+the REAL serve surface, ``ChaosBackend`` wrapping the cell's backend):
+
+===============  =====================  ================================
+chaos mode       single replica         dp fleet (health-checked router)
+===============  =====================  ================================
+crash-on-step    ``ReplicaFault`` on    replica evicted after
+(permanent)      every later device     ``fail_after`` step faults;
+                 call; mid-admission    queued + admitted work migrates
+                 crash restores the     (zero lost, tokens identical to
+                 queue head             the no-fault dp=1 run; CI
+                                        ``--chaos`` gate: goodput
+                                        recovers >= 0.5x same-window
+                                        dp=1 post failover)
+latency spike    outputs unchanged      heartbeat deadline
+(sleep)          (byte-identical)       (``heartbeat_s``) evicts a
+                                        wedged-not-crashing replica
+NaN logits       typed ``failed`` (no   same guard per replica; retry
+(ok-flag zero)   garbage committed)     recompute is token-identical
+===============  =====================  ================================
+
+Both backends feed the NaN guard the same way: ``decode`` returns
+``(out, n_emit, ok)`` with ``ok`` computed on-device from the step's
+logits, so silent corruption is caught before any token commits.  The
+hypothesis fuzz (tests/test_serve_faults.py) drives crash-at-arbitrary-
+iteration over the dp fleet; survivor allocator refcounts balance
+after every failover.
 
 Tolerance band = per-request matching-prefix fraction >= 0.9
 (``tests/tolerance.assert_close_tokens``): the sharded psum reduces in
@@ -117,11 +164,12 @@ cost-per-million-tokens per cell).
 from repro.serve.backend import (PagedKVBackend, ShardedPagedBackend,
                                  SingleDeviceBackend, make_backend)
 from repro.serve.engine import ServeConfig, generate, load_quantized, make_prefill_step, make_serve_step
+from repro.serve.faults import ChaosBackend, ChaosSchedule, ReplicaFault
 from repro.serve.paged_cache import (PageAllocator, PrefixCache, PrefixMatch,
                                      copy_page, make_layout, pages_needed,
                                      plan_for_layout)
-from repro.serve.router import (PrefixRouter, make_replicas, pick_replica,
-                                route_key)
+from repro.serve.router import (PrefixRouter, ServeSLO, make_replicas,
+                                pick_replica, route_key)
 from repro.serve.scheduler import (Completion, ContinuousBatchingEngine,
                                    Request, SchedulerConfig)
 from repro.serve.spec_decode import NGramDraftTable

@@ -110,7 +110,12 @@ def _decode_fn(params, cache, tokens, active, *, spec, mesh=None,
     # pin inactive slots at pos 0 so their (clamped) block-table lookups
     # stay on the null page indefinitely
     cache["pos"] = cache["pos"] * active
-    return jnp.argmax(logits[:, 0], axis=-1), cache
+    # per-slot finite-logits flag: argmax over a NaN/inf row is garbage
+    # the host cannot detect from the sampled id alone, so the flag —
+    # not the logits — crosses to the host and the scheduler fails the
+    # slot instead of committing the token
+    finite = jnp.all(jnp.isfinite(logits[:, 0]), axis=-1).astype(jnp.int32)
+    return jnp.argmax(logits[:, 0], axis=-1), finite, cache
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "mesh", "shard_params"),
@@ -122,7 +127,8 @@ def _decode_window_fn(params, cache, tokens, active, lens, *, spec,
     and advance each slot's pos by exactly the emitted count — the
     rollback that keeps rejected-draft KV outside the valid context.
     Returns (out (B, K) greedy tokens per window position, n_emit (B,)
-    how many of them are committed: accepted drafts + the bonus token).
+    how many of them are committed: accepted drafts + the bonus token,
+    finite (B,) 1 where every REAL window position's logits are finite).
     Acceptance compares the drafted token at window position j+1 with
     the verified argmax at position j, so every emitted token is
     token-for-token what sequential greedy decode would produce.
@@ -138,7 +144,13 @@ def _decode_window_fn(params, cache, tokens, active, lens, *, spec,
     accepted = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
     n_emit = (accepted + 1) * active
     cache["pos"] = (pos0 + n_emit) * active                 # pin inactive at 0
-    return out, n_emit, cache
+    # finite check over the real window positions only (padded positions
+    # score pad tokens — their logits never commit)
+    pos_ok = jnp.all(jnp.isfinite(logits), axis=-1)         # (B, K)
+    mask = jnp.arange(K)[None, :] < lens[:, None]
+    finite = jnp.all(jnp.where(mask, pos_ok, True),
+                     axis=1).astype(jnp.int32)
+    return out, n_emit, finite, cache
 
 
 class PagedKVBackend:
@@ -180,18 +192,22 @@ class PagedKVBackend:
 
     def decode(self, tokens: np.ndarray, active: np.ndarray,
                lens: Optional[np.ndarray] = None
-               ) -> Tuple[np.ndarray, np.ndarray]:
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """One batched decode step over a K-token window.
 
         ``tokens`` is (B, K): each active slot's last committed token
         followed by up to K-1 speculatively drafted tokens; ``lens``
         (B,) counts the real window positions per slot (None means the
         plain non-speculative step: K == 1, one token per slot).
-        Returns ``(out, n_emit)``: ``out`` (B, K) the greedy token at
-        every verified window position and ``n_emit`` (B,) how many of
+        Returns ``(out, n_emit, ok)``: ``out`` (B, K) the greedy token
+        at every verified window position, ``n_emit`` (B,) how many of
         them each slot commits this step (always 1 on the K=1 path,
-        accepted drafts + 1 under speculation).  K=1 with ``lens=None``
-        runs the exact pre-speculative program.
+        accepted drafts + 1 under speculation), and ``ok`` (B,) a
+        finite-logits flag per slot — 0 means the slot's logits held
+        NaN/inf this step (corrupted weights or KV) and its sampled
+        tokens are garbage the scheduler must NOT commit (the NaN
+        guard fails the slot instead).  K=1 with ``lens=None`` runs
+        the exact pre-speculative program.
         """
         raise NotImplementedError
 
@@ -293,14 +309,15 @@ class SingleDeviceBackend(PagedKVBackend):
         if tokens.shape[1] == 1 and lens is None:
             # the pre-speculative path, byte-identical program: K=1 must
             # bitwise-reproduce the sequential engine
-            nxt, self.cache = self._decode(
+            nxt, ok, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(active))
-            return np.asarray(nxt)[:, None], np.asarray(active, np.int32)
-        out, n_emit, self.cache = self._decode_window(
+            return (np.asarray(nxt)[:, None], np.asarray(active, np.int32),
+                    np.asarray(ok))
+        out, n_emit, ok, self.cache = self._decode_window(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(active), jnp.asarray(lens))
-        return np.asarray(out), np.asarray(n_emit)
+        return np.asarray(out), np.asarray(n_emit), np.asarray(ok)
 
     def copy_page(self, src_page: int, dst_page: int) -> None:
         self.cache = pc.copy_page(self.cache, src_page, dst_page)

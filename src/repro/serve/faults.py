@@ -1,0 +1,154 @@
+"""Chaos injection for the serve stack: seeded, deterministic faults.
+
+Edge deployments are the failure-prone tier — thermal throttling,
+brown-outs, flaky links, silent numeric corruption — and a serve fleet
+that only survives cooperative drain is not fault-tolerant, it is
+lucky.  ``ChaosBackend`` wraps any ``PagedKVBackend`` and injects three
+fault classes on a DETERMINISTIC schedule keyed to the backend's own
+decode-step counter, so every failure a test or benchmark observes
+reproduces bit-for-bit from the seed:
+
+* **crash-on-step** — the scheduled decode step raises
+  ``ReplicaFault`` and the backend goes PERMANENTLY dead: every later
+  device call (admit, decode, CoW, block-table write, release) raises
+  too, exactly like a process that OOMed or lost its accelerator.
+  Persistence is what lets the router's consecutive-failure streak
+  accumulate and what exercises the scheduler's admission-restore
+  path (a retry step crashes in ``_admit``, not ``decode``).
+* **latency spike** — the scheduled step sleeps before running, the
+  thermal-throttle / contention stand-in that trips the router's
+  heartbeat deadline without corrupting any state.
+* **NaN-logit corruption** — the scheduled step zeroes the decode
+  return's finite-``ok`` flags for the scheduled slots, modelling the
+  silent numeric corruption (bad DRAM, overflowed activations) the
+  scheduler's NaN guard must catch instead of emitting garbage.
+
+Faults fire at DECODE granularity: ``step_index`` counts ``decode``
+calls on this backend, because the decode loop is where a replica
+spends its life and the only clock every backend shares.  The wrapper
+delegates everything else (layout, plan, cache, params, tp) to the
+inner backend, so a chaos replica drops into ``ContinuousBatchingEngine``
+/ ``PrefixRouter`` unchanged — fault tolerance is tested through the
+real serve surface, not a mock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Optional, Tuple
+
+import numpy as np
+
+
+class ReplicaFault(RuntimeError):
+    """A (simulated) replica failure: the backend is gone and every
+    device call on it raises.  The router's health check catches this
+    (any exception counts), evicts the replica, and migrates its work —
+    the typed class exists so tests can assert the failure path without
+    masking genuine bugs as chaos."""
+
+
+@dataclass(frozen=True)
+class ChaosSchedule:
+    """When each fault fires, keyed by the backend's decode-step index.
+
+    ``crash_at`` — steps that raise ``ReplicaFault`` (the first one
+    scheduled kills the backend for good; later entries are moot).
+    ``latency_at`` — step -> seconds to sleep before decoding.
+    ``nan_at`` — step -> tuple of slot indices whose finite-flags are
+    zeroed (``None`` corrupts every active slot that step).
+    """
+    crash_at: FrozenSet[int] = frozenset()
+    latency_at: Dict[int, float] = field(default_factory=dict)
+    nan_at: Dict[int, Optional[Tuple[int, ...]]] = field(default_factory=dict)
+
+    @classmethod
+    def random(cls, seed: int, steps: int, *, p_crash: float = 0.0,
+               p_latency: float = 0.0, p_nan: float = 0.0,
+               spike_s: float = 0.05) -> "ChaosSchedule":
+        """Seeded Bernoulli draw per step per fault class — the same
+        (seed, steps, probabilities) always builds the same schedule,
+        so a fuzzed failure reproduces from its seed alone."""
+        rng = np.random.default_rng(seed)
+        crash, latency, nan = set(), {}, {}
+        for t in range(steps):
+            draw = rng.random(3)
+            if draw[0] < p_crash:
+                crash.add(t)
+            if draw[1] < p_latency:
+                latency[t] = spike_s
+            if draw[2] < p_nan:
+                nan[t] = None
+        return cls(frozenset(crash), latency, nan)
+
+
+class ChaosBackend:
+    """Fault-injecting wrapper over any ``PagedKVBackend`` (see module
+    docstring).  Reads delegate to the inner backend; device-mutating
+    calls raise ``ReplicaFault`` once the scheduled crash has fired."""
+
+    def __init__(self, inner, schedule: ChaosSchedule):
+        self._inner = inner
+        self.schedule = schedule
+        self.step_index = 0            # decode calls seen on this backend
+        self.dead = False
+        self.injected: Dict[str, int] = {
+            "crashes": 0, "latency_spikes": 0, "nan_steps": 0}
+
+    def __getattr__(self, name):
+        # layout / plan / cache / params / tp / admit jits … — everything
+        # not intercepted below behaves exactly like the inner backend
+        return getattr(self._inner, name)
+
+    def _check_dead(self) -> None:
+        if self.dead:
+            raise ReplicaFault("replica backend is dead (injected crash)")
+
+    def decode(self, tokens, active, lens=None):
+        t = self.step_index
+        self.step_index += 1
+        if self.dead or t in self.schedule.crash_at:
+            if not self.dead:
+                self.dead = True
+                self.injected["crashes"] += 1
+            raise ReplicaFault(f"injected crash at decode step {t}")
+        spike = self.schedule.latency_at.get(t)
+        if spike:
+            self.injected["latency_spikes"] += 1
+            time.sleep(spike)
+        out, n_emit, ok = self._inner.decode(tokens, active, lens)
+        slots = self.schedule.nan_at.get(t, "none")
+        if slots != "none":
+            ok = np.array(ok, copy=True)
+            if slots is None:
+                ok[np.asarray(active) > 0] = 0
+            else:
+                ok[list(slots)] = 0
+            self.injected["nan_steps"] += 1
+        return out, n_emit, ok
+
+    # every other device interaction on a dead backend raises too — a
+    # crashed replica does not keep admitting, copying or releasing
+    def admit_full(self, *a, **kw):
+        self._check_dead()
+        return self._inner.admit_full(*a, **kw)
+
+    def admit_prefix(self, *a, **kw):
+        self._check_dead()
+        return self._inner.admit_prefix(*a, **kw)
+
+    def prefill_chunk(self, *a, **kw):
+        self._check_dead()
+        return self._inner.prefill_chunk(*a, **kw)
+
+    def copy_page(self, *a, **kw):
+        self._check_dead()
+        return self._inner.copy_page(*a, **kw)
+
+    def release_slot(self, *a, **kw):
+        self._check_dead()
+        return self._inner.release_slot(*a, **kw)
+
+    def write_block_entries(self, *a, **kw):
+        self._check_dead()
+        return self._inner.write_block_entries(*a, **kw)

@@ -59,6 +59,17 @@ runs the vLLM-style alternative on top of the paged KV cache:
   greedy decode (asserted in tests/test_spec_decode.py and the
   ``benchmarks/serve_throughput.py --spec-decode`` gate).
 
+* the request LIFECYCLE is typed and fault-aware: ``Request`` carries
+  an optional ``deadline_s`` (queued work past its deadline is SHED
+  with a typed ``Completion(status="shed")`` instead of admitted late)
+  and a NaN retry budget; every decode step returns a per-slot
+  finite-logits flag and a flagged slot FAILS — requeue-recompute
+  while retries remain, ``status="failed"`` after — rather than
+  committing garbage tokens; ``export_active`` detaches live slots as
+  migration records so a dying replica's admitted work moves to
+  survivors with zero requests lost (``serve/faults.py`` injects the
+  faults, ``serve/router.py`` health checks drive the failover).
+
 Greedy decoding matches per-request static ``generate`` token-for-token
 with prefix caching on or off (asserted in tests/test_prefix_cache.py),
 and the allocator invariants hold under random interleavings
@@ -74,9 +85,10 @@ token-for-token identical output (tests/test_serve_backend_multidevice).
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -91,13 +103,32 @@ class Request:
     uid: int
     prompt: np.ndarray             # (S,) int32 token ids
     max_new_tokens: int
+    # deadline in seconds since arrival: a request still QUEUED when it
+    # expires is SHED (typed completion, never admitted) — starting
+    # work that is already late just delays everyone else.  None = no
+    # deadline.  Admitted slots always run to completion.
+    deadline_s: Optional[float] = None
+    # NaN-guard retry budget: how many times a corrupted-logits failure
+    # may requeue (recompute-style) before the request fails for good
+    retries: int = 0
+    # stamped by the first submit(); carried across preemption, retry
+    # and cross-replica migration so deadlines measure true age
+    arrival_t: Optional[float] = None
 
 
 @dataclass
 class Completion:
     uid: int
     prompt_len: int
-    tokens: np.ndarray             # (max_new_tokens,) generated ids
+    tokens: np.ndarray             # generated ids (short of the budget
+                                   # when status != "ok")
+    # "ok"     — ran to its token budget
+    # "shed"   — dropped by deadline or SLO backpressure before/without
+    #            admission (tokens = any prior preempted output)
+    # "failed" — NaN/inf logits with the retry budget exhausted
+    # Typed loss is the fault-tolerance contract: every submitted uid
+    # gets exactly one Completion, whatever happens to its replica.
+    status: str = "ok"
 
 
 @dataclass
@@ -144,6 +175,11 @@ class _Slot:
     # completed chunks); < prompt_len means the slot is mid-prefill and
     # sits out decode windows until its final chunk lands
     prefilled: int = 0
+    # request-lifecycle state carried from the Request (preserved across
+    # preemption, NaN-retry requeues and cross-replica migration)
+    deadline_s: Optional[float] = None
+    retries_left: int = 0
+    arrival_t: Optional[float] = None
 
     @property
     def done(self) -> bool:
@@ -246,7 +282,13 @@ class ContinuousBatchingEngine:
             "recompute_prompt_tokens": 0, "recompute_hit_tokens": 0,
             # chunked prefill: chunks issued for already-admitted slots
             # (first chunks count under "admitted")
-            "prefill_chunks": 0}
+            "prefill_chunks": 0,
+            # request-lifecycle robustness: deadline sheds, NaN-guard
+            # slot failures, the retries they spent, and requests that
+            # failed for good (budget exhausted)
+            "shed": 0, "nan_failures": 0, "retries": 0, "failed": 0}
+        # injectable wall clock for deadline shedding (tests freeze it)
+        self.clock = time.monotonic
 
     # -- queue ------------------------------------------------------------
 
@@ -264,6 +306,8 @@ class ContinuousBatchingEngine:
                 f"only has {self.layout.num_pages - 1} usable")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if req.arrival_t is None:
+            req.arrival_t = self.clock()
         self.queue.append(req)
 
     @property
@@ -304,6 +348,15 @@ class ContinuousBatchingEngine:
             out[s.uid] = prior + len(s.generated)
         return out
 
+    @property
+    def head_is_resume(self) -> bool:
+        """True when the queue head is a preemption/retry RECOMPUTE
+        resume.  The router's rebalance donor scan skips these: a
+        resume re-prefill mostly re-hits its own replica's pages, and
+        head-of-line recompute priority is the preemption contract —
+        stealing it would cold-prefill prior output elsewhere."""
+        return bool(self.queue) and self.queue[0].uid in self._resume
+
     def take_queued(self) -> List[Request]:
         """Hand back every QUEUED (not yet admitted) request, emptying
         the queue — the router's drain path on replica removal."""
@@ -322,6 +375,46 @@ class ContinuousBatchingEngine:
         re-routed recompute request's completion splices its prior
         output exactly as if it had resumed here."""
         self._resume[uid] = record
+
+    def export_active(self
+                      ) -> Tuple[List[Tuple[Request, _Resume]],
+                                 List[Completion]]:
+        """Detach every ADMITTED slot as a (Request, resume-record)
+        migration pair — the router's FAILOVER path when a replica dies
+        with live slots.  Tokens committed so far become the resume
+        record's prior output; the request carries prompt+generated as
+        its new prompt, so the adopting replica's greedy recompute
+        resumes the stream exactly (the preemption contract, applied
+        across replicas).  Slots that already hit their budget complete
+        instead (second return).  HOST state only: the backend may be
+        dead, so nothing here touches the device — pages are returned
+        to the (doomed) host allocator purely to keep its invariants
+        checkable."""
+        records: List[Tuple[Request, _Resume]] = []
+        completions: List[Completion] = []
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            res = self._resume.pop(slot.uid, None)
+            prior = res.prior if res is not None else []
+            orig = res.orig_prompt_len if res is not None else slot.prompt_len
+            self.alloc.free(slot.pages)
+            self.slots[i] = None
+            if slot.done:
+                toks = prior + slot.generated[:slot.max_new]
+                completions.append(Completion(
+                    slot.uid, orig, np.asarray(toks, np.int32)))
+                self.stats["finished"] += 1
+                continue
+            remaining = slot.max_new - len(slot.generated)
+            req = Request(
+                slot.uid,
+                np.concatenate([slot.prompt,
+                                np.asarray(slot.generated, np.int32)]),
+                remaining, deadline_s=slot.deadline_s,
+                retries=slot.retries_left, arrival_t=slot.arrival_t)
+            records.append((req, _Resume(orig, prior + slot.generated)))
+        return records, completions
 
     # -- page pressure ----------------------------------------------------
 
@@ -352,6 +445,10 @@ class ContinuousBatchingEngine:
         the queue head."""
         slot = self.slots[idx]
         assert slot is not None and not slot.done
+        # device call FIRST: a dying backend raises before any host
+        # state mutates, so the failover export sees a consistent slot
+        # (no half-freed pages, no doubled resume splice)
+        self.backend.release_slot(idx)
         res = self._resume.get(slot.uid)
         prior = (res.prior if res else []) + slot.generated
         orig_plen = res.orig_prompt_len if res else slot.prompt_len
@@ -360,10 +457,70 @@ class ContinuousBatchingEngine:
         new_prompt = np.concatenate(
             [slot.prompt, np.asarray(slot.generated, np.int32)])
         self.alloc.free(slot.pages)
-        self.backend.release_slot(idx)
         self.slots[idx] = None
-        self.queue.appendleft(Request(slot.uid, new_prompt, remaining))
+        self.queue.appendleft(Request(
+            slot.uid, new_prompt, remaining, deadline_s=slot.deadline_s,
+            retries=slot.retries_left, arrival_t=slot.arrival_t))
         self.stats["preemptions"] += 1
+
+    def _fail_slot(self, idx: int, completions: List[Completion]) -> None:
+        """NaN guard: the decode step flagged this slot's logits as
+        non-finite, so nothing it sampled may commit.  With retry
+        budget left the request requeues recompute-style (prompt +
+        committed-so-far, prior output spliced on completion) — a
+        transient corruption replays cleanly because only tokens from
+        FINITE steps were ever committed.  Budget exhausted, it
+        completes as ``status="failed"`` with the tokens it honestly
+        produced: typed failure, never silent garbage."""
+        slot = self.slots[idx]
+        assert slot is not None
+        self.backend.release_slot(idx)    # device first (see _preempt)
+        res = self._resume.pop(slot.uid, None)
+        prior = (res.prior if res is not None else []) + slot.generated
+        orig = res.orig_prompt_len if res is not None else slot.prompt_len
+        self.alloc.free(slot.pages)
+        self.slots[idx] = None
+        self.stats["nan_failures"] += 1
+        if slot.retries_left > 0:
+            self._resume[slot.uid] = _Resume(orig, prior)
+            self.queue.appendleft(Request(
+                slot.uid,
+                np.concatenate([slot.prompt,
+                                np.asarray(slot.generated, np.int32)]),
+                slot.max_new - len(slot.generated),
+                deadline_s=slot.deadline_s, retries=slot.retries_left - 1,
+                arrival_t=slot.arrival_t))
+            self.stats["retries"] += 1
+        else:
+            completions.append(Completion(
+                slot.uid, orig, np.asarray(prior, np.int32),
+                status="failed"))
+            self.stats["failed"] += 1
+
+    def _shed_expired(self, completions: List[Completion]) -> None:
+        """Deadline shedding: drop QUEUED requests whose deadline has
+        passed (admitted slots always run — aborting mid-decode wastes
+        the KV already paid for).  Shed completions carry any prior
+        preempted output and ``status="shed"``; the uid still resolves,
+        so open-loop drivers count the drop instead of hanging on it."""
+        if not any(r.deadline_s is not None for r in self.queue):
+            return
+        now = self.clock()
+        kept: Deque[Request] = deque()
+        for req in self.queue:
+            expired = (req.deadline_s is not None
+                       and req.arrival_t is not None
+                       and now - req.arrival_t > req.deadline_s)
+            if not expired:
+                kept.append(req)
+                continue
+            res = self._resume.pop(req.uid, None)
+            prior = res.prior if res is not None else []
+            orig = res.orig_prompt_len if res is not None else len(req.prompt)
+            completions.append(Completion(
+                req.uid, orig, np.asarray(prior, np.int32), status="shed"))
+            self.stats["shed"] += 1
+        self.queue = kept
 
     # -- one iteration ----------------------------------------------------
 
@@ -493,44 +650,61 @@ class ContinuousBatchingEngine:
             self.queue.popleft()
             fresh = self.alloc.alloc(fresh_needed)
             pages = full_pages + fresh
-            if partial is not None:
-                src, _t = partial
-                self.backend.copy_page(src, fresh[0])
-                self.alloc.free([src])    # drop the temporary CoW pin
-                self.stats["cow_copies"] += 1
+            cow_src = partial[0] if partial is not None else None
+            try:
+                if partial is not None:
+                    self.backend.copy_page(cow_src, fresh[0])
+                    self.alloc.free([cow_src])  # drop the temp CoW pin
+                    cow_src = None
+                    self.stats["cow_copies"] += 1
 
-            row = np.full((row_len,), pc.NULL_PAGE, np.int32)
-            row[:len(pages)] = pages
-            suffix_len = plen - matched
-            # first prefill chunk this iteration: the whole suffix when
-            # unbudgeted (or it fits), else the widest bucket the
-            # remaining budget buys — the rest carries across iterations
-            chunk = (suffix_len if budget is None
-                     else min(suffix_len, self._chunk_quota(budget)))
-            if chunk == suffix_len and matched == 0:
-                spad = _bucket(plen, page, self.cfg.max_seq)
-                assert spad // page >= n_prompt_pages, \
-                    "bucket narrower than the prompt's pages"
-                padded = np.zeros((1, spad), np.int32)
-                padded[0, :plen] = req.prompt
-                tok0 = self.backend.admit_full(padded, i, plen, row)
-            else:
-                spad = _bucket(chunk, page, self.cfg.max_seq)
-                padded = np.zeros((1, spad), np.int32)
-                padded[0, :chunk] = req.prompt[matched:matched + chunk]
-                npp = _pow2_pages(pc.pages_needed(matched, page), row_len)
-                tok0 = (self.backend.admit_prefix(
-                            padded, i, matched, chunk, row,
-                            n_prefix_pages=npp)
-                        if chunk == suffix_len else
-                        self.backend.prefill_chunk(
-                            padded, i, matched, chunk, row,
-                            n_prefix_pages=npp))
+                row = np.full((row_len,), pc.NULL_PAGE, np.int32)
+                row[:len(pages)] = pages
+                suffix_len = plen - matched
+                # first prefill chunk this iteration: the whole suffix
+                # when unbudgeted (or it fits), else the widest bucket
+                # the remaining budget buys — the rest carries across
+                # iterations
+                chunk = (suffix_len if budget is None
+                         else min(suffix_len, self._chunk_quota(budget)))
+                if chunk == suffix_len and matched == 0:
+                    spad = _bucket(plen, page, self.cfg.max_seq)
+                    assert spad // page >= n_prompt_pages, \
+                        "bucket narrower than the prompt's pages"
+                    padded = np.zeros((1, spad), np.int32)
+                    padded[0, :plen] = req.prompt
+                    tok0 = self.backend.admit_full(padded, i, plen, row)
+                else:
+                    spad = _bucket(chunk, page, self.cfg.max_seq)
+                    padded = np.zeros((1, spad), np.int32)
+                    padded[0, :chunk] = req.prompt[matched:matched + chunk]
+                    npp = _pow2_pages(pc.pages_needed(matched, page),
+                                      row_len)
+                    tok0 = (self.backend.admit_prefix(
+                                padded, i, matched, chunk, row,
+                                n_prefix_pages=npp)
+                            if chunk == suffix_len else
+                            self.backend.prefill_chunk(
+                                padded, i, matched, chunk, row,
+                                n_prefix_pages=npp))
+            except Exception:
+                # zero-lost invariant: a backend dying MID-ADMISSION
+                # must not strand the popped request — restore it to
+                # the queue head and return every page ref this
+                # admission took, then surface the fault to the
+                # router's health check
+                if cow_src is not None:
+                    self.alloc.free([cow_src])
+                self.alloc.free(pages)
+                self.queue.appendleft(req)
+                raise
             if budget is not None:
                 budget -= spad
             slot = _Slot(req.uid, req.prompt, plen, req.max_new_tokens,
                          pages, -1, self._admit_seq, [], None,
-                         prefilled=matched + chunk)
+                         prefilled=matched + chunk,
+                         deadline_s=req.deadline_s, retries_left=req.retries,
+                         arrival_t=req.arrival_t)
             self.slots[i] = slot
             self._admit_seq += 1
             self.stats["admitted"] += 1
@@ -588,8 +762,8 @@ class ContinuousBatchingEngine:
         for i, slot in enumerate(self.slots):
             if slot is None or not slot.done:
                 continue
+            self.backend.release_slot(i)  # device first (see _preempt)
             self.alloc.free(slot.pages)
-            self.backend.release_slot(i)
             res = self._resume.pop(slot.uid, None)
             prior = res.prior if res is not None else []
             plen0 = res.orig_prompt_len if res is not None else slot.prompt_len
@@ -611,6 +785,7 @@ class ContinuousBatchingEngine:
         width (a verify step scatters up to ``spec_k`` rows).
         """
         completions: List[Completion] = []
+        self._shed_expired(completions)   # deadline-expired queued work
         self._grow()                      # may preempt; slots can change
         self._admit()
         self._finish(completions)         # max_new == 1 finishes at prefill
@@ -645,10 +820,15 @@ class ContinuousBatchingEngine:
             active[i] = 1
         if not active.any():
             return completions
-        out, n_emit = (self.backend.decode(tokens, active) if K == 1
-                       else self.backend.decode(tokens, active, lens))
+        out, n_emit, okf = (self.backend.decode(tokens, active) if K == 1
+                            else self.backend.decode(tokens, active, lens))
         for i, slot in enumerate(self.slots):
             if slot is None or not active[i]:
+                continue
+            if not int(okf[i]):
+                # NaN guard: this slot's logits held NaN/inf — nothing
+                # it sampled this step may commit (retry or fail typed)
+                self._fail_slot(i, completions)
                 continue
             ne = int(n_emit[i])
             emitted = [int(t) for t in out[i, :ne]]

@@ -544,3 +544,115 @@ def test_mixed_iteration_cost_chunk_cap():
     with pytest.raises(ValueError):
         mixed_iteration_cost(spec, hw, prec, plan, prefill_tokens=64,
                              chunk_tokens=0, **kw)
+
+
+def test_failover_recovery_cost_regimes():
+    """EdgeProfiler's traffic methodology (bytes over a link vs FLOPs
+    over a roofline) applied to failover: on a 1 GbE edge board a real
+    8B model's context migrates orders of magnitude cheaper than it
+    re-prefills, while a tiny model on an ICI-linked accelerator flips
+    to the re-prefill regime — and narrowing the cache dtype shrinks
+    the migrate term monotonically (quantization changes WHICH regime
+    is cheap, not just how cheap)."""
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import failover_recovery_cost
+    from repro.serve.paged_cache import plan_for_layout
+    layout = lm.PagedLayout(num_pages=257, page_size=16, pages_per_slot=32)
+    full, toy = ASSIGNED["granite-3-8b"], ASSIGNED["granite-3-8b"].scaled_down()
+    kw = dict(context_tokens=512.0)
+
+    edge = failover_recovery_cost(full, hardware.get("rpi5"),
+                                  prec_mod.get("int4"),
+                                  plan_for_layout(full, layout, "int4"), **kw)
+    assert edge["cheaper"] == "migrate"
+    assert edge["migrate_s"] * 10 < edge["reprefill_s"]
+    assert edge["recovery_s"] == edge["migrate_s"]
+
+    ici = failover_recovery_cost(toy, hardware.get("tpu_v5e"),
+                                 prec_mod.get("fp32"),
+                                 plan_for_layout(toy, layout, "fp32"), **kw)
+    assert ici["cheaper"] == "reprefill"
+    assert ici["recovery_s"] == ici["reprefill_s"]
+
+    # dtype monotonicity on one board: int4 pages are ~1/8 the bytes
+    hw = hardware.get("rpi5")
+    m = {d: failover_recovery_cost(full, hw, prec_mod.get(d),
+                                   plan_for_layout(full, layout, d),
+                                   **kw)["migrate_s"]
+         for d in ("fp32", "int8", "int4")}
+    assert m["int4"] < m["int8"] < m["fp32"]
+    # bytes scale linearly in context; zero context migrates for free
+    zero = failover_recovery_cost(full, hw, prec_mod.get("fp32"),
+                                  plan_for_layout(full, layout, "fp32"),
+                                  context_tokens=0.0)
+    assert zero["migrate_bytes"] == 0.0 and zero["migrate_s"] == 0.0
+    with pytest.raises(ValueError):
+        failover_recovery_cost(full, hw, prec_mod.get("fp32"),
+                               plan_for_layout(full, layout, "fp32"),
+                               context_tokens=-1.0)
+
+
+def test_serve_availability_capacity_and_recovery():
+    """Replicas are independent engines, so ``failed`` of ``dp`` dead
+    leaves exactly the survivors' share of capacity, the survivors see
+    ``dp/(dp-failed)`` of their load, and recovery charges one
+    ``failover_recovery_cost`` per live slot the dead replicas held."""
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import serve_availability
+    spec = ASSIGNED["granite-3-8b"].scaled_down()
+    plan = analytical.PagedCachePlan(page_size=16, num_pages=129,
+                                     page_bytes=4096.0,
+                                     bytes_per_token=256.0)
+    hw, prec = hardware.get("rpi5"), prec_mod.get("fp32")
+    kw = dict(slots=8, avg_prompt=128.0, avg_new=32.0)
+    av = serve_availability(spec, hw, prec, plan, dp=4, failed=1, **kw)
+    assert av["survivors"] == 3.0
+    assert av["capacity_fraction"] == pytest.approx(0.75)
+    assert av["load_multiplier"] == pytest.approx(4 / 3)
+    assert av["degraded_tokens_per_s"] == pytest.approx(
+        0.75 * av["aggregate_tokens_per_s"])
+    # mean failover context: full prompt + half the output
+    assert av["failover_context_tokens"] == pytest.approx(128 + 16)
+    assert av["recovery_s_total"] == pytest.approx(
+        av["failover_requests"] * av["recovery_s_per_request"])
+    assert av["recovery_s_per_request"] == av["recovery_recovery_s"] > 0
+    assert av["recovery_cheaper"] in ("migrate", "reprefill")
+
+    healthy = serve_availability(spec, hw, prec, plan, dp=4, failed=0, **kw)
+    assert healthy["capacity_fraction"] == pytest.approx(1.0)
+    assert healthy["load_multiplier"] == 1.0
+    assert healthy["failover_requests"] == 0.0
+    assert healthy["recovery_s_total"] == 0.0
+
+    with pytest.raises(ValueError):
+        serve_availability(spec, hw, prec, plan, dp=4, failed=4, **kw)
+    with pytest.raises(ValueError):
+        serve_availability(spec, hw, prec, plan, dp=4, failed=-1, **kw)
+    with pytest.raises(ValueError):
+        serve_availability(spec, hw, prec, plan, dp=0, failed=0, **kw)
+
+
+def test_serve_availability_goodput_clips_to_degraded_capacity():
+    """Offered load below degraded capacity is fully served; above it,
+    goodput clips to what the survivors can actually push — matching
+    how the open-loop chaos benchmark counts goodput."""
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import serve_availability
+    spec = ASSIGNED["granite-3-8b"].scaled_down()
+    plan = analytical.PagedCachePlan(page_size=16, num_pages=129,
+                                     page_bytes=4096.0,
+                                     bytes_per_token=256.0)
+    hw, prec = hardware.get("rpi5"), prec_mod.get("fp32")
+    kw = dict(slots=8, avg_prompt=128.0, avg_new=32.0, dp=2, failed=1)
+    cap = serve_availability(spec, hw, prec, plan, **kw)
+    light = serve_availability(spec, hw, prec, plan,
+                               offered_tokens_per_s=cap[
+                                   "degraded_tokens_per_s"] / 2, **kw)
+    assert light["goodput_fraction"] == pytest.approx(1.0)
+    assert light["goodput_tokens_per_s"] == light["offered_tokens_per_s"]
+    heavy = serve_availability(spec, hw, prec, plan,
+                               offered_tokens_per_s=cap[
+                                   "degraded_tokens_per_s"] * 2, **kw)
+    assert heavy["goodput_tokens_per_s"] == pytest.approx(
+        cap["degraded_tokens_per_s"])
+    assert heavy["goodput_fraction"] == pytest.approx(0.5)

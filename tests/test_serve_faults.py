@@ -1,0 +1,431 @@
+"""Fault-tolerance tests: chaos injection, health-checked failover,
+deadlines, NaN guard, SLO backpressure.
+
+The contract under test is ZERO TYPED LOSS: every submitted uid gets
+exactly one ``Completion`` — ``ok``, ``shed`` or ``failed`` — whatever
+happens to its replica, and an ``ok`` stream that survived a crash is
+TOKEN-IDENTICAL to the no-fault dp=1 run (single-device greedy
+recompute resumes exactly; the ``--chaos`` benchmark gate checks the
+same property in-band across devices).  Faults come exclusively from
+``serve.faults.ChaosBackend`` on a seeded deterministic schedule, so
+every failure here reproduces bit-for-bit.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.serve.faults import ChaosBackend, ChaosSchedule, ReplicaFault
+from repro.serve.router import PrefixRouter, ServeSLO
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYP = False
+
+
+def _engines(n, cfg=None):
+    import jax
+    from repro.configs import ASSIGNED
+    from repro.models import lm
+    from repro.serve.scheduler import ContinuousBatchingEngine, SchedulerConfig
+    spec = ASSIGNED["granite-3-8b"].scaled_down(layers=2, width=64,
+                                                vocab=128)
+    params = lm.init(jax.random.PRNGKey(0), spec)
+    cfg = cfg or SchedulerConfig(max_slots=2, page_size=8, max_seq=48,
+                                 num_pages=24)
+    return spec, params, cfg, \
+        [ContinuousBatchingEngine(params, spec, cfg) for _ in range(n)]
+
+
+def _reqs(n, seed=0, vocab=128, plen=(10, 20), new=(5, 8), **kw):
+    from repro.serve.scheduler import Request
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, vocab, size=int(
+        rng.integers(plen[0], plen[1] + 1))).astype(np.int32),
+        int(rng.integers(new[0], new[1] + 1)), **kw) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# ChaosSchedule / ChaosBackend mechanics
+# ---------------------------------------------------------------------------
+
+def test_chaos_schedule_random_is_seed_deterministic():
+    kw = dict(steps=64, p_crash=0.05, p_latency=0.2, p_nan=0.1)
+    a, b = ChaosSchedule.random(7, **kw), ChaosSchedule.random(7, **kw)
+    assert (a.crash_at, a.latency_at, a.nan_at) == \
+        (b.crash_at, b.latency_at, b.nan_at)
+    c = ChaosSchedule.random(8, **kw)
+    assert (a.crash_at, a.latency_at, a.nan_at) != \
+        (c.crash_at, c.latency_at, c.nan_at)
+    # probability edges: certain fault fires every step, zero never
+    allf = ChaosSchedule.random(0, steps=16, p_crash=1.0, p_nan=1.0)
+    assert allf.crash_at == frozenset(range(16))
+    assert set(allf.nan_at) == set(range(16))
+    assert ChaosSchedule.random(0, steps=16).crash_at == frozenset()
+
+
+def test_crash_is_permanent_across_all_device_calls():
+    """After the scheduled crash the backend is DEAD: the crashing step
+    raises and so does every later device interaction — a replica that
+    lost its accelerator does not keep admitting or releasing."""
+    spec, params, cfg, (eng,) = _engines(1)
+    chaos = ChaosBackend(eng.backend, ChaosSchedule(crash_at=frozenset({0})))
+    eng.backend = chaos
+    eng.submit(_reqs(1, seed=1)[0])
+    with pytest.raises(ReplicaFault):
+        eng.step()                    # admits fine, first decode crashes
+    assert chaos.dead and chaos.injected["crashes"] == 1
+    B = cfg.max_slots
+    for call in (lambda: chaos.decode(np.zeros((B, 1), np.int32),
+                                      np.ones((B,), np.int32)),
+                 lambda: chaos.admit_full(np.zeros((1, 8), np.int32), 0, 8,
+                                          np.zeros((6,), np.int32)),
+                 lambda: chaos.copy_page(1, 2),
+                 lambda: chaos.release_slot(0),
+                 lambda: chaos.write_block_entries([(0, 0, 1)])):
+        with pytest.raises(ReplicaFault):
+            call()
+    assert chaos.injected["crashes"] == 1    # one crash, not one per call
+
+
+def test_latency_spike_delays_without_corrupting():
+    """A latency fault sleeps but the decode result is byte-identical
+    to the unfaulted engine's — the throttle stand-in must not change
+    outputs (that is what the heartbeat check is for)."""
+    spec, params, cfg, (eng, ref) = _engines(2)
+    eng.backend = ChaosBackend(eng.backend,
+                               ChaosSchedule(latency_at={1: 0.05}))
+    req, ref_req = (r[0] for r in (_reqs(1, seed=3), _reqs(1, seed=3)))
+    t0 = time.perf_counter()
+    done = eng.run([req])
+    assert time.perf_counter() - t0 >= 0.05
+    assert eng.backend.injected["latency_spikes"] == 1
+    ref_done = ref.run([ref_req])
+    np.testing.assert_array_equal(done[0].tokens, ref_done[0].tokens)
+    assert done[0].status == "ok"
+
+
+# ---------------------------------------------------------------------------
+# NaN-logit guard: typed failure / retry-recompute
+# ---------------------------------------------------------------------------
+
+def test_nan_guard_fails_typed_without_committing_garbage():
+    """A corrupted decode step with no retry budget completes the
+    request as ``failed`` carrying ONLY tokens from finite steps —
+    never the flagged step's samples."""
+    spec, params, cfg, (eng, ref) = _engines(2)
+    eng.backend = ChaosBackend(eng.backend, ChaosSchedule(nan_at={1: None}))
+    done = eng.run(_reqs(1, seed=5))          # retries defaults to 0
+    ref_done = ref.run(_reqs(1, seed=5))
+    assert [c.status for c in done] == ["failed"]
+    assert eng.stats["nan_failures"] == 1 and eng.stats["failed"] == 1
+    assert eng.stats["retries"] == 0
+    # committed prefix: the prefill token + decode step 0, nothing from
+    # the flagged step 1 — and it matches the clean run's prefix
+    assert len(done[0].tokens) == 2
+    np.testing.assert_array_equal(done[0].tokens, ref_done[0].tokens[:2])
+
+
+def test_nan_guard_retry_recomputes_to_identical_tokens():
+    """With retry budget the corrupted request requeues recompute-style
+    and its final stream is token-identical to the clean run: only
+    finite steps ever committed, so the replay extends an exact
+    prefix."""
+    spec, params, cfg, (eng, ref) = _engines(2)
+    eng.backend = ChaosBackend(eng.backend, ChaosSchedule(nan_at={1: None}))
+    done = eng.run(_reqs(1, seed=5, retries=1))
+    ref_done = ref.run(_reqs(1, seed=5))
+    assert [c.status for c in done] == ["ok"]
+    assert eng.stats["nan_failures"] == 1 and eng.stats["retries"] == 1
+    assert eng.stats["failed"] == 0
+    np.testing.assert_array_equal(done[0].tokens, ref_done[0].tokens)
+    eng.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Deadlines: queued work sheds, admitted work runs
+# ---------------------------------------------------------------------------
+
+def test_deadline_sheds_queued_request_typed():
+    spec, params, cfg, (eng,) = _engines(1)
+    now = {"t": 0.0}
+    eng.clock = lambda: now["t"]             # injectable wall clock
+    reqs = _reqs(3, seed=7, deadline_s=1.0)
+    for r in reqs:
+        eng.submit(r)                        # arrival stamped at t=0
+    now["t"] = 2.0                           # everyone is now late
+    done = []
+    while eng.queue or eng.num_active:
+        done.extend(eng.step())
+    assert sorted(c.uid for c in done) == [0, 1, 2]
+    assert all(c.status == "shed" and len(c.tokens) == 0 for c in done)
+    assert eng.stats["shed"] == 3 and eng.stats["admitted"] == 0
+    eng.alloc.check()
+
+
+def test_deadline_never_sheds_admitted_slots():
+    """Admitted slots run to completion even past their deadline —
+    aborting mid-decode wastes the KV already paid for."""
+    spec, params, cfg, (eng, ref) = _engines(2)
+    now = {"t": 0.0}
+    eng.clock = lambda: now["t"]
+    reqs = _reqs(2, seed=9, deadline_s=1.0)  # both admit (max_slots=2)
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                               # admits both at t=0
+    assert eng.num_active == 2
+    now["t"] = 5.0                           # deadline long gone
+    done = []
+    while eng.queue or eng.num_active:
+        done.extend(eng.step())
+    assert [c.status for c in sorted(done, key=lambda c: c.uid)] == \
+        ["ok", "ok"]
+    assert eng.stats["shed"] == 0
+    ref_done = ref.run(_reqs(2, seed=9))
+    for a, b in zip(sorted(done, key=lambda c: c.uid), ref_done):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ---------------------------------------------------------------------------
+# Router failover: crash mid-decode, zero lost, identical tokens
+# ---------------------------------------------------------------------------
+
+def _ref_tokens(reqs):
+    """dp=1 no-fault reference run over fresh copies of the workload."""
+    from repro.serve.scheduler import Request
+    spec, params, cfg, (ref,) = _engines(1)
+    return ref.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                    for r in reqs])
+
+
+def _crash_fleet(crash_step, n=10, seed=11):
+    """dp=2 router whose busiest replica's backend crashes permanently
+    at its ``crash_step``-th decode call; returns (router, victim id,
+    chaos wrapper, workload)."""
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    reqs = _reqs(n, seed=seed)
+    counts = {rid: 0 for rid in router.replica_ids}
+    for r in reqs:
+        counts[router.route(r.prompt)] += 1
+    victim = max(counts, key=counts.get)
+    assert counts[victim] >= 2, "workload must load the victim"
+    chaos = ChaosBackend(router.engines[victim].backend,
+                         ChaosSchedule(crash_at=frozenset({crash_step})))
+    router.engines[victim].backend = chaos
+    return router, victim, chaos, reqs
+
+
+def _check_crash_at(crash_step):
+    """The failover contract at one crash point: every uid completes
+    ``ok`` exactly once, token-identical to the dp=1 no-fault run, and
+    the survivor's allocator balances after the drain."""
+    router, victim, chaos, reqs = _crash_fleet(crash_step)
+    for r in reqs:
+        router.submit(r)
+    done = []
+    for _ in range(500):
+        if not any(e is not None and (e.num_active or e.queue)
+                   for e in router.engines.values()):
+            break
+        done.extend(router.step())
+    else:                                    # pragma: no cover
+        pytest.fail("fleet failed to drain (injected fault hung it)")
+    done = sorted(done, key=lambda c: c.uid)
+    assert [c.uid for c in done] == [r.uid for r in reqs], "lost requests"
+    assert all(c.status == "ok" for c in done)
+    if chaos.dead:                           # the fault actually fired
+        assert router.stats["failed_replicas"] == 1
+        assert victim not in router.engines
+        assert router.stats["re_routed"] >= 1
+    for c, ref in zip(done, _ref_tokens(reqs)):
+        np.testing.assert_array_equal(c.tokens, ref.tokens)
+    for eng in router.engines.values():
+        eng.alloc.check()                    # survivor refcounts balance
+    return done
+
+
+def test_failover_zero_lost_identical_tokens():
+    done = _check_crash_at(3)
+    assert len(done) == 10
+
+
+@pytest.mark.parametrize("crash_step", [0, 1, 2, 4, 8])
+def test_failover_crash_at_iteration(crash_step):
+    """Crash-at-arbitrary-iteration sweep (always-on fallback for the
+    hypothesis fuzz below): the failover contract holds wherever the
+    crash lands, including the very first decode call."""
+    _check_crash_at(crash_step)
+
+
+if HAVE_HYP:
+    @settings(max_examples=6, deadline=None)
+    @given(crash_step=st.integers(min_value=0, max_value=12))
+    def test_failover_crash_at_iteration_fuzz(crash_step):
+        """Hypothesis fuzz of the same property over the whole window
+        a 10-request workload can crash in (steps past the drain are
+        the fault-never-fires no-op case)."""
+        _check_crash_at(crash_step)
+
+
+def test_mid_admission_crash_restores_queue_head():
+    """A backend dying during ADMISSION (not decode) must not strand
+    the popped request: `_admit` restores it to the queue head and the
+    router's health check migrates it like any queued work."""
+    spec, params, cfg, (eng,) = _engines(1)
+    chaos = ChaosBackend(eng.backend, ChaosSchedule(crash_at=frozenset({0})))
+    eng.backend = chaos
+    reqs = _reqs(3, seed=13)
+    for r in reqs:
+        eng.submit(r)
+    with pytest.raises(ReplicaFault):
+        eng.step()                           # crashes in decode, dead
+    with pytest.raises(ReplicaFault):
+        eng.step()                           # crashes in _admit now
+    assert [r.uid for r in eng.queue] == [2]     # head restored, FCFS kept
+    recs, done = eng.export_active()
+    assert not done and {r.uid for r, _ in recs} == {0, 1}
+    eng.alloc.check()                        # admission returned its pages
+
+
+# ---------------------------------------------------------------------------
+# Health checking: heartbeat eviction, rejoin
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_evicts_stalled_replica():
+    """A replica holding work whose last successful step is older than
+    ``heartbeat_s`` is evicted and its work migrates — the wedged-not-
+    crashing failure mode (thermal stall, deadlocked device)."""
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size,
+                          heartbeat_s=0.5)
+    reqs = _reqs(8, seed=15)
+    for r in reqs:
+        router.submit(r)
+    victim = max(router.replica_ids,
+                 key=lambda rid: len(router.engines[rid].queue))
+    router._last_ok[victim] = time.monotonic() - 10.0   # stalled long ago
+    done = []
+    while any(e.num_active or e.queue for e in router.engines.values()):
+        done.extend(router.step())
+    assert router.stats["failed_replicas"] == 1
+    assert victim not in router.engines
+    assert sorted(c.uid for c in done) == [r.uid for r in reqs]
+    assert all(c.status == "ok" for c in done)
+
+
+def test_add_rejoins_failed_replica():
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    router.fail("r0")
+    assert router.replica_ids == ["r1"]
+    spec2, params2, cfg2, (fresh,) = _engines(1)
+    router.add("r0", fresh)
+    assert sorted(router.replica_ids) == ["r0", "r1"]
+    assert router._streak["r0"] == 0         # health state starts fresh
+    with pytest.raises(ValueError):
+        router.add("r1", fresh)              # already live
+    # traffic flows to the rejoined replica again (rendezvous shifts
+    # back exactly the keys r0 wins)
+    rng = np.random.default_rng(2)
+    picks = {router.route(rng.integers(0, 128, size=16).astype(np.int32))
+             for _ in range(16)}
+    assert "r0" in picks
+
+
+def test_fail_is_idempotent_and_returns_budget_hit_completions():
+    """``fail()`` on an unknown/already-failed id is a quiet no-op, and
+    a slot that had already hit its token budget when the replica died
+    completes instead of migrating."""
+    spec, params, cfg, (eng, other) = _engines(2)
+    router = PrefixRouter({"r0": eng, "r1": other},
+                          page_size=cfg.page_size)
+    assert router.fail("nope") == []
+    assert router.stats["failed_replicas"] == 0
+    (req,) = _reqs(1, seed=17, new=(5, 5))
+    eng.submit(req)
+    eng.step()
+    slot = next(s for s in eng.slots if s is not None)
+    # simulate the crash racing _finish: the slot hit its budget but
+    # was never reaped — export_active must complete it, not migrate it
+    slot.max_new = len(slot.generated)
+    out = router.fail("r0")
+    assert [c.uid for c in out] == [0] and out[0].status == "ok"
+    assert router.stats["re_routed"] == 0    # nothing migrated
+    assert router.fail("r0") == []           # idempotent
+    assert router.stats["failed_replicas"] == 1
+
+
+# ---------------------------------------------------------------------------
+# SLO backpressure: shed typed, spill off a violating target
+# ---------------------------------------------------------------------------
+
+def test_slo_fleetwide_violation_sheds_typed():
+    """When every live replica's predicted TTFT violates the SLO the
+    request sheds with a typed completion from the next step() — the
+    fleet refuses work it cannot serve in time."""
+    spec, params, cfg, engines = _engines(2)
+    slo = ServeSLO(ttft_slo_s=0.001, predicted_itl_s=1.0,
+                   predicted_ttft_s=1.0, tokens_per_iteration=1.0)
+    router = PrefixRouter(engines, page_size=cfg.page_size, slo=slo)
+    reqs = _reqs(3, seed=19)
+    assert [router.submit(r) for r in reqs] == [None, None, None]
+    assert router.stats["slo_shed"] == 3
+    done = router.step()
+    assert sorted(c.uid for c in done) == [0, 1, 2]
+    assert all(c.status == "shed" and len(c.tokens) == 0 for c in done)
+    assert all(e.stats["admitted"] == 0 for e in engines)
+
+
+def test_slo_capacity_violation_sheds_regardless_of_load():
+    """``predicted_itl_worst_s`` over the ITL budget is the capacity
+    check: no placement can serve in SLO, so even an idle fleet
+    sheds."""
+    slo = ServeSLO(ttft_slo_s=1e9, itl_slo_s=0.01,
+                   predicted_itl_worst_s=0.02)
+    assert slo.violates(0.0)
+    spec, params, cfg, engines = _engines(1)
+    router = PrefixRouter(engines, page_size=cfg.page_size, slo=slo)
+    assert router.submit(_reqs(1, seed=21)[0]) is None
+    assert router.stats["slo_shed"] == 1
+
+
+def test_slo_spills_off_violating_target_only():
+    """Hashed-target-only violation spills to the best survivor instead
+    of shedding: predicted TTFT is load-dependent, so backlog on the
+    hashed replica pushes it over while an idle one still clears."""
+    spec, params, cfg, engines = _engines(2)
+    # predict_ttft(C) == C: violates exactly when pending cost > 5
+    slo = ServeSLO(ttft_slo_s=5.0, predicted_itl_s=1.0,
+                   predicted_ttft_s=0.0, tokens_per_iteration=1.0)
+    router = PrefixRouter(engines, page_size=cfg.page_size, slo=slo)
+    (req,) = _reqs(1, seed=23)
+    hashed = router.route(req.prompt)
+    other = next(r for r in router.replica_ids if r != hashed)
+    router.engines[hashed].submit(_reqs(1, seed=24)[0])   # cost > 5 backlog
+    assert router._load(hashed) > 5.0
+    target = router.submit(req)
+    assert target == other
+    assert router.stats["slo_spilled"] == 1
+    assert router.stats["slo_shed"] == 0
+
+
+def test_failover_migration_bypasses_slo_shedding():
+    """Re-routed (drain/failover) work always lands even under a
+    fleet-wide SLO violation — shedding half-done migrated requests
+    would break the zero-lost contract."""
+    spec, params, cfg, engines = _engines(2)
+    slo = ServeSLO(ttft_slo_s=0.001, predicted_itl_s=1.0,
+                   predicted_ttft_s=1.0, tokens_per_iteration=1.0)
+    router = PrefixRouter(engines, page_size=cfg.page_size, slo=slo)
+    (req,) = _reqs(1, seed=25)
+    victim = router.route(req.prompt)
+    router.engines[victim].submit(req)       # bypass the front door
+    out = router.fail(victim)
+    assert out == []                         # queued work migrated, not done
+    survivor = router.replica_ids[0]
+    assert [q.uid for q in router.engines[survivor].queue] == [0]
+    assert router.stats["slo_shed"] == 0
+    assert router.stats["re_routed"] == 1

@@ -219,3 +219,139 @@ def test_spill_uses_pending_cost_not_request_count():
     router = PrefixRouter(engines, page_size=cfg.page_size)
     assert router._load("r0") > router._load("r1")
     assert router._load("r0") == engines[0].pending_cost
+
+
+def test_remove_is_idempotent():
+    """Removing an unknown or already-removed replica is a quiet no-op
+    — a crashed replica may be evicted by the health check and again by
+    an operator — and health state is dropped with the engine."""
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    router.remove("not-a-replica")           # never existed: no KeyError
+    assert sorted(router.replica_ids) == ["r0", "r1"]
+    router.remove("r0")
+    assert router.replica_ids == ["r1"]
+    assert "r0" not in router._streak and "r0" not in router._last_ok
+    router.remove("r0")                      # already removed: no-op
+    router.fail("r0")                        # failover path too
+    assert router.stats["failed_replicas"] == 0   # no-op evicted nothing
+    assert router.replica_ids == ["r1"]
+
+
+def test_drain_resubmissions_count_as_re_routed():
+    """``remove()``'s drain must not inflate the front-door counters:
+    ``routed``/``assigned`` stay one-per-request, the re-submissions
+    land under ``re_routed``."""
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    reqs = _reqs(10, seed=8)
+    for r in reqs:
+        router.submit(r)
+    assert router.stats["routed"] == 10
+    assert sum(router.assigned.values()) == 10
+    victim = max(router.replica_ids,
+                 key=lambda rid: len(router.engines[rid].queue))
+    drained = len(router.engines[victim].queue)
+    assert drained >= 1
+    router.remove(victim)
+    assert router.stats["routed"] == 10      # unchanged by the drain
+    assert sum(router.assigned.values()) == 10
+    assert router.stats["re_routed"] == drained
+
+
+def test_rebalance_idle_steals_up_to_free_slots():
+    """An idle replica steals up to its free-slot count per step (one
+    steal per step left it idling at dp-wide batch widths), always from
+    the back of the deepest queue."""
+    spec, params, cfg, engines = _engines(2)   # max_slots=2
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    for r in _reqs(5, seed=10):
+        engines[0].submit(r)                  # donor: 5 deep, r1 idle
+    moved = router.rebalance()
+    assert moved == cfg.max_slots == 2
+    assert router.stats["rebalanced"] == 2
+    # tail steals keep the donor's FCFS head intact
+    assert [q.uid for q in engines[0].queue] == [0, 1, 2]
+    assert sorted(q.uid for q in engines[1].queue) == [3, 4]
+
+
+def test_rebalance_skips_resume_head_donor():
+    """Donors whose queue HEAD is a recompute resume are skipped:
+    head-of-line recompute priority is the preemption contract, and the
+    resume's re-prefill re-hits its own replica's pages."""
+    from repro.serve.scheduler import _Resume
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    reqs = _reqs(4, seed=12)
+    for r in reqs:
+        engines[0].submit(r)
+    engines[0]._resume[reqs[0].uid] = _Resume(5, [1, 2])   # head is a resume
+    assert engines[0].head_is_resume
+    assert router.rebalance() == 0
+    assert len(engines[0].queue) == 4
+    del engines[0]._resume[reqs[0].uid]      # head back to a fresh request
+    assert router.rebalance() == 2
+
+
+def test_rebalance_migrates_stolen_tail_resume_record():
+    """A stolen TAIL request that happens to be a (non-head) recompute
+    carries its resume record to the thief, so its completion still
+    splices prior output."""
+    from repro.serve.scheduler import _Resume
+    spec, params, cfg, engines = _engines(2)
+    router = PrefixRouter(engines, page_size=cfg.page_size)
+    reqs = _reqs(3, seed=14)
+    for r in reqs:
+        engines[0].submit(r)
+    tail_uid = reqs[-1].uid
+    engines[0]._resume[tail_uid] = _Resume(7, [9])
+    assert not engines[0].head_is_resume     # resume sits at the tail
+    assert router.rebalance() >= 1
+    assert tail_uid in engines[1]._resume    # record followed the steal
+    assert engines[1]._resume[tail_uid].prior == [9]
+    assert tail_uid not in engines[0]._resume
+
+
+# ---------------------------------------------------------------------------
+# ServeSLO policy arithmetic (pure, engine-free)
+# ---------------------------------------------------------------------------
+
+def test_serve_slo_predict_and_violate():
+    from repro.serve.router import ServeSLO
+    slo = ServeSLO(ttft_slo_s=2.0, predicted_itl_s=0.1,
+                   predicted_ttft_s=0.5, tokens_per_iteration=10.0)
+    # drain model: C tokens retire at tokens_per_iteration per itl
+    assert slo.predict_ttft(0.0) == pytest.approx(0.5)
+    assert slo.predict_ttft(100.0) == pytest.approx(100 / 10 * 0.1 + 0.5)
+    assert not slo.violates(100.0)           # 1.5s < 2s budget
+    assert slo.violates(200.0)               # 2.5s > 2s budget
+    # capacity check: worst-iteration ITL over budget sheds at ANY load
+    tight = ServeSLO(ttft_slo_s=2.0, itl_slo_s=0.05,
+                     predicted_itl_worst_s=0.08)
+    assert tight.violates(0.0)
+
+
+def test_serve_slo_from_model_distils_prediction():
+    from repro.configs import ASSIGNED
+    from repro.core import analytical, hardware, precision as prec_mod
+    from repro.core.latency import predict_serve_throughput
+    from repro.serve.router import ServeSLO
+    spec = ASSIGNED["granite-3-8b"].scaled_down()
+    plan = analytical.PagedCachePlan(page_size=16, num_pages=129,
+                                     page_bytes=4096.0,
+                                     bytes_per_token=256.0)
+    hw, prec = hardware.get("rpi5"), prec_mod.get("fp32")
+    kw = dict(slots=8, avg_prompt=128.0, avg_new=32.0)
+    pred = predict_serve_throughput(spec, hw, prec, plan, **kw)
+    slo = ServeSLO.from_model(spec, hw, prec, plan, ttft_slo_s=1.0, **kw)
+    assert slo.predicted_itl_s == pred["predicted_itl_s"]
+    assert slo.predicted_itl_worst_s == pred["predicted_itl_worst_s"]
+    assert slo.predicted_ttft_s == pred["predicted_ttft_s"]
+    assert slo.tokens_per_iteration == 8 + 128.0   # slots + mean prompt
+    chunked = ServeSLO.from_model(spec, hw, prec, plan, ttft_slo_s=1.0,
+                                  chunk_tokens=64, **kw)
+    assert chunked.tokens_per_iteration == 8 + 64.0
+    # an over-capacity fleet (worst ITL over budget) sheds everything
+    assert ServeSLO.from_model(
+        spec, hw, prec, plan, ttft_slo_s=1.0,
+        itl_slo_s=pred["predicted_itl_worst_s"] / 2, **kw).violates(0.0)

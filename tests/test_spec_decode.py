@@ -283,7 +283,8 @@ def test_spec_engine_preemption_parity():
 def test_spec_k1_backend_contract():
     """spec_k=1 runs the pre-speculative decode program (the K=1 jit),
     and the backend decode contract returns (out (B, 1), n_emit ==
-    active) — the shape every existing parity test leans on."""
+    active, ok == active for finite logits) — the shape every existing
+    parity test leans on."""
     spec, params = _setup()
     cfg = SchedulerConfig(max_slots=2, page_size=16, max_seq=64,
                           num_pages=12)
@@ -298,6 +299,7 @@ def test_spec_k1_backend_contract():
         if slot is not None:
             tokens[i, 0] = slot.last_token
             active[i] = 1
-    out, n_emit = eng.backend.decode(tokens, active)
+    out, n_emit, ok = eng.backend.decode(tokens, active)
     assert out.shape == (2, 1)
     np.testing.assert_array_equal(n_emit, active)
+    np.testing.assert_array_equal(np.asarray(ok), active)
