@@ -80,6 +80,14 @@ def tier1() -> None:
         ([sys.executable, bench, "--spec-decode", "--smoke",
           "--devices", "2", "--cache-dtype", "int4"],
          {"XLA_FLAGS": "--xla_force_host_platform_device_count=8"}),
+        # host-tier KV swap gate: multi-turn chat with idle gaps —
+        # the session engine (idle slots park KV to the host pool and
+        # swap back in) must beat the recompute-only baseline on p99
+        # turn TTFT AND admitted occupancy at equal device pool bytes
+        # with token-identical transcripts; the JSON artifact stamps
+        # the workload (seed, sessions, turns, idle-gap distribution)
+        ([sys.executable, bench, "--swap", "--smoke",
+          "--json", "BENCH_serve_swap.json"], {}),
         # fault-tolerance gate: dp=2 open-loop stream with a seeded
         # chaos crash killing one replica mid-decode — zero lost
         # requests, outputs within the tolerance band of the no-fault

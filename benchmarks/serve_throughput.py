@@ -81,6 +81,26 @@ chunking changes scheduling, never per-slot decode math.
 ``core.latency.predict_serve_throughput(chunk_tokens=)``'s TTFT/ITL
 decomposition prints next to the measurements.  Full (non-smoke) mode
 sweeps 0.5x/1x/1.5x the target qps for the goodput curve.
+
+``--swap`` is the host-tier KV swap gate: a multi-turn chat workload
+(S interleaved sessions, T turns each, long idle gaps between turns —
+each turn's prompt extends that engine's OWN prior transcript) runs on
+a session-aware engine with a host page pool
+(``SchedulerConfig.host_pool_bytes`` + ``Request.session``: finished
+turns hold their slot idle, park to host DRAM on the idle timer or
+under pressure, and swap back in with a one-token suffix prefill) and
+on a recompute-only baseline (no sessions — every turn re-submits the
+full transcript and re-prefills whatever the prefix store no longer
+holds), at EQUAL device pool bytes.  Gates: per-turn transcripts are
+token-identical across the swap (the resume path replays nothing),
+the swap engine's p99 turn TTFT is LOWER and its admitted occupancy
+(decode tokens per slot-iteration) HIGHER than the baseline's, and
+the swap tier actually cycled (swap-ins > 0).
+``core.latency.swap_vs_recompute`` /
+``predict_serve_throughput(parked_context_tokens=)`` print the
+analytical resume-vs-reprefill crossover next to the measurements;
+the JSON rows stamp the workload (seed, sessions, turns, idle-gap
+distribution) so a regression is reproducible from the artifact.
 """
 from __future__ import annotations
 
@@ -849,6 +869,207 @@ def run_open_loop(smoke: bool = False, qps: float = 8.0, chunk: int = 32,
     return "serve_open_loop", us, rows, gate
 
 
+def _multi_turn_chat(eng, *, sessions, turns, p0, extras, gaps, stagger,
+                     max_new, use_sessions):
+    """Drive S interleaved multi-turn chat sessions to completion.
+
+    Turn scheduling runs on a VIRTUAL iteration clock ``vit`` that
+    advances once per ``eng.step()`` and fast-forwards across windows
+    where the engine holds no runnable work (the engine's own
+    ``stats["iterations"]`` only ticks on iterations that reach decode,
+    so a fully-idle gap would otherwise never elapse).  Turn 0 of
+    session ``s`` submits at ``s * stagger``; turn ``t+1`` submits
+    ``gaps[(s, t+1)]`` virtual iterations after turn ``t`` completes,
+    with a prompt that extends the engine's OWN transcript so far
+    (prior prompt + prior output + a fresh ``extras`` suffix).  The
+    staggering keeps other sessions decoding through most gaps, which
+    is what lets the idle-park timer tick on the session engine.
+
+    Returns (per-session per-turn output token arrays, per-turn TTFT
+    wall seconds, per-turn TTFT in engine iterations, makespan)."""
+    from repro.serve.scheduler import Request
+    ctx = {}                              # session -> transcript so far
+    next_at = {s: s * stagger for s in range(sessions)}
+    turn_of = {s: 0 for s in range(sessions)}
+    live = {}                             # uid -> (session, turn, prompt)
+    sub_wall, sub_vit, first, counts = {}, {}, {}, {}
+    out_tokens = {s: [None] * turns for s in range(sessions)}
+    ttft_wall, ttft_iters = [], []
+    uid = vit = 0
+    t0 = time.perf_counter()
+    while True:
+        for s in range(sessions):
+            if next_at[s] is not None and next_at[s] <= vit:
+                t = turn_of[s]
+                prompt = (p0[s] if t == 0
+                          else np.concatenate([ctx[s], extras[(s, t)]]))
+                eng.submit(Request(uid, prompt.astype(np.int32), max_new,
+                                   session=(s if use_sessions else None)))
+                live[uid] = (s, t, prompt)
+                sub_wall[uid] = time.perf_counter() - t0
+                sub_vit[uid] = vit
+                next_at[s] = None
+                uid += 1
+        if eng.num_active == 0 and not eng.queue:
+            pend = [v for v in next_at.values() if v is not None]
+            if not pend:
+                break
+            vit = max(vit + 1, min(pend))     # fast-forward the idle gap
+            continue
+        done = eng.step()
+        vit += 1
+        now = time.perf_counter() - t0
+        prog = eng.progress()
+        for c in done:
+            prog[c.uid] = len(c.tokens)
+        for u, k in prog.items():
+            if u in live and k > counts.get(u, 0):
+                if u not in first:
+                    first[u] = (now, vit)
+                counts[u] = k
+        for c in done:
+            s, t, prompt = live.pop(c.uid)
+            assert c.status == "ok", f"turn (s={s}, t={t}) status {c.status}"
+            out_tokens[s][t] = np.asarray(c.tokens)
+            ctx[s] = np.concatenate([prompt, np.asarray(c.tokens)])
+            ttft_wall.append(first[c.uid][0] - sub_wall[c.uid])
+            ttft_iters.append(first[c.uid][1] - sub_vit[c.uid])
+            turn_of[s] = t + 1
+            if turn_of[s] < turns:
+                next_at[s] = vit + gaps[(s, turn_of[s])]
+            elif use_sessions:
+                eng.end_session(s)    # done: free the idle slot / blob
+    return out_tokens, ttft_wall, ttft_iters, time.perf_counter() - t0
+
+
+def run_swap(smoke: bool = False, cache_dtype: str = "fp32"):
+    """Host-tier KV swap gate: session engine + host pool vs recompute
+    baseline on a multi-turn chat workload at equal device pool bytes
+    (see module docstring).  Returns (name, us, rows, gate)."""
+    from repro.core import hardware, precision
+    from repro.core.latency import predict_serve_throughput
+    from repro.serve.paged_cache import plan_for_layout
+    from repro.serve.scheduler import (ContinuousBatchingEngine,
+                                       SchedulerConfig)
+    seed = 1
+    # sized so a turn's suffix re-prefill (prior output + extra) spans
+    # ~3 chunk iterations on the baseline vs the resume's single chunk,
+    # and the pool is tight enough that idle sessions actually park
+    if smoke:
+        sessions, turns, slots = 4, 4, 3
+        num_pages, max_seq = 44, 192
+    else:
+        sessions, turns, slots = 5, 4, 4
+        num_pages, max_seq = 56, 192
+    p0_len, extra_len, max_new = 24, 16, 24
+    gap_lo, gap_hi, stagger = 6, 12, 3
+    page, chunk, vocab = 8, 16, 256
+    width, layers = 256, 2         # above the dispatch floor (cf. open loop)
+    spec, params = _build(width=width, layers=layers)
+    # pre-draw ALL workload randomness once: both engines (and every
+    # rep) see the same first prompts, suffixes and gap schedule — only
+    # the transcript continuations differ, and the gate pins those
+    # identical
+    rng = np.random.default_rng(seed)
+    p0 = {s: rng.integers(0, vocab, size=p0_len).astype(np.int32)
+          for s in range(sessions)}
+    extras = {(s, t): rng.integers(0, vocab, size=extra_len).astype(np.int32)
+              for s in range(sessions) for t in range(1, turns)}
+    gaps = {(s, t): int(rng.integers(gap_lo, gap_hi + 1))
+            for s in range(sessions) for t in range(1, turns)}
+
+    def make_engine(with_swap: bool):
+        cfg = SchedulerConfig(max_slots=slots, page_size=page,
+                              max_seq=max_seq, num_pages=num_pages,
+                              cache_dtype=cache_dtype,
+                              prefill_chunk_tokens=chunk,
+                              host_pool_bytes=50e6 if with_swap else None,
+                              idle_park_iterations=4)
+        return ContinuousBatchingEngine(params, spec, cfg)
+
+    def drive(with_swap: bool):
+        eng = make_engine(with_swap)
+        toks, tw, ti, mk = _multi_turn_chat(
+            eng, sessions=sessions, turns=turns, p0=p0, extras=extras,
+            gaps=gaps, stagger=stagger, max_new=max_new,
+            use_sessions=with_swap)
+        eng.alloc.check()
+        assert eng.num_idle == 0 and eng.num_parked == 0, \
+            "sessions must drain the slots and the host pool"
+        return {"eng": eng, "toks": toks, "ttft_wall": tw,
+                "ttft_iters": ti, "makespan": mk}
+
+    for w in (True, False):
+        drive(w)                               # warm pass: compiles
+    runs = {}
+    for _ in range(2):                         # interleaved best-of-2
+        for w in (True, False):
+            r = drive(w)
+            r["p99"] = float(np.percentile(r["ttft_wall"], 99))
+            if w not in runs or r["p99"] < runs[w]["p99"]:
+                runs[w] = r
+    for s in range(sessions):
+        for t in range(turns):
+            a, b = runs[True]["toks"][s][t], runs[False]["toks"][s][t]
+            if not np.array_equal(a, b):
+                raise SystemExit(
+                    f"FAIL: swap transcript mismatch session {s} turn {t}: "
+                    f"{a} vs {b}")
+    assert runs[True]["eng"].layout.num_pages == \
+        runs[False]["eng"].layout.num_pages, "device pool bytes must match"
+
+    def met(r):
+        st = r["eng"].stats
+        return {"ttft_p50_ms": float(np.percentile(r["ttft_wall"], 50) * 1e3),
+                "ttft_p99_ms": float(np.percentile(r["ttft_wall"], 99) * 1e3),
+                "ttft_iters_p99": float(np.percentile(r["ttft_iters"], 99)),
+                "occupancy": st["decode_tokens"]
+                / max(1, st["iterations"] * slots),
+                "iterations": st["iterations"],
+                "decode_tokens": st["decode_tokens"],
+                "prefill_tokens": st["prefill_tokens"],
+                "preemptions": st["preemptions"],
+                "makespan_s": r["makespan"]}
+
+    m_swap, m_base = met(runs[True]), met(runs[False])
+    st = runs[True]["eng"].stats
+    swap_stats = {k: st[k] for k in ("swap_outs", "swap_ins", "idle_parks",
+                                     "idle_drops", "session_reuses")}
+    rows = [
+        {"engine": "swap_sessions", "cache_dtype": cache_dtype,
+         **m_swap, **swap_stats},
+        {"engine": "recompute_baseline", **m_base},
+        {"engine": "measured", "num_pages": num_pages,
+         "outputs_identical": True,
+         "ttft_p99_ratio": m_swap["ttft_p99_ms"]
+         / max(1e-9, m_base["ttft_p99_ms"]),
+         "occupancy_ratio": m_swap["occupancy"]
+         / max(1e-9, m_base["occupancy"]),
+         # workload stamp: everything needed to regenerate the run
+         "seed": seed, "sessions": sessions, "turns": turns,
+         "idle_gap_iterations": f"uniform[{gap_lo},{gap_hi}]",
+         "stagger_iterations": stagger, "first_prompt_tokens": p0_len,
+         "extra_suffix_tokens": extra_len, "max_new_tokens": max_new},
+    ]
+    # analytical crossover at the same operating point: the model must
+    # call swap-in cheaper than re-prefill for the parked context the
+    # last turn actually resumes
+    final_ctx = float(p0_len + turns * (max_new + extra_len) - extra_len)
+    eng0 = make_engine(False)
+    plan = plan_for_layout(spec, eng0.layout, cache_dtype)
+    pred = predict_serve_throughput(
+        spec, hardware.get("rpi5"), precision.get("fp32"), plan,
+        slots=slots, avg_prompt=float(p0_len), avg_new=float(max_new),
+        parked_context_tokens=final_ctx)
+    rows.append({"engine": "analytical",
+                 **{k: pred[k] for k in
+                    ("parked_context_tokens", "swap_bytes", "swap_in_s",
+                     "reprefill_s", "swap_cheaper", "predicted_resume_ttft_s",
+                     "predicted_recompute_ttft_s") if k in pred}})
+    gate = {"swap": m_swap, "recompute": m_base, **swap_stats}
+    return "serve_swap", m_swap["makespan_s"] * 1e6, rows, gate
+
+
 def _open_loop_router(router, reqs, arrivals):
     """Open-loop pass against a ROUTED fleet: same contract as
     ``_open_loop_once`` but submissions go through ``router.submit``
@@ -1254,6 +1475,12 @@ def main():
                     help="open-loop Poisson-arrival SLO gate: chunked vs "
                          "unchunked prefill at equal pool bytes, p50/p99 "
                          "TTFT + inter-token latency, goodput under SLO")
+    ap.add_argument("--swap", action="store_true",
+                    help="host-tier KV swap gate: multi-turn chat with "
+                         "idle gaps, session engine + host page pool vs "
+                         "recompute-only baseline at equal device pool "
+                         "bytes (token-identical transcripts, lower p99 "
+                         "turn TTFT, higher admitted occupancy)")
     ap.add_argument("--chaos", action="store_true",
                     help="fault-tolerance gate: dp=2 open-loop fleet, the "
                          "busiest replica crashes mid-stream (seeded "
@@ -1283,6 +1510,38 @@ def main():
                     help="also write the result rows to PATH as JSON "
                          "(the BENCH_*.json CI artifacts)")
     args = ap.parse_args()
+    if args.swap:
+        if args.prefix or args.spec_decode or args.open_loop \
+                or args.chaos or args.dp > 1 or args.devices > 1:
+            raise SystemExit("--swap is a single-engine gate; it does "
+                             "not compose with the other modes (tp=2 "
+                             "swap parity lives in "
+                             "tests/test_serve_backend_multidevice.py)")
+        name, us, rows, gate = run_swap(smoke=args.smoke,
+                                        cache_dtype=args.cache_dtype)
+        print(f"## {name}")
+        for r in rows:
+            print(r)
+        if args.json:
+            _dump_json(args.json, name, rows)
+        if gate["swap_ins"] == 0:
+            raise SystemExit(
+                "FAIL: the host tier never cycled (swap_ins == 0) — the "
+                "idle gaps/pool pressure are not exercising the swap "
+                "path, retune the workload")
+        sw, rc = gate["swap"], gate["recompute"]
+        ok = (sw["ttft_p99_ms"] < rc["ttft_p99_ms"]
+              and sw["occupancy"] > rc["occupancy"])
+        status = "PASS" if ok else "FAIL"
+        print(f"{status}: swap p99 turn TTFT {sw['ttft_p99_ms']:.1f}ms vs "
+              f"recompute {rc['ttft_p99_ms']:.1f}ms, admitted occupancy "
+              f"{sw['occupancy']:.2f} vs {rc['occupancy']:.2f} at equal "
+              f"device pool bytes — transcripts identical across "
+              f"{gate['swap_ins']} swap-ins / {gate['idle_parks']} parks / "
+              f"{gate['session_reuses']} in-place rejoins")
+        if not ok:
+            raise SystemExit(1)
+        return
     if args.chaos:
         if args.prefix or args.spec_decode or args.open_loop \
                 or args.dp > 1 or args.devices > 1:

@@ -21,16 +21,42 @@ from repro.core.model_config import ModelSpec
 
 @dataclass
 class Observation:
+    """One calibration target.
+
+    ``kind`` selects what ``target_e2e_s`` measured:
+
+    * ``"e2e"`` (default) — the paper's cold-start end-to-end latency;
+      predicted by the full ``breakdown()`` stage sum.
+    * ``"h2d"`` — a timed host↔device transfer of ``transfer_bytes``
+      (e.g. one measured KV swap-out blob, ``ParkedKV.nbytes``);
+      predicted by ``transfer_bytes / (h2d_bw x u_h2d)`` alone, so the
+      fit pins ``u_h2d`` directly instead of leaving it smeared across
+      the e2e residual.  The swap-vs-recompute crossover
+      (``latency.swap_vs_recompute``) divides by this exact product —
+      an uncalibrated ``u_h2d`` would bias the scheduler's swap tier
+      toward whichever side the default flattered.
+    """
     spec: ModelSpec
     precision: str
     target_e2e_s: float
     seq_len: int = 2048
+    kind: str = "e2e"
+    transfer_bytes: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in ("e2e", "h2d"):
+            raise ValueError(f"unknown observation kind {self.kind!r} "
+                             "(want 'e2e' or 'h2d')")
+        if self.kind == "h2d" and self.transfer_bytes <= 0:
+            raise ValueError("h2d observations need transfer_bytes > 0")
 
 
 _FACTORS = ("u_compute", "u_memory", "u_storage", "u_h2d", "u_net")
 
 
 def _predict(hw: HardwareSpec, obs: Observation) -> float:
+    if obs.kind == "h2d":
+        return obs.transfer_bytes / (hw.h2d_bw * hw.u_h2d)
     from repro.core.profiler import profile
     rep = profile(obs.spec, hw, obs.precision, seq_len=obs.seq_len)
     return rep.latency.end_to_end
@@ -65,5 +91,7 @@ def calibrate(hw: HardwareSpec, observations: Sequence[Observation],
     report = {f: getattr(cur, f) for f in _FACTORS}
     report["loss"] = best
     for o in observations:
-        report[f"pred_{o.spec.name}_{o.precision}"] = _predict(cur, o)
+        tag = (f"pred_{o.spec.name}_{o.precision}" if o.kind == "e2e"
+               else f"pred_h2d_{int(o.transfer_bytes)}B")
+        report[tag] = _predict(cur, o)
     return cur, report

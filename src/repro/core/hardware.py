@@ -28,6 +28,14 @@ class HardwareSpec:
     h2d_bw: float                  # host-to-device (PCIe/NVLink/LPDDR copy)
     net_bw: float                  # node-to-node network / ICI per link
     mem_capacity: float            # bytes of DRAM/HBM
+    # Host-tier DRAM available to PARK swapped-out KV pages (bytes) --
+    # the budget behind SchedulerConfig.host_pool_bytes.  On the
+    # unified-memory edge boards this is the same LPDDR the device pool
+    # lives in (swap trades pool headroom for resident bytes over the
+    # copy path); on discrete accelerators it is the host's RAM, which
+    # dwarfs HBM -- exactly why the swap tier exists.  None (default)
+    # means "same as mem_capacity".
+    host_mem_capacity: float = None  # type: ignore[assignment]
     u_compute: float = 0.60
     u_memory: float = 0.60
     u_storage: float = 0.80
@@ -50,6 +58,8 @@ class HardwareSpec:
     precision_speedup: Dict[str, float] = None  # type: ignore[assignment]
 
     def __post_init__(self):
+        if self.host_mem_capacity is None:
+            object.__setattr__(self, "host_mem_capacity", self.mem_capacity)
         if self.precision_speedup is None:
             object.__setattr__(
                 self, "precision_speedup",
@@ -121,6 +131,7 @@ TPU_V5E = HardwareSpec(
     h2d_bw=32 * GB,               # PCIe gen4 x16 host link
     net_bw=50 * GB,               # ICI per link (assignment constant)
     mem_capacity=16 * GB,
+    host_mem_capacity=128 * GB,   # host RAM share per chip on a v5e host
     u_compute=1.0, u_memory=1.0, u_storage=0.8, u_h2d=0.8, u_net=1.0,
     e_flop=5.0e-13, e_byte=1.0e-10,
     cost_per_hour=1.20,            # on-demand per-chip cloud rate

@@ -213,7 +213,8 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
                              admission: str = "lazy",
                              tp: int = 1, dp: int = 1, spec_k: int = 1,
                              acceptance_rate: float = 0.0,
-                             chunk_tokens: int | None = None
+                             chunk_tokens: int | None = None,
+                             parked_context_tokens: float | None = None
                              ) -> Dict[str, float]:
     """Steady-state continuous batching vs static-batch throughput.
 
@@ -282,6 +283,16 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     tail).  With ``chunk_tokens`` set the steady-state iteration also
     clamps its amortized prefill to the budget, and the result echoes
     ``chunk_tokens``/``prefill_chunks_per_request``.
+
+    ``parked_context_tokens`` models the host swap tier
+    (``SchedulerConfig.host_pool_bytes``): a returning multi-turn
+    session whose KV was parked at that context length pays
+    ``swap_in_s`` (scatter its pages back over ``h2d_bw x u_h2d``)
+    plus one admission iteration instead of re-prefilling the whole
+    context — the result gains the ``swap_vs_recompute`` keys plus
+    ``predicted_resume_ttft_s`` / ``predicted_recompute_ttft_s`` and
+    ``swap_cheaper`` (1.0/0.0), the numbers the ``--swap`` multi-turn
+    benchmark gate prints its measured TTFTs against.
     """
     avg_ctx = avg_prompt + avg_new / 2
     live = effective_slots(plan, slots, avg_prompt, avg_new, admission)
@@ -330,6 +341,18 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     if chunk_tokens:
         out["chunk_tokens"] = float(chunk_tokens)
         out["prefill_chunks_per_request"] = float(n_chunks)
+    if parked_context_tokens is not None:
+        rec = swap_vs_recompute(spec, hw, precision, plan,
+                                context_tokens=parked_context_tokens)
+        out["parked_context_tokens"] = float(parked_context_tokens)
+        out.update({k: v for k, v in rec.items() if k != "cheaper"})
+        out["swap_cheaper"] = 1.0 if rec["cheaper"] == "swap" else 0.0
+        # resume = scatter the pages back + the one-token rejoin
+        # iteration; recompute = the full-context prefill + the same
+        # admission iteration (the burst term already priced above)
+        out["predicted_resume_ttft_s"] = rec["swap_in_s"] + worst.iteration_s
+        out["predicted_recompute_ttft_s"] = (rec["reprefill_s"]
+                                             + worst.iteration_s)
     if spec_k > 1:
         out["spec_k"] = float(spec_k)
         out["acceptance_rate"] = min(1.0, max(0.0, acceptance_rate))
@@ -447,6 +470,53 @@ def failover_recovery_cost(spec: ModelSpec, hw: HardwareSpec,
             "cheaper": "migrate" if migrate_s <= reprefill_s
             else "reprefill",
             "recovery_s": min(migrate_s, reprefill_s)}
+
+
+def swap_vs_recompute(spec: ModelSpec, hw: HardwareSpec,
+                      precision: PrecisionSpec, plan: PagedCachePlan,
+                      *, context_tokens: float) -> Dict[str, float]:
+    """Cost of PARKING one slot's KV in host DRAM vs re-prefilling it —
+    the analytical crossover behind the scheduler's evict→swap→preempt
+    escalation and idle-session parking (``SchedulerConfig.
+    host_pool_bytes``):
+
+    * **swap** — move the slot's pages over the host link, both ways:
+      whole pages (``ceil(context/page_size)``, the transfer
+      granularity the backend gathers/scatters at) at
+      ``h2d_bw x u_h2d``, charged for the round trip — park now, pay
+      the scatter again at resume.  ``plan`` carries the cache dtype,
+      so int4 pages move ~1/8 the fp32 bytes over the SAME link:
+      quantization is what pulls the swap tier under the recompute
+      line on the paper's edge boards.
+    * **re-prefill** — recompute the context from the resume record's
+      token ids (what preemption pays today): full prefill FLOPs at
+      the device's effective rate, dequant overhead included — same
+      term as ``failover_recovery_cost``, which prices the NETWORK
+      flavour of this trade.
+
+    Returns the leg times, the round trip, the recompute time, which
+    regime is cheaper, and ``host_capacity_contexts`` — how many such
+    parked contexts ``hw.host_mem_capacity`` holds, the host-memory
+    axis the support matrix now carries.
+    """
+    if context_tokens < 0:
+        raise ValueError("context_tokens must be >= 0")
+    pages = -(-int(context_tokens) // plan.page_size) if context_tokens else 0
+    swap_bytes = pages * plan.page_bytes
+    bw = hw.h2d_bw * hw.u_h2d
+    swap_out_s = swap_bytes / bw
+    swap_in_s = swap_bytes / bw
+    swap_s = swap_out_s + swap_in_s
+    flops = (mixed_iteration_flops(spec, int(context_tokens), 0, 0.0)
+             * precision.dequant_overhead)
+    reprefill_s = flops / (hw.flops_at(precision.name) * hw.u_compute)
+    return {"swap_bytes": swap_bytes,
+            "swap_out_s": swap_out_s, "swap_in_s": swap_in_s,
+            "swap_s": swap_s,
+            "reprefill_flops": flops, "reprefill_s": reprefill_s,
+            "cheaper": "swap" if swap_s <= reprefill_s else "reprefill",
+            "host_capacity_contexts": (hw.host_mem_capacity / swap_bytes
+                                       if swap_bytes else float("inf"))}
 
 
 def serve_availability(spec: ModelSpec, hw: HardwareSpec,

@@ -2,8 +2,9 @@
 ``ContinuousBatchingEngine`` over a refcounted paged KV cache.
 
 The stack is a HOST/DEVICE split: the scheduler (admission, prefix
-store, lazy growth, preemption) is pure host state and drives a
-``backend.PagedKVBackend`` for every device interaction.  Two backends
+store, lazy growth, the evict→swap→preempt escalation) is pure host
+state and drives a ``backend.PagedKVBackend`` for every device
+interaction.  Two backends
 ship — ``SingleDeviceBackend`` (one device holds the whole pool) and
 ``ShardedPagedBackend`` (tensor-parallel: pools partitioned over the
 KV-head dim of the ``model`` mesh axis, block tables replicated,
@@ -68,6 +69,30 @@ start after the final chunk, preempted victims re-chunk on recompute,
 and both backends reuse the ``admit_prefix`` jit cache
 (``PagedKVBackend.prefill_chunk``).
 
+HOST MEMORY is a first-class serving tier: with
+``SchedulerConfig.host_pool_bytes`` set, the scheduler owns a
+byte-budgeted ``paged_cache.HostPagePool`` and allocation pressure
+escalates evict → SWAP → preempt — a victim's pages (packed pools +
+lane-major scale pages, any cache dtype) gather to host DRAM over the
+h2d link as a ``ParkedKV`` blob instead of being thrown away, and its
+re-admission scatters them back and prefills ONE token, token-identical
+to the recompute path it replaces.  The same pool PARKS idle
+multi-turn sessions (``Request.session``): a finished turn holds its
+slot idle on device, rejoins in place when the next turn extends it,
+and parks to host after ``idle_park_iterations`` or under pressure.
+Shared prefix pages are refcount-safe — parking COPIES them, never
+steals them from other holders.  ``core.latency.swap_vs_recompute``
+prices the trade (whole pages round-trip over ``h2d_bw x u_h2d`` vs
+re-prefill FLOPs over the roofline — int4 pages move ~1/8 the fp32
+bytes, which is what pulls swap under recompute on the paper's
+boards), ``HardwareSpec.host_mem_capacity`` bounds the tier, and
+``calibration.Observation(kind="h2d")`` fits ``u_h2d`` from measured
+transfers.  The ``--swap`` multi-turn benchmark gate holds device pool
+bytes EQUAL and requires higher admitted occupancy and lower p99 TTFT
+than recompute-only, with token-identical outputs across the swap
+(fp32/int8/int4, single-device and tp=2 — the tp pool swaps per-shard
+and reassembles host-side).
+
 Paged KV precision support matrix (``SchedulerConfig.cache_dtype`` x
 parallelism axes x decode mode) — every cell is exercised by tier-1
 tests / the CI serve smokes (prefill, decode, prefix-cache, CoW per
@@ -79,7 +104,10 @@ tests/test_spec_decode.py and the ``--spec-decode`` benchmark gate;
 chunked-prefill cells assert token identity plus the per-iteration
 budget bound in tests/test_serve_scheduler.py and the ``--open-loop``
 benchmark gate; fault-tolerance cells in tests/test_serve_faults.py
-and the ``--chaos`` benchmark gate):
+and the ``--chaos`` benchmark gate; swap/park cells assert token
+identity across swap-out/swap-in per dtype in
+tests/test_serve_scheduler.py, tp=2 in
+tests/test_serve_backend_multidevice.py, and the ``--swap`` gate):
 
 =========  ====================  =======================  ==============
 dtype      single device         tp-sharded (tp=2/4):     dp replicas
@@ -165,8 +193,9 @@ from repro.serve.backend import (PagedKVBackend, ShardedPagedBackend,
                                  SingleDeviceBackend, make_backend)
 from repro.serve.engine import ServeConfig, generate, load_quantized, make_prefill_step, make_serve_step
 from repro.serve.faults import ChaosBackend, ChaosSchedule, ReplicaFault
-from repro.serve.paged_cache import (PageAllocator, PrefixCache, PrefixMatch,
-                                     copy_page, make_layout, pages_needed,
+from repro.serve.paged_cache import (HostPagePool, PageAllocator, ParkedKV,
+                                     PrefixCache, PrefixMatch, copy_page,
+                                     make_layout, pages_needed,
                                      plan_for_layout)
 from repro.serve.router import (PrefixRouter, ServeSLO, make_replicas,
                                 pick_replica, route_key)

@@ -4,8 +4,10 @@ The continuous-batching scheduler (``serve/scheduler.py``) is pure host
 state — refcounted ``PageAllocator``, hash-indexed ``PrefixCache``,
 slot/queue bookkeeping — and drives the device through the
 ``PagedKVBackend`` interface below: admit (full or suffix prefill),
-one batched decode step, copy-on-write page copies, slot release, and
-block-table writes.  Everything the device side owns (the page-pool
+one batched decode step, copy-on-write page copies, slot release,
+block-table writes, and page gather/scatter for the host swap tier
+(``swap_out`` / ``swap_in`` — parked slots round-trip their pages
+byte-identically through host DRAM instead of re-prefilling).  Everything the device side owns (the page-pool
 pytree, the jitted step functions, where the arrays live and how they
 are sharded) is a backend concern the scheduler never sees.
 
@@ -153,6 +155,43 @@ def _decode_window_fn(params, cache, tokens, active, lens, *, spec,
     return out, n_emit, finite, cache
 
 
+@jax.jit
+def _gather_pages_fn(cache, pv):
+    """Device half of swap-OUT: gather the listed pages' rows from every
+    pool entry (k/v pages plus the lane-major scale pages of quantized
+    dtypes) across all layers.  No donation — the pool keeps its pages
+    until the host copy lands and the allocator releases them, so a
+    shared prefix page is never pulled out from under another holder.
+    Retraces once per power-of-two page-count bucket (the caller pads
+    ``pv`` with the null page)."""
+    out = []
+    for cg in cache["groups"]:
+        out.append([{name: entry[name][pv] for name in entry}
+                    for entry in cg])
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_pages_fn(cache, rows, pv):
+    """Device half of swap-IN: scatter host page rows back into (fresh)
+    physical pages of every pool entry.  The same GSPMD story as the
+    admission scatters: with tensor-parallel pools each device writes
+    only its KV-head slice of every row, so the transfer is per-shard
+    without any backend-specific code.  Padded trailing entries of
+    ``pv`` target the null page, whose content is never consumed."""
+    new_groups = []
+    for cg, rg in zip(cache["groups"], rows):
+        new_layers = []
+        for entry, src in zip(cg, rg):
+            new_entry = dict(entry)
+            for name in entry:
+                new_entry[name] = entry[name].at[pv].set(src[name])
+            new_layers.append(new_entry)
+        new_groups.append(new_layers)
+    return {"pos": cache["pos"], "block_tables": cache["block_tables"],
+            "groups": new_groups}
+
+
 class PagedKVBackend:
     """Interface the scheduler drives; implementations own the device
     cache pytree and the jitted steps.  All token returns are host ints
@@ -224,6 +263,29 @@ class PagedKVBackend:
                             updates: Sequence[Tuple[int, int, int]]) -> None:
         """Install lazily-grown decode pages: (slot_row, page_idx,
         page_id) triples into the replicated block tables."""
+        raise NotImplementedError
+
+    def swap_out(self, page_ids: Sequence[int]) -> Any:
+        """Gather the listed pages (all layers, k/v pools + scale pages)
+        into a host numpy pytree — the device->host leg of parking a
+        slot's KV in the host memory tier.  Pure read: the device pages
+        are untouched; the scheduler frees its references afterwards."""
+        raise NotImplementedError
+
+    def swap_in(self, blob: Any, page_ids: Sequence[int]) -> None:
+        """Scatter a previously gathered blob into ``page_ids`` (freshly
+        allocated pages, one per blob row).  Byte-identical round trip
+        with ``swap_out``, so a parked slot resumes token-identically;
+        block table and pos are restored by the one-token suffix prefill
+        that rejoins the slot (the existing admission path)."""
+        raise NotImplementedError
+
+    def host_page_bytes(self) -> int:
+        """Host bytes one GLOBAL page occupies when parked (all layers,
+        k/v pools + scale pages; for tp pools this is the assembled
+        cross-shard page, not one device's slice) — what the scheduler
+        charges against ``HostPagePool.capacity_bytes`` before paying
+        for a gather."""
         raise NotImplementedError
 
 
@@ -331,6 +393,44 @@ class SingleDeviceBackend(PagedKVBackend):
         vals = jnp.asarray([u[2] for u in updates], jnp.int32)
         bt = self.cache["block_tables"]
         self.cache["block_tables"] = bt.at[rows, cols].set(vals)
+
+    @staticmethod
+    def _pad_page_vec(page_ids) -> np.ndarray:
+        """Pow2-bucket a page-id vector (null-page padded) so the swap
+        jits compile once per bucket, like the admission buckets."""
+        n = 1
+        while n < len(page_ids):
+            n *= 2
+        pv = np.full((n,), pc.NULL_PAGE, np.int32)
+        pv[:len(page_ids)] = page_ids
+        return pv
+
+    def swap_out(self, page_ids) -> Any:
+        k = len(page_ids)
+        pv = self._pad_page_vec(page_ids)
+        rows = _gather_pages_fn(self.cache, jnp.asarray(pv))
+        # device_get assembles sharded pools from their addressable
+        # shards host-side — each device ships only its KV-head slice,
+        # so the tp transfer is per-shard with no device collective
+        host = jax.device_get(rows)
+        if len(pv) != k:
+            host = jax.tree_util.tree_map(lambda a: a[:k].copy(), host)
+        return host
+
+    def swap_in(self, blob, page_ids) -> None:
+        k = len(page_ids)
+        pv = self._pad_page_vec(page_ids)
+        if len(pv) != k:
+            pad = len(pv) - k
+            blob = jax.tree_util.tree_map(
+                lambda a: np.concatenate(
+                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)]), blob)
+        self.cache = _scatter_pages_fn(self.cache, blob, jnp.asarray(pv))
+
+    def host_page_bytes(self) -> int:
+        return sum(int(leaf.nbytes) // int(leaf.shape[0])
+                   for leaf in jax.tree_util.tree_leaves(
+                       self.cache["groups"]))
 
 
 class ShardedPagedBackend(SingleDeviceBackend):

@@ -299,6 +299,115 @@ class PrefixCache:
 
 
 # ---------------------------------------------------------------------------
+# Host memory tier: parked KV
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ParkedKV:
+    """A slot's KV parked in host DRAM (the swap tier).
+
+    ``blob`` is a host pytree of per-page rows gathered from every pool
+    entry (k/v pages plus lane-major scale pages for quantized dtypes)
+    — ``n_pages`` leading rows per leaf, byte-identical to the device
+    pages at swap-out time, so scattering it back is a lossless resume.
+    ``context`` holds the token ids the parked KV covers (prompt plus
+    generated so far); ``written`` counts the KV rows actually written
+    (``len(context) - 1`` — the last token's KV is recomputed by the
+    one-token suffix prefill that rejoins the slot, which also restores
+    the block-table row and pos through the existing admission path).
+    Pages whose refcount was > 1 at swap-out (shared prefix pages) are
+    COPIED into the blob, never stolen: the other holders keep the
+    device page; the parked slot resumes into fresh pages.
+    """
+    context: np.ndarray
+    written: int
+    n_pages: int
+    blob: object
+    nbytes: int
+
+
+def blob_nbytes(blob) -> int:
+    """Host bytes of a gathered page blob (sum over pytree leaves)."""
+    return sum(int(a.nbytes) for a in jax.tree_util.tree_leaves(blob))
+
+
+class HostPagePool:
+    """Byte-budgeted store of ``ParkedKV`` records keyed by the
+    scheduler (uid for swapped-out victims, session id for idle parks).
+
+    Pure host bookkeeping: the pool holds numpy copies of page rows and
+    an exact byte count against ``capacity_bytes`` — it never touches
+    the device allocator, so device pages freed at swap-out are
+    immediately reusable.  ``check()`` asserts the accounting invariants
+    (tier-1 audit mode runs it after every scheduler iteration).
+    """
+
+    def __init__(self, capacity_bytes: float):
+        if capacity_bytes <= 0:
+            raise ValueError("host pool capacity must be > 0 bytes")
+        self.capacity_bytes = float(capacity_bytes)
+        self._records: "OrderedDict[object, ParkedKV]" = OrderedDict()
+        self.used_bytes = 0
+        self.parked_total = 0
+        self.resumed_total = 0
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def __contains__(self, key) -> bool:
+        return key in self._records
+
+    @property
+    def free_bytes(self) -> float:
+        return self.capacity_bytes - self.used_bytes
+
+    def can_park(self, nbytes: float) -> bool:
+        return nbytes <= self.free_bytes
+
+    def park(self, key, rec: ParkedKV) -> None:
+        if key in self._records:
+            raise ValueError(f"key already parked: {key!r}")
+        if rec.nbytes > self.free_bytes:
+            raise MemoryError(
+                f"host pool full: want {rec.nbytes} B, "
+                f"have {self.free_bytes:.0f} B of {self.capacity_bytes:.0f}")
+        self._records[key] = rec
+        self.used_bytes += rec.nbytes
+        self.parked_total += 1
+
+    def peek(self, key) -> Optional[ParkedKV]:
+        return self._records.get(key)
+
+    def take(self, key) -> ParkedKV:
+        """Remove and return a record (swap-in consumes it)."""
+        rec = self._records.pop(key)
+        self.used_bytes -= rec.nbytes
+        self.resumed_total += 1
+        return rec
+
+    def drop(self, key) -> bool:
+        """Discard a record without resuming it (session ended, request
+        shed, or the work migrated to another replica)."""
+        rec = self._records.pop(key, None)
+        if rec is None:
+            return False
+        self.used_bytes -= rec.nbytes
+        return True
+
+    def check(self) -> None:
+        total = sum(r.nbytes for r in self._records.values())
+        assert self.used_bytes == total, \
+            f"host pool byte leak: tracked {self.used_bytes} != sum {total}"
+        assert self.used_bytes <= self.capacity_bytes, "host pool over budget"
+        for key, rec in self._records.items():
+            assert rec.n_pages >= 1, f"empty parked record: {key!r}"
+            assert rec.nbytes == blob_nbytes(rec.blob), \
+                f"stale nbytes on parked record {key!r}"
+            assert 1 <= rec.written < len(rec.context), \
+                f"parked record {key!r} written={rec.written} out of range"
+
+
+# ---------------------------------------------------------------------------
 # Layout sizing
 # ---------------------------------------------------------------------------
 

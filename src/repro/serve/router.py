@@ -28,6 +28,10 @@ Two liveness escape hatches temper the affinity:
 * overflow SPILL at submit: if the hashed replica is backed up by
   ``spill_slack`` more pending requests than the least-loaded replica,
   the request goes to the latter (losing affinity beats queuing).
+  Load is ``engine.pending_cost``, which counts DEVICE work only:
+  idle session slots and host-parked (swapped-out) KV are not device
+  occupancy, and a returning turn is charged its suffix, not its
+  whole context — so session affinity survives the spill heuristic.
 * REBALANCE on drain: an idle replica steals queued (not yet admitted)
   requests from the back of the deepest queue — up to its free-slot
   count per step, skipping donors whose queue head is a recompute
@@ -316,7 +320,13 @@ class PrefixRouter:
         """Pending work on a live replica in bucket-padded TOKEN cost
         (``engine.pending_cost``): a queue of sixteen chat turns and a
         queue of one 2k-token prompt are not the same backlog, so spill
-        compares cost, not request count."""
+        compares cost, not request count.  PARKED state is free here by
+        the scheduler's contract: idle session slots and host-parked
+        (swapped-out) KV contribute zero — they hold pages or host
+        bytes, not iterations — and a queued turn whose context is
+        parked on the replica costs only its SUFFIX prefill, so spill
+        never punishes the replica that holds a session's KV for
+        holding it."""
         eng = self.engines[rid]
         if eng is None:
             return 0.0

@@ -1,5 +1,5 @@
 """Continuous-batching serve scheduler: lazy paged allocation, refcounted
-prefix caching, and recompute-preemption.
+prefix caching, host-tier KV swapping, and recompute-preemption.
 
 The static ``engine.generate`` path pads every request in a batch to the
 longest prompt, decodes until the LAST request finishes, and cannot
@@ -36,12 +36,32 @@ runs the vLLM-style alternative on top of the paged KV cache:
   speculating (``spec_k``) — for ALL live fully-prefilled slots in a
   single fixed-shape jitted step; when a slot crosses a page boundary
   it allocates its next page just-in-time — if the pool is dry the
-  scheduler first evicts unshared prefix-store pages (LRU), then
-  PREEMPTS the newest-admitted slot: its non-shared pages are freed,
-  its prefix-store pages survive by refcount, and the victim re-queues
-  with prompt+generated-so-far as its new prompt (greedy recompute
-  resumes the sequence exactly, and its re-run prefill hits the cached
-  prefix);
+  scheduler escalates through THREE tiers: (1) EVICT unshared
+  prefix-store pages (LRU) and park idle session slots, (2) SWAP the
+  newest-admitted victim to the host pool (``SchedulerConfig.
+  host_pool_bytes`` — its pages gather to host DRAM over the h2d link,
+  shared prefix pages are COPIED so other holders keep them, and the
+  victim re-queues exactly like a preemption except its re-admission
+  scatters the parked pages back and prefills only the one unwritten
+  token), (3) PREEMPT recompute-style when no host pool is configured
+  or it is full: non-shared pages are freed, prefix-store pages
+  survive by refcount, and the victim re-queues with
+  prompt+generated-so-far as its new prompt (greedy recompute resumes
+  the sequence exactly, and its re-run prefill hits the cached
+  prefix).  Either resume path is token-identical — swap trades
+  h2d bytes for prefill FLOPs, the crossover
+  ``core.latency.swap_vs_recompute`` prices;
+* requests carrying a ``session`` id are MULTI-TURN: a finished turn's
+  slot goes IDLE (KV held on device) instead of freeing, and the next
+  turn — whose prompt must extend the prior context token-for-token —
+  rejoins IN PLACE with a suffix prefill over just the tokens it
+  appends.  Idle slots are invisible to ``num_active``/
+  ``pending_cost``, are never preemption victims, and PARK to the host
+  pool under allocation pressure or after ``idle_park_iterations``
+  without a follow-up turn; a parked session's next turn swaps its
+  pages back in.  ``end_session`` releases either form.  With no host
+  pool the idle slot is simply dropped and the next turn re-prefills
+  (prefix-cache assisted) — sessions degrade to today's behaviour;
 * finished slots free their page references immediately and the next
   queued request takes the slot on the same iteration;
 * with ``spec_k > 1`` every iteration runs SELF-SPECULATIVE decoding:
@@ -114,6 +134,13 @@ class Request:
     # stamped by the first submit(); carried across preemption, retry
     # and cross-replica migration so deadlines measure true age
     arrival_t: Optional[float] = None
+    # multi-turn chat: requests sharing a session id extend one
+    # conversation.  A finished turn's slot goes IDLE instead of
+    # freeing (KV kept on device, parked to the host pool under
+    # pressure or after the idle threshold), and the next turn — whose
+    # prompt must extend the prior context — rejoins with a one-token
+    # suffix prefill instead of re-prefilling the whole history.
+    session: Optional[int] = None
 
 
 @dataclass
@@ -158,6 +185,20 @@ class SchedulerConfig:
     # suffix prefill over the chunks already written).  Must be a
     # positive multiple of page_size when set.
     prefill_chunk_tokens: int = 0
+    # host memory tier: bytes of host DRAM the engine may park KV in
+    # (swap-out instead of recompute for preemption victims and idle
+    # sessions).  None/0 disables swapping — preemption recomputes and
+    # idle sessions hold device pages until dropped under pressure.
+    # Size it from HardwareSpec.host_mem_capacity minus weights/OS.
+    host_pool_bytes: Optional[float] = None
+    # park an idle session slot's KV to the host pool once it has sat
+    # idle this many scheduler iterations (0 = never on the timer;
+    # pressure from _reserve still parks/drops idle slots on demand)
+    idle_park_iterations: int = 8
+    # audit mode: run allocator + host-pool + slot/page invariant
+    # checks after every step() so a refcount bug surfaces at the
+    # iteration that caused it (tier-1 test fixtures enable this)
+    debug_invariants: bool = False
 
 
 @dataclass
@@ -180,6 +221,12 @@ class _Slot:
     deadline_s: Optional[float] = None
     retries_left: int = 0
     arrival_t: Optional[float] = None
+    # multi-turn session keep-alive: a finished turn with a session id
+    # parks the slot IDLE (pages + device KV held, no decode work)
+    # instead of freeing, so the next turn rejoins without re-prefill
+    session: Optional[int] = None
+    idle: bool = False
+    idle_since: float = 0.0            # stats["iterations"] stamp
 
     @property
     def done(self) -> bool:
@@ -265,6 +312,13 @@ class ContinuousBatchingEngine:
         self.queue: Deque[Request] = deque()
         self._resume: Dict[int, _Resume] = {}
         self._admit_seq = 0
+        # host memory tier: parked KV of swapped-out victims (keyed
+        # ("uid", uid)) and idle sessions (keyed ("sess", session))
+        self.host_pool: Optional[pc.HostPagePool] = (
+            pc.HostPagePool(cfg.host_pool_bytes)
+            if cfg.host_pool_bytes else None)
+        self._host_page_bytes = (self.backend.host_page_bytes()
+                                 if self.host_pool is not None else 0)
         self.stats: Dict[str, float] = {
             "iterations": 0, "decode_tokens": 0, "prefill_tokens": 0,
             "prompt_tokens": 0, "prefix_hit_tokens": 0, "admitted": 0,
@@ -286,7 +340,17 @@ class ContinuousBatchingEngine:
             # request-lifecycle robustness: deadline sheds, NaN-guard
             # slot failures, the retries they spent, and requests that
             # failed for good (budget exhausted)
-            "shed": 0, "nan_failures": 0, "retries": 0, "failed": 0}
+            "shed": 0, "nan_failures": 0, "retries": 0, "failed": 0,
+            # host-tier swapping: pressure swap-outs of live victims,
+            # swap-in resumes, pages moved each way, idle sessions
+            # parked/dropped, and live in-place session reattaches.
+            # session_prompt/hit tokens count session rejoins separately
+            # from prefix_hit_tokens (the hit never touched the store)
+            # and recompute_* (nothing was recomputed)
+            "swap_outs": 0, "swap_ins": 0, "swapped_out_pages": 0,
+            "swapped_in_pages": 0, "idle_parks": 0, "idle_drops": 0,
+            "session_reuses": 0, "session_prompt_tokens": 0,
+            "session_hit_tokens": 0}
         # injectable wall clock for deadline shedding (tests freeze it)
         self.clock = time.monotonic
 
@@ -312,7 +376,39 @@ class ContinuousBatchingEngine:
 
     @property
     def num_active(self) -> int:
-        return sum(s is not None for s in self.slots)
+        """Slots doing WORK (prefilling or decoding).  Idle session
+        slots are excluded: they hold device pages but consume no
+        iteration compute and are reclaimable on demand (park/drop), so
+        they are neither admission headroom nor router occupancy."""
+        return sum(s is not None and not s.idle for s in self.slots)
+
+    @property
+    def num_idle(self) -> int:
+        return sum(s is not None and s.idle for s in self.slots)
+
+    @property
+    def num_parked(self) -> int:
+        return len(self.host_pool) if self.host_pool is not None else 0
+
+    def _queued_context(self, req: Request) -> int:
+        """KV rows a queued request already holds in some tier — a
+        parked swap record, or a live idle slot of its session — i.e.
+        rows its admission will NOT re-prefill.  Token validation is
+        deferred to admission; this is the load-accounting estimate."""
+        if self.host_pool is not None:
+            rec = self.host_pool.peek(("uid", req.uid))
+            if rec is None and req.session is not None:
+                rec = self.host_pool.peek(("sess", req.session))
+            if rec is not None and len(req.prompt) > rec.written:
+                return rec.written
+        if req.session is not None:
+            i = self._find_idle(req.session)
+            if i is not None:
+                s = self.slots[i]
+                ctx = s.prompt_len + len(s.generated)
+                if len(req.prompt) >= ctx:
+                    return ctx - 1
+        return 0
 
     @property
     def pending_cost(self) -> int:
@@ -320,13 +416,21 @@ class ContinuousBatchingEngine:
         prompts + their decode budgets, unfinished prefill remainders,
         and live slots' remaining decode tokens.  The router's load
         signal — COST, not request count — so one 2k-token prompt
-        weighs as much as the sixteen short requests it displaces."""
+        weighs as much as the sixteen short requests it displaces.
+        Work whose KV is PARKED (host pool) or held by an idle session
+        slot charges only its rejoin suffix, not the full context — a
+        swapped-out victim costs a page scatter plus one bucket, and
+        counting its whole prompt as device work would make the router
+        spill traffic away from exactly the replica that can resume it
+        cheaply.  Idle slots themselves contribute nothing: their pages
+        are host-reclaimable capacity, not pending device work."""
         page, cap = self.cfg.page_size, self.cfg.max_seq
         cost = 0
         for r in self.queue:
-            cost += _bucket(len(r.prompt), page, cap) + r.max_new_tokens
+            suffix = len(r.prompt) - self._queued_context(r)
+            cost += _bucket(suffix, page, cap) + r.max_new_tokens
         for s in self.slots:
-            if s is None:
+            if s is None or s.idle:
                 continue
             if s.prefilling:
                 cost += _bucket(s.prompt_len - s.prefilled, page, cap)
@@ -359,9 +463,15 @@ class ContinuousBatchingEngine:
 
     def take_queued(self) -> List[Request]:
         """Hand back every QUEUED (not yet admitted) request, emptying
-        the queue — the router's drain path on replica removal."""
+        the queue — the router's drain path on replica removal.  A
+        drained swap resume recomputes on its new replica (its resume
+        record follows via ``export_resume``); the parked bytes it
+        left here are dead, so drop them."""
         out = list(self.queue)
         self.queue.clear()
+        if self.host_pool is not None:
+            for r in out:
+                self.host_pool.drop(("uid", r.uid))
         return out
 
     def export_resume(self, uid: int) -> Optional[_Resume]:
@@ -395,6 +505,13 @@ class ContinuousBatchingEngine:
         for i, slot in enumerate(self.slots):
             if slot is None:
                 continue
+            if slot.idle:
+                # idle sessions have already completed their turn; the
+                # held KV cannot follow a host-state-only migration, so
+                # the next turn simply cold-prefills on the survivor
+                self.alloc.free(slot.pages)
+                self.slots[i] = None
+                continue
             res = self._resume.pop(slot.uid, None)
             prior = res.prior if res is not None else []
             orig = res.orig_prompt_len if res is not None else slot.prompt_len
@@ -412,31 +529,127 @@ class ContinuousBatchingEngine:
                 np.concatenate([slot.prompt,
                                 np.asarray(slot.generated, np.int32)]),
                 remaining, deadline_s=slot.deadline_s,
-                retries=slot.retries_left, arrival_t=slot.arrival_t)
+                retries=slot.retries_left, arrival_t=slot.arrival_t,
+                session=slot.session)
             records.append((req, _Resume(orig, prior + slot.generated)))
         return records, completions
 
     # -- page pressure ----------------------------------------------------
 
     def _reserve(self, n: int) -> bool:
-        """Make ``n`` pages allocatable, evicting unshared prefix-store
-        pages (LRU) if the free list is short.  Never preempts — that is
-        the decode-growth path's escalation."""
+        """Make ``n`` pages allocatable: evict unshared prefix-store
+        pages (LRU), then reclaim IDLE session slots — parking their KV
+        to the host pool when it has room, dropping the session when it
+        doesn't.  Either way costs a transfer or a future re-prefill of
+        someone who isn't running, never a recompute of live work —
+        preemption stays the decode-growth path's escalation."""
         if self.alloc.can_alloc(n):
             return True
         if self.prefix_cache is not None:
             self.stats["prefix_evicted_pages"] += self.prefix_cache.evict(
                 n - self.alloc.free_pages)
+        if not self.alloc.can_alloc(n):
+            for i in self._idle_slots_lru():
+                self._park_idle(i)
+                if self.alloc.can_alloc(n):
+                    break
         return self.alloc.can_alloc(n)
 
     def _pick_victim(self) -> Optional[int]:
         """Newest-admitted live slot (FCFS: the head of the line is the
-        last to be preempted)."""
+        last to be preempted).  Idle session slots are never victims —
+        ``_reserve`` already reclaimed them, and they have no work to
+        requeue."""
         best, best_seq = None, -1
         for i, slot in enumerate(self.slots):
-            if slot is not None and slot.admit_seq > best_seq:
+            if (slot is not None and not slot.idle
+                    and slot.admit_seq > best_seq):
                 best, best_seq = i, slot.admit_seq
         return best
+
+    def _idle_slots_lru(self) -> List[int]:
+        """Idle session slots, longest-idle first (the reclaim order)."""
+        return sorted((i for i, s in enumerate(self.slots)
+                       if s is not None and s.idle),
+                      key=lambda i: self.slots[i].idle_since)
+
+    def _find_idle(self, session: int) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is not None and s.idle and s.session == session:
+                return i
+        return None
+
+    def _park_idle(self, idx: int) -> None:
+        """Reclaim an idle session slot's device pages: park its KV in
+        the host pool when there is room (the next turn rejoins with a
+        page scatter + one-token prefill), else drop the session (the
+        next turn re-prefills cold).  Shared prefix pages are COPIED
+        into the blob and only this slot's references freed, so other
+        holders keep their device pages."""
+        slot = self.slots[idx]
+        assert slot is not None and slot.idle
+        key = ("sess", slot.session)
+        can = (self.host_pool is not None and key not in self.host_pool
+               and self.host_pool.can_park(
+                   len(slot.pages) * self._host_page_bytes))
+        if can:
+            blob = self.backend.swap_out(slot.pages)  # device call first
+            self.backend.release_slot(idx)
+            context = np.concatenate(
+                [slot.prompt, np.asarray(slot.generated, np.int32)])
+            self.host_pool.park(key, pc.ParkedKV(
+                context=context, written=len(context) - 1,
+                n_pages=len(slot.pages), blob=blob,
+                nbytes=pc.blob_nbytes(blob)))
+            self.stats["idle_parks"] += 1
+            self.stats["swapped_out_pages"] += len(slot.pages)
+        else:
+            self.backend.release_slot(idx)
+            self.stats["idle_drops"] += 1
+        self.alloc.free(slot.pages)
+        self.slots[idx] = None
+
+    def _swap_out(self, idx: int) -> bool:
+        """Swap tier of the evict→swap→preempt escalation: park a live
+        victim's KV in the host pool instead of discarding it.  Host
+        bookkeeping is EXACTLY ``_preempt`` (resume record with prior
+        output spliced, prompt+generated requeued at the head) — the
+        parked blob is a pure accelerator the swap-in admission finds
+        by uid, so if the request migrates or sheds first, the normal
+        recompute path still resumes it.  Returns False (caller falls
+        back to ``_preempt``) when the pool is absent/full or the
+        victim is mid-prefill (its KV is not yet worth the transfer)."""
+        slot = self.slots[idx]
+        assert slot is not None and not slot.done
+        if self.host_pool is None or slot.prefilling:
+            return False
+        key = ("uid", slot.uid)
+        if (key in self.host_pool
+                or not self.host_pool.can_park(
+                    len(slot.pages) * self._host_page_bytes)):
+            return False
+        blob = self.backend.swap_out(slot.pages)  # device first (see _preempt)
+        self.backend.release_slot(idx)
+        res = self._resume.get(slot.uid)
+        prior = (res.prior if res else []) + slot.generated
+        orig_plen = res.orig_prompt_len if res else slot.prompt_len
+        self._resume[slot.uid] = _Resume(orig_plen, prior)
+        remaining = slot.max_new - len(slot.generated)
+        new_prompt = np.concatenate(
+            [slot.prompt, np.asarray(slot.generated, np.int32)])
+        self.host_pool.park(key, pc.ParkedKV(
+            context=new_prompt, written=len(new_prompt) - 1,
+            n_pages=len(slot.pages), blob=blob,
+            nbytes=pc.blob_nbytes(blob)))
+        self.alloc.free(slot.pages)
+        self.slots[idx] = None
+        self.queue.appendleft(Request(
+            slot.uid, new_prompt, remaining, deadline_s=slot.deadline_s,
+            retries=slot.retries_left, arrival_t=slot.arrival_t,
+            session=slot.session))
+        self.stats["swap_outs"] += 1
+        self.stats["swapped_out_pages"] += len(slot.pages)
+        return True
 
     def _preempt(self, idx: int) -> None:
         """Evict a slot: free its page references (prefix-store pages
@@ -460,7 +673,8 @@ class ContinuousBatchingEngine:
         self.slots[idx] = None
         self.queue.appendleft(Request(
             slot.uid, new_prompt, remaining, deadline_s=slot.deadline_s,
-            retries=slot.retries_left, arrival_t=slot.arrival_t))
+            retries=slot.retries_left, arrival_t=slot.arrival_t,
+            session=slot.session))
         self.stats["preemptions"] += 1
 
     def _fail_slot(self, idx: int, completions: List[Completion]) -> None:
@@ -489,7 +703,7 @@ class ContinuousBatchingEngine:
                                 np.asarray(slot.generated, np.int32)]),
                 slot.max_new - len(slot.generated),
                 deadline_s=slot.deadline_s, retries=slot.retries_left - 1,
-                arrival_t=slot.arrival_t))
+                arrival_t=slot.arrival_t, session=slot.session))
             self.stats["retries"] += 1
         else:
             completions.append(Completion(
@@ -517,6 +731,8 @@ class ContinuousBatchingEngine:
             res = self._resume.pop(req.uid, None)
             prior = res.prior if res is not None else []
             orig = res.orig_prompt_len if res is not None else len(req.prompt)
+            if self.host_pool is not None:
+                self.host_pool.drop(("uid", req.uid))   # parked bytes are dead
             completions.append(Completion(
                 req.uid, orig, np.asarray(prior, np.int32), status="shed"))
             self.stats["shed"] += 1
@@ -592,18 +808,217 @@ class ContinuousBatchingEngine:
                 self._complete_prefill(slot, tok0)
         return budget
 
+    def _first_chunk(self, i: int, budget: Optional[int],
+                     matched: int) -> Optional[int]:
+        """Issue the rejoin suffix prefill for a freshly reattached slot
+        (live session reuse or swap-in): its first ``matched`` context
+        rows are already written, so the suffix — at minimum the one
+        unwritten last context token — prefills through the standard
+        ``admit_prefix``/``prefill_chunk`` path, which installs the
+        block-table row and pos.  One chunk lands now; any remainder
+        carries via ``_continue_prefills`` like every chunked
+        admission.  Returns the remaining budget."""
+        slot = self.slots[i]
+        page = self.cfg.page_size
+        row_len = self.layout.slots_pages(self.cfg.max_seq)
+        suffix_len = slot.prompt_len - matched
+        chunk = (suffix_len if budget is None
+                 else min(suffix_len, self._chunk_quota(budget)))
+        spad = _bucket(chunk, page, self.cfg.max_seq)
+        padded = np.zeros((1, spad), np.int32)
+        padded[0, :chunk] = slot.prompt[matched:matched + chunk]
+        row = np.full((row_len,), pc.NULL_PAGE, np.int32)
+        row[:len(slot.pages)] = slot.pages
+        npp = _pow2_pages(pc.pages_needed(matched, page), row_len)
+        tok0 = (self.backend.admit_prefix(padded, i, matched, chunk, row,
+                                          n_prefix_pages=npp)
+                if chunk == suffix_len else
+                self.backend.prefill_chunk(padded, i, matched, chunk, row,
+                                           n_prefix_pages=npp))
+        slot.prefilled = matched + chunk
+        self.stats["prefill_tokens"] += chunk
+        if slot.prefilling:
+            self.stats["prefill_chunks"] += 1
+        else:
+            self._complete_prefill(slot, tok0)
+        return None if budget is None else budget - spad
+
+    def _try_resume_idle(self, budget: Optional[int]) -> Optional[int]:
+        """Queue-head session reuse of a LIVE idle slot: the previous
+        turn's KV never left the device, so the new turn — which must
+        extend the prior context token-for-token — rejoins IN PLACE
+        with a suffix prefill over just the tokens it appends (plus the
+        one unwritten last token).  FCFS: only the head may jump back
+        into its old slot.  A head whose prompt does not extend the
+        context drops the stale session and admits cold."""
+        if not self.queue:
+            return budget
+        req = self.queue[0]
+        if req.session is None or req.uid in self._resume:
+            return budget
+        i = self._find_idle(req.session)
+        if i is None:
+            return budget
+        slot = self.slots[i]
+        ctx = slot.prompt_len + len(slot.generated)
+        plen = len(req.prompt)
+        context = np.concatenate(
+            [slot.prompt, np.asarray(slot.generated, np.int32)])
+        if plen < ctx or not np.array_equal(req.prompt[:ctx], context):
+            self.backend.release_slot(i)
+            self.alloc.free(slot.pages)
+            self.slots[i] = None
+            self.stats["idle_drops"] += 1
+            return budget
+        if budget is not None and self._chunk_quota(budget) == 0:
+            return budget
+        written = ctx - 1
+        headroom = self.num_active
+        extra = max(pc.pages_needed(plen, self.cfg.page_size),
+                    len(slot.pages)) - len(slot.pages)
+        slot.idle = False          # claim the slot: _reserve must not park it
+        if extra > 0:
+            if not self._reserve(extra + headroom):
+                slot.idle = True
+                return budget      # FCFS: wait for pages
+            slot.pages.extend(self.alloc.alloc(extra))
+        self.queue.popleft()
+        slot.uid = req.uid
+        slot.prompt = req.prompt
+        slot.prompt_len = plen
+        slot.max_new = req.max_new_tokens
+        slot.generated = []
+        slot.draft = None
+        slot.last_token = -1
+        slot.prefilled = written
+        slot.admit_seq = self._admit_seq
+        slot.deadline_s = req.deadline_s
+        slot.retries_left = req.retries
+        slot.arrival_t = req.arrival_t
+        self._admit_seq += 1
+        self.stats["admitted"] += 1
+        self.stats["session_reuses"] += 1
+        self.stats["session_prompt_tokens"] += plen
+        self.stats["session_hit_tokens"] += written
+        try:
+            return self._first_chunk(i, budget, written)
+        except Exception:
+            # zero-lost: a backend dying mid-rejoin must not strand the
+            # popped request — the held KV is lost but the request
+            # recomputes cleanly on whoever adopts it
+            self.alloc.free(slot.pages)
+            self.slots[i] = None
+            self.queue.appendleft(req)
+            raise
+
+    def _parked_key(self, req: Request) -> Optional[tuple]:
+        """Host-pool key a queued request can resume from, if any:
+        swapped-out victims by uid, parked idle sessions by session."""
+        if self.host_pool is None:
+            return None
+        if ("uid", req.uid) in self.host_pool:
+            return ("uid", req.uid)
+        if (req.session is not None
+                and ("sess", req.session) in self.host_pool):
+            return ("sess", req.session)
+        return None
+
+    def _admit_swapped(self, i: int, req: Request, key: tuple,
+                       budget: Optional[int]
+                       ) -> Tuple[str, Optional[int]]:
+        """Swap-IN admission: scatter a parked record's pages into
+        freshly allocated device pages, then rejoin via the standard
+        suffix-prefill path (``_first_chunk`` re-prefills the one
+        unwritten last context token, installing the block-table row
+        and pos) — token-identical to the recompute resume at a page
+        transfer instead of a full re-prefill.  Returns a status:
+        "admitted" (with the remaining budget), "wait" (FCFS — pages
+        or budget short, retry next iteration), or "miss" (record
+        stale/unusable and dropped; caller admits cold)."""
+        page = self.cfg.page_size
+        rec = self.host_pool.peek(key)
+        plen = len(req.prompt)
+        if (plen <= rec.written
+                or not np.array_equal(req.prompt[:len(rec.context)],
+                                      rec.context)):
+            # prompt does not extend the parked context: stale record
+            self.host_pool.drop(key)
+            self.stats["idle_drops"] += 1
+            return ("miss", budget)
+        if budget is not None and self._chunk_quota(budget) == 0:
+            return ("wait", budget)
+        n_total = max(pc.pages_needed(plen, page), rec.n_pages)
+        headroom = self.num_active
+        if not self._reserve(n_total + headroom):
+            if self.num_active == 0:
+                # nothing will ever free pages — degrade to the cold
+                # path, whose own attempt ladder is guaranteed to
+                # terminate (submit() checked the solo fit)
+                self.host_pool.drop(key)
+                return ("miss", budget)
+            return ("wait", budget)
+        self.queue.popleft()
+        pages = self.alloc.alloc(n_total)
+        try:
+            self.backend.swap_in(rec.blob, pages[:rec.n_pages])
+        except Exception:
+            # zero-lost: restore the head; the record stays parked for
+            # the retry (or dies with the replica)
+            self.alloc.free(pages)
+            self.queue.appendleft(req)
+            raise
+        self.host_pool.take(key)
+        slot = _Slot(req.uid, req.prompt, plen, req.max_new_tokens, pages,
+                     -1, self._admit_seq, [], None, prefilled=rec.written,
+                     deadline_s=req.deadline_s, retries_left=req.retries,
+                     arrival_t=req.arrival_t, session=req.session)
+        self.slots[i] = slot
+        self._admit_seq += 1
+        self.stats["admitted"] += 1
+        self.stats["swap_ins"] += 1
+        self.stats["swapped_in_pages"] += rec.n_pages
+        if req.uid in self._resume:
+            # swapped-out preemption victim: count like recompute
+            # resumes (the prompt includes prior output), not honest
+            # new-prompt traffic
+            self.stats["recompute_prompt_tokens"] += plen
+            self.stats["recompute_hit_tokens"] += rec.written
+        else:
+            self.stats["session_prompt_tokens"] += plen
+            self.stats["session_hit_tokens"] += rec.written
+        try:
+            budget = self._first_chunk(i, budget, rec.written)
+        except Exception:
+            self.alloc.free(slot.pages)
+            self.slots[i] = None
+            self.queue.appendleft(req)
+            raise
+        return ("admitted", budget)
+
     def _admit(self) -> None:
         page = self.cfg.page_size
         row_len = self.layout.slots_pages(self.cfg.max_seq)
         budget = (self.cfg.prefill_chunk_tokens
                   if self.cfg.prefill_chunk_tokens else None)
         budget = self._continue_prefills(budget)
+        budget = self._try_resume_idle(budget)
         for i, slot in enumerate(self.slots):
             if slot is not None or not self.queue:
                 continue
             if budget is not None and self._chunk_quota(budget) == 0:
                 break                 # this iteration's prefill budget spent
             req = self.queue[0]
+            if (req.session is not None and req.uid not in self._resume
+                    and self._find_idle(req.session) is not None):
+                break   # head rejoins its live idle slot once budget allows
+            key = self._parked_key(req)
+            if key is not None:
+                status, budget = self._admit_swapped(i, req, key, budget)
+                if status == "admitted":
+                    continue
+                if status == "wait":
+                    break             # FCFS: don't starve the head
+                # "miss": record dropped — fall through to cold admission
             plen = len(req.prompt)
             n_prompt_pages = pc.pages_needed(plen, page)
             match = (self.prefix_cache.lookup(req.prompt)
@@ -704,7 +1119,7 @@ class ContinuousBatchingEngine:
                          pages, -1, self._admit_seq, [], None,
                          prefilled=matched + chunk,
                          deadline_s=req.deadline_s, retries_left=req.retries,
-                         arrival_t=req.arrival_t)
+                         arrival_t=req.arrival_t, session=req.session)
             self.slots[i] = slot
             self._admit_seq += 1
             self.stats["admitted"] += 1
@@ -754,13 +1169,52 @@ class ContinuousBatchingEngine:
                 assert victim is not None    # slot i itself is live
                 # drop any block-table updates queued for the victim
                 updates = [u for u in updates if u[0] != victim]
-                self._preempt(victim)
+                # evict→SWAP→preempt: park the victim's KV in the host
+                # pool when it fits (resume = scatter + 1-token rejoin),
+                # recompute-preempt only when the host tier is dry too
+                if not self._swap_out(victim):
+                    self._preempt(victim)
         if updates:
             self.backend.write_block_entries(updates)
 
+    def _session_held(self, session: int, exclude: int) -> bool:
+        """True when the session already has keep-alive state somewhere
+        else — another slot or a parked record (stale duplicates would
+        make resume ambiguous)."""
+        for j, s in enumerate(self.slots):
+            if j != exclude and s is not None and s.session == session:
+                return True
+        return (self.host_pool is not None
+                and ("sess", session) in self.host_pool)
+
     def _finish(self, completions: List[Completion]) -> None:
         for i, slot in enumerate(self.slots):
-            if slot is None or not slot.done:
+            if slot is None or slot.idle or not slot.done:
+                continue
+            if (slot.session is not None
+                    and not self._session_held(slot.session, i)):
+                # session keep-alive: emit the turn's completion but
+                # HOLD the slot idle — pages and device KV stay, so the
+                # next turn rejoins with a one-token suffix prefill.
+                # Pressure (_reserve) or the idle timer parks it to the
+                # host pool; end_session() releases it for good.
+                res = self._resume.pop(slot.uid, None)
+                prior = res.prior if res is not None else []
+                plen0 = (res.orig_prompt_len if res is not None
+                         else slot.prompt_len)
+                toks = prior + slot.generated[:slot.max_new]
+                completions.append(Completion(
+                    slot.uid, plen0, np.asarray(toks, np.int32)))
+                # reset the backend row/pos NOW: inactive lanes still
+                # WRITE junk KV every decode step (at their pinned pos
+                # 0), and only a NULL block-table row steers those
+                # writes onto the sacrificial null page instead of this
+                # slot's held pages.  Rejoin reinstalls row + pos via
+                # the suffix prefill, so nothing is lost.
+                self.backend.release_slot(i)
+                slot.idle = True
+                slot.idle_since = self.stats["iterations"]
+                self.stats["finished"] += 1
                 continue
             self.backend.release_slot(i)  # device first (see _preempt)
             self.alloc.free(slot.pages)
@@ -773,6 +1227,40 @@ class ContinuousBatchingEngine:
             self.slots[i] = None
             self.stats["finished"] += 1
 
+    def end_session(self, session: int) -> None:
+        """Release a session's keep-alive state: the live idle slot's
+        device pages and/or its parked host record.  Drivers call this
+        after a conversation's last turn; without it the session holds
+        its tier until pressure parks and eventually drops it."""
+        i = self._find_idle(session)
+        if i is not None:
+            slot = self.slots[i]
+            self.backend.release_slot(i)
+            self.alloc.free(slot.pages)
+            self.slots[i] = None
+        if self.host_pool is not None:
+            self.host_pool.drop(("sess", session))
+
+    def check_invariants(self) -> None:
+        """Audit mode (``SchedulerConfig.debug_invariants``): allocator
+        + host-pool invariants plus slot/page cross-checks, run after
+        every ``step()`` so a refcount bug surfaces at the iteration
+        that caused it rather than at drain."""
+        self.alloc.check()
+        if self.host_pool is not None:
+            self.host_pool.check()
+        for s in self.slots:
+            if s is None:
+                continue
+            assert len(set(s.pages)) == len(s.pages), \
+                f"slot {s.uid} holds duplicate pages: {s.pages}"
+            for p in s.pages:
+                assert p != pc.NULL_PAGE and self.alloc.refcount(p) >= 1, \
+                    f"slot {s.uid} references free/null page {p}"
+            if s.idle:
+                assert s.session is not None and s.done, \
+                    f"idle slot {s.uid} without a finished session turn"
+
     def step(self) -> List[Completion]:
         """Grow + admit + decode one WINDOW (one token unless speculating)
         for every live slot; returns the requests that finished this
@@ -784,8 +1272,36 @@ class ContinuousBatchingEngine:
         fresh page — and, under speculation, every slot's drafted window
         width (a verify step scatters up to ``spec_k`` rows).
         """
+        completions = self._step_impl()
+        if self.cfg.debug_invariants:
+            self.check_invariants()
+        return completions
+
+    def _park_idle_expired(self) -> None:
+        """Idle-timer parking: once a session slot has sat idle for
+        ``idle_park_iterations`` scheduler iterations, move its KV to
+        the host pool proactively — long gaps between chat turns should
+        not hold device pages hostage.  Sessions with a turn already
+        queued are skipped (parking them would buy a pointless
+        round trip)."""
+        if self.host_pool is None or self.cfg.idle_park_iterations <= 0:
+            return
+        idle = self._idle_slots_lru()
+        if not idle:
+            return
+        waiting = {r.session for r in self.queue if r.session is not None}
+        for i in idle:
+            slot = self.slots[i]
+            if slot.session in waiting:
+                continue
+            if (self.stats["iterations"] - slot.idle_since
+                    >= self.cfg.idle_park_iterations):
+                self._park_idle(i)
+
+    def _step_impl(self) -> List[Completion]:
         completions: List[Completion] = []
         self._shed_expired(completions)   # deadline-expired queued work
+        self._park_idle_expired()         # idle sessions past the timer
         self._grow()                      # may preempt; slots can change
         self._admit()
         self._finish(completions)         # max_new == 1 finishes at prefill

@@ -592,6 +592,88 @@ def test_failover_recovery_cost_regimes():
                                context_tokens=-1.0)
 
 
+def test_swap_vs_recompute_crossover():
+    """The host-tier trade behind the scheduler's evict→swap→preempt
+    escalation: int4 pages round-tripping the boards' own h2d links
+    beat re-prefill on every paper edge board (quantization is what
+    makes the swap tier pay), while fp32 pages over a throttled link
+    on the Jetson — fast compute, slow copy path — flip back to the
+    recompute regime."""
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import swap_vs_recompute
+    from repro.serve.paged_cache import plan_for_layout
+    layout = lm.PagedLayout(num_pages=257, page_size=16, pages_per_slot=32)
+    full = ASSIGNED["granite-3-8b"]
+    kw = dict(context_tokens=512.0)
+
+    for board in ("rpi4", "rpi5", "jetson_orin_nano"):
+        r = swap_vs_recompute(full, hardware.get(board),
+                              prec_mod.get("int4"),
+                              plan_for_layout(full, layout, "int4"), **kw)
+        assert r["cheaper"] == "swap", board
+        assert r["swap_s"] * 10 < r["reprefill_s"], board
+
+    slow = hardware.get("jetson_orin_nano").with_(h2d_bw=50e6)
+    r = swap_vs_recompute(full, slow, prec_mod.get("fp32"),
+                          plan_for_layout(full, layout, "fp32"), **kw)
+    assert r["cheaper"] == "reprefill"
+
+    # dtype monotonicity on one board: int4 pages are ~1/8 the bytes
+    hw = hardware.get("rpi5")
+    s = {d: swap_vs_recompute(full, hw, prec_mod.get(d),
+                              plan_for_layout(full, layout, d), **kw)["swap_s"]
+         for d in ("fp32", "int8", "int4")}
+    assert s["int4"] < s["int8"] < s["fp32"]
+
+    # transfers move WHOLE pages (the backend's gather/scatter
+    # granularity): one token still pays one page each way, and the
+    # host tier holds host_mem_capacity / swap_bytes such contexts
+    plan = plan_for_layout(full, layout, "fp32")
+    one = swap_vs_recompute(full, hw, prec_mod.get("fp32"), plan,
+                            context_tokens=1.0)
+    assert one["swap_bytes"] == plan.page_bytes
+    assert one["swap_s"] == one["swap_out_s"] + one["swap_in_s"]
+    assert one["host_capacity_contexts"] == (hw.host_mem_capacity
+                                             / plan.page_bytes)
+    zero = swap_vs_recompute(full, hw, prec_mod.get("fp32"), plan,
+                             context_tokens=0.0)
+    assert zero["swap_bytes"] == 0.0
+    assert zero["host_capacity_contexts"] == float("inf")
+    with pytest.raises(ValueError):
+        swap_vs_recompute(full, hw, prec_mod.get("fp32"), plan,
+                          context_tokens=-1.0)
+
+
+def test_predict_serve_throughput_parked_context():
+    """``parked_context_tokens`` threads the swap crossover into the
+    serve prediction: the result gains the resume-vs-recompute TTFT
+    pair the ``--swap`` gate prints against, absent without the
+    kwarg, and on an edge board with int4 pages the parked resume is
+    predicted cheaper."""
+    from repro.core import hardware, precision as prec_mod
+    from repro.core.latency import predict_serve_throughput
+    from repro.serve.paged_cache import plan_for_layout
+    layout = lm.PagedLayout(num_pages=257, page_size=16, pages_per_slot=32)
+    full = ASSIGNED["granite-3-8b"]
+    hw = hardware.get("rpi5")
+    plan = plan_for_layout(full, layout, "int4")
+    kw = dict(slots=4, avg_prompt=128.0, avg_new=64.0)
+    base = predict_serve_throughput(full, hw, prec_mod.get("int4"), plan,
+                                    **kw)
+    assert "swap_in_s" not in base and "swap_cheaper" not in base
+    out = predict_serve_throughput(full, hw, prec_mod.get("int4"), plan,
+                                   parked_context_tokens=256.0, **kw)
+    assert out["parked_context_tokens"] == 256.0
+    assert out["swap_cheaper"] == 1.0
+    assert out["predicted_resume_ttft_s"] < out["predicted_recompute_ttft_s"]
+    # both TTFTs share the admission iteration; the gap is the leg cost
+    assert (out["predicted_recompute_ttft_s"]
+            - out["predicted_resume_ttft_s"]) == pytest.approx(
+        out["reprefill_s"] - out["swap_in_s"])
+    # the throughput cells themselves are untouched by the kwarg
+    assert out["continuous_tokens_per_s"] == base["continuous_tokens_per_s"]
+
+
 def test_serve_availability_capacity_and_recovery():
     """Replicas are independent engines, so ``failed`` of ``dp`` dead
     leaves exactly the survivors' share of capacity, the survivors see

@@ -25,6 +25,36 @@ def test_calibrate_fits_paper_numbers():
         assert 0.05 <= report[f] <= 1.0
 
 
+def test_calibrate_h2d_observation_roundtrip():
+    """An h2d-transfer observation pins ``u_h2d`` exactly: synthesize a
+    measured KV-blob copy time from a known utilization ON the fit's
+    search grid (``geomspace(0.05, 1.0, 25)`` — grid point 18), then
+    recover it.  The e2e observations alone leave ``u_h2d`` smeared
+    across the cold-start residual; the swap crossover
+    (``latency.swap_vs_recompute``) divides by ``h2d_bw x u_h2d``, so
+    this is the term the swap tier's predictions stand on."""
+    true_u = float(np.geomspace(0.05, 1.0, 25)[18])   # ~0.473
+    hw = hw_mod.RPI5
+    blob = 96e6                                       # one parked context
+    measured = blob / (hw.h2d_bw * true_u)
+    obs = [Observation(LLAMA32_1B, "int4", measured, kind="h2d",
+                       transfer_bytes=blob)]
+    fitted, report = calibrate(hw.with_(u_h2d=0.80), obs, iters=10)
+    assert report["u_h2d"] == pytest.approx(true_u)
+    key = f"pred_h2d_{int(blob)}B"
+    assert report[key] == pytest.approx(measured)
+    # other factors never moved: the h2d predictor only sees u_h2d
+    for f in ("u_compute", "u_memory", "u_storage", "u_net"):
+        assert report[f] == getattr(hw, f)
+    # and the fitted spec feeds the crossover directly
+    assert fitted.u_h2d == pytest.approx(true_u)
+    with pytest.raises(ValueError):
+        Observation(LLAMA32_1B, "int4", 1.0, kind="h2d")
+    with pytest.raises(ValueError):
+        Observation(LLAMA32_1B, "int4", 1.0, kind="d2h",
+                    transfer_bytes=blob)
+
+
 def test_parse_collective_bytes_symbol_table():
     hlo = """
 HloModule test

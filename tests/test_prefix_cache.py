@@ -100,6 +100,77 @@ def test_allocator_share_free_null_rejected():
     alloc.check()
 
 
+def _drive_evict_cow_share(ops):
+    """Walk one op tape of ``PrefixCache.evict`` interleaved with
+    admission-style sharing and mid-page copy-on-write: requests share
+    cached full pages, CoW a partial hit into a fresh page (the SOURCE
+    page stays the store's — exactly what ``copy_page`` does on
+    device), and LRU eviction drains only store-only pages.  Asserts
+    no request-held page is ever freed out from under its holder and
+    the allocator invariants hold after every op."""
+    alloc = pc.PageAllocator(24)
+    store = pc.PrefixCache(alloc, page_size=4)
+    base = np.arange(1000, dtype=np.int32)
+    chains = []                     # registered prompts
+    requests = {}                   # rid -> pages held (with multiplicity)
+    next_rid = 0
+    for kind, arg in ops:
+        if kind == 0:               # register a fresh unique chain
+            plen = 3 + arg % 9
+            prompt = np.concatenate(
+                [np.asarray([2000 + len(chains)], np.int32),
+                 base[:plen]])
+            n = pc.pages_needed(len(prompt), 4)
+            if alloc.can_alloc(n):
+                pages = alloc.alloc(n)
+                store.register_prompt(prompt, pages)
+                alloc.free(pages)   # owner finishes; store-only now
+                chains.append(prompt)
+        elif kind == 1 and chains:  # admission hit: share + CoW
+            prompt = chains[arg % len(chains)]
+            ext = np.concatenate([prompt, base[900:901]])
+            m = store.lookup(ext)
+            held = list(m.full_pages)
+            if held:
+                alloc.share(held)
+            if m.partial is not None and alloc.can_alloc(1):
+                # CoW: sharer appends into a COPY; source stays
+                held.extend(alloc.alloc(1))
+            if held:
+                requests[next_rid] = held
+                next_rid += 1
+        elif kind == 2 and requests:   # a request finishes
+            rid = sorted(requests)[arg % len(requests)]
+            alloc.free(requests.pop(rid))
+        elif kind == 3:             # pressure: LRU evict
+            want = 1 + arg % 4
+            before = alloc.free_pages
+            freed = store.evict(want)
+            assert freed <= want
+            assert alloc.free_pages == before + freed
+        # no request-held page may lose its reference
+        for pages in requests.values():
+            for p in set(pages):
+                assert alloc.refcount(p) >= pages.count(p)
+        alloc.check()
+    for pages in requests.values():
+        alloc.free(pages)
+    store.flush()
+    alloc.check()
+    assert alloc.free_pages == 23
+
+
+def test_prefix_store_evict_cow_share_numpy_interleavings():
+    """150 random evict x CoW x share tapes (always runs, no dev
+    deps needed — the hypothesis property below shrinks failures
+    where it is installed)."""
+    for seed in range(150):
+        rng = np.random.default_rng(seed)
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(0, 10 ** 6)))
+               for _ in range(120)]
+        _drive_evict_cow_share(ops)
+
+
 # hypothesis property: random op tapes never violate the invariants.
 # Imported guardedly (NOT module-level importorskip) so the numpy sweep
 # above still runs where dev deps are absent.
@@ -146,11 +217,25 @@ if _HAVE_HYPOTHESIS:
             alloc.free([p] * c)
         alloc.check()
         assert alloc.free_pages == 16
+if _HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 10 ** 6)),
+                    min_size=1, max_size=120))
+    @settings(max_examples=150, deadline=None)
+    def test_prefix_store_evict_cow_share_property(ops):
+        """Shrinking search over the same evict x CoW x share tape
+        walker the numpy sweep drives (``_drive_evict_cow_share``)."""
+        _drive_evict_cow_share(ops)
 else:
     @pytest.mark.skip(reason="hypothesis not installed (see "
                              "requirements-dev.txt); the numpy "
                              "interleaving sweep covers the invariants")
     def test_allocator_refcount_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed (see "
+                             "requirements-dev.txt); the engine-level "
+                             "prefix/preemption tests cover evict + CoW")
+    def test_prefix_store_evict_cow_share_property():
         pass
 
 
@@ -250,7 +335,8 @@ def _run_engine(params, spec, reqs, dtype="fp32", prefix=True, **kw):
     cfg = SchedulerConfig(max_slots=kw.get("slots", 3), page_size=16,
                           max_seq=kw.get("max_seq", 96),
                           num_pages=kw.get("num_pages", 48),
-                          cache_dtype=dtype, enable_prefix_cache=prefix)
+                          cache_dtype=dtype, enable_prefix_cache=prefix,
+                          debug_invariants=True)
     eng = ContinuousBatchingEngine(params, spec, cfg)
     done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
                     for r in reqs])

@@ -247,3 +247,60 @@ assert abs(p4.page_bytes * 4 - p1.page_bytes) < 1e-6
 print('OK')
 """)
     assert "OK" in out
+
+
+@pytest.mark.parametrize("cache_dtype", ["fp32", "int8", "int4"])
+def test_sharded_backend_swap_roundtrip_and_parity(cache_dtype):
+    """Host-tier swap on the tp=2 sharded pool: (a) a swap_out blob
+    scattered back into DIFFERENT pages gathers byte-identically (the
+    per-shard gather reassembles the GLOBAL page host-side, so the
+    blob is layout-independent), and (b) an engine under pool pressure
+    that swaps instead of preempting stays within the tolerance band
+    of the single-device no-swap output, with the host pool drained."""
+    out = _run(PRELUDE + f"""
+cfg = SchedulerConfig(max_slots=3, page_size=16, max_seq=96, num_pages=24,
+                      cache_dtype={cache_dtype!r})
+backend = make_backend(params, spec, cfg, devices=2)
+eng = ContinuousBatchingEngine(params, spec, cfg, backend=backend)
+# write real KV into some pages via a normal admission
+rng = np.random.default_rng(0)
+eng.submit(Request(0, rng.integers(0, 128, size=40).astype(np.int32), 4))
+eng.step()
+pages = list(eng.slots[0].pages)
+assert len(pages) >= 2
+blob = eng.backend.swap_out(pages)
+spare = [p for p in range(1, 24) if p not in pages][:len(pages)]
+eng.backend.swap_in(blob, spare)
+back = eng.backend.swap_out(spare)
+for a, b in zip(jax.tree_util.tree_leaves(blob),
+                jax.tree_util.tree_leaves(back)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+# engine-level parity: tight pool forces the swap tier under tp=2
+rng = np.random.default_rng(1)
+reqs = [Request(i, rng.integers(1, 128,
+                size=int(rng.integers(12, 28))).astype(np.int32), 16)
+        for i in range(5)]
+
+def go(tp, host_bytes):
+    cfg = SchedulerConfig(max_slots=3, page_size=8, max_seq=64, num_pages=12,
+                          cache_dtype={cache_dtype!r},
+                          host_pool_bytes=host_bytes, debug_invariants=True)
+    backend = make_backend(params, spec, cfg, devices=tp)
+    eng = ContinuousBatchingEngine(params, spec, cfg, backend=backend)
+    done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                    for r in reqs])
+    eng.alloc.check()
+    return sorted(done, key=lambda c: c.uid), eng
+
+base, _ = go(1, None)
+done, eng2 = go(2, 50e6)
+assert eng2.backend.pools_sharded
+assert eng2.stats['swap_outs'] > 0, eng2.stats
+assert len(eng2.host_pool) == 0
+for a, b in zip(base, done):
+    assert_close_tokens(a.tokens, b.tokens,
+                        context=f'{cache_dtype} uid={{a.uid}}')
+print('OK')
+""")
+    assert "OK" in out

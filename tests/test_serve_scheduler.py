@@ -168,7 +168,8 @@ def test_scheduler_matches_static_generate_mixed_lengths():
     shapes = [(8, 5), (13, 7), (24, 3), (5, 9), (17, 4), (30, 6), (9, 8)]
     reqs = [Request(i, rng.integers(0, 128, size=l).astype(np.int32), n)
             for i, (l, n) in enumerate(shapes)]
-    cfg = SchedulerConfig(max_slots=3, page_size=8, max_seq=64, num_pages=30)
+    cfg = SchedulerConfig(max_slots=3, page_size=8, max_seq=64, num_pages=30,
+                          debug_invariants=True)
     eng = ContinuousBatchingEngine(params, spec, cfg)
     done = eng.run(list(reqs))
     assert [c.uid for c in done] == list(range(len(reqs)))
@@ -197,7 +198,8 @@ def test_scheduler_queue_backpressure():
     reqs = [Request(i, rng.integers(0, 128, size=20).astype(np.int32), 6)
             for i in range(6)]
     # pool fits ~2 requests' worth of pages at a time
-    cfg = SchedulerConfig(max_slots=4, page_size=8, max_seq=48, num_pages=9)
+    cfg = SchedulerConfig(max_slots=4, page_size=8, max_seq=48, num_pages=9,
+                          debug_invariants=True)
     eng = ContinuousBatchingEngine(params, spec, cfg)
     done = eng.run(list(reqs))
     assert len(done) == 6 and all(len(c.tokens) == 6 for c in done)
@@ -325,7 +327,8 @@ def test_chunked_prefill_outputs_identical(cache_dtype):
     for chunk in (0, budget):
         cfg = SchedulerConfig(max_slots=3, page_size=8, max_seq=80,
                               num_pages=40, cache_dtype=cache_dtype,
-                              prefill_chunk_tokens=chunk)
+                              prefill_chunk_tokens=chunk,
+                              debug_invariants=True)
         eng = ContinuousBatchingEngine(params, spec, cfg)
         rec = _RecordingBackend(eng.backend)
         eng.backend = rec
@@ -367,7 +370,8 @@ def test_chunked_prefill_composes_with_prefix_cache():
     for chunk in (0, 16):
         cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=64,
                               num_pages=40, enable_prefix_cache=True,
-                              prefill_chunk_tokens=chunk)
+                              prefill_chunk_tokens=chunk,
+                              debug_invariants=True)
         eng = ContinuousBatchingEngine(params, spec, cfg)
         done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
                         for r in reqs])
@@ -392,7 +396,8 @@ def test_chunked_prefill_under_preemption_and_recompute_stats():
     reqs = [Request(i, rng.integers(0, 128, size=16).astype(np.int32), 20)
             for i in range(5)]
     cfg = SchedulerConfig(max_slots=4, page_size=8, max_seq=48,
-                          num_pages=10, prefill_chunk_tokens=16)
+                          num_pages=10, prefill_chunk_tokens=16,
+                          debug_invariants=True)
     eng = ContinuousBatchingEngine(params, spec, cfg)
     done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
                     for r in reqs])
@@ -456,7 +461,8 @@ def test_spec_window_preemption_block_tables_consistent():
 
     def go(k):
         cfg = SchedulerConfig(max_slots=4, page_size=8, max_seq=48,
-                              num_pages=10, spec_k=k)
+                              num_pages=10, spec_k=k,
+                              debug_invariants=True)
         eng = ContinuousBatchingEngine(params, spec, cfg)
         holder = {'eng': eng}
         eng.backend = _BlockTableAuditBackend(eng.backend, lambda: holder)
@@ -472,3 +478,241 @@ def test_spec_window_preemption_block_tables_consistent():
     for a, b in zip(base, spec_done):
         assert a.uid == b.uid
         np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ---------------------------------------------------------------------------
+# Host-tier KV swapping + multi-turn sessions
+# ---------------------------------------------------------------------------
+
+def test_host_page_pool_bookkeeping():
+    """Byte-budgeted host pool: park/peek/take/drop with exact byte
+    accounting, duplicate keys rejected, over-budget parks raise
+    (callers degrade to recompute), and ``check()`` holds throughout."""
+    blob = [np.zeros((2, 8, 2, 4), np.float32)]
+    rec = pc.ParkedKV(context=np.arange(5, dtype=np.int32), written=4,
+                      n_pages=2, blob=blob, nbytes=pc.blob_nbytes(blob))
+    pool = pc.HostPagePool(3 * rec.nbytes)
+    assert pool.can_park(rec.nbytes)
+    pool.park(("sess", 1), rec)
+    pool.check()
+    assert ("sess", 1) in pool and len(pool) == 1
+    assert pool.used_bytes == rec.nbytes
+    assert pool.free_bytes == 2 * rec.nbytes
+    with pytest.raises(ValueError):
+        pool.park(("sess", 1), rec)           # duplicate key
+    big = pc.ParkedKV(context=rec.context, written=4, n_pages=2,
+                      blob=blob, nbytes=3 * rec.nbytes)
+    assert not pool.can_park(big.nbytes)
+    with pytest.raises(MemoryError):
+        pool.park(("sess", 2), big)
+    assert pool.peek(("sess", 1)) is rec      # peek never removes
+    assert pool.take(("sess", 1)) is rec
+    assert pool.used_bytes == 0 and len(pool) == 0
+    assert pool.resumed_total == 1
+    pool.park(("uid", 7), rec)
+    assert pool.drop(("uid", 7)) and not pool.drop(("uid", 7))
+    pool.check()
+    with pytest.raises(ValueError):
+        pc.HostPagePool(0)
+
+
+@pytest.mark.parametrize("cache_dtype", ["fp32", "int8", "int4"])
+def test_swap_tier_replaces_preemption_token_identical(cache_dtype):
+    """Pool pressure with a host pool: the victim SWAPS instead of
+    preempting, its resume scatters the parked pages back and prefills
+    one token, and every output is token-for-token the recompute-only
+    engine's.  The pool drains fully — no blob outlives its request."""
+    spec, params = _setup()
+    rng = np.random.default_rng(1)
+    reqs = [Request(i, rng.integers(1, 128,
+                                    size=int(rng.integers(12, 28))).astype(
+                        np.int32), 16)
+            for i in range(5)]
+
+    def go(host_bytes):
+        cfg = SchedulerConfig(max_slots=3, page_size=8, max_seq=64,
+                              num_pages=12, cache_dtype=cache_dtype,
+                              host_pool_bytes=host_bytes,
+                              debug_invariants=True)
+        eng = ContinuousBatchingEngine(params, spec, cfg)
+        done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                        for r in reqs])
+        return eng, sorted(done, key=lambda c: c.uid)
+
+    base_eng, base = go(None)
+    swap_eng, got = go(50e6)
+    assert base_eng.stats["preemptions"] > 0, "pool sized to force pressure"
+    assert swap_eng.stats["swap_outs"] > 0
+    assert swap_eng.stats["swap_ins"] == swap_eng.stats["swap_outs"]
+    assert swap_eng.stats["swapped_in_pages"] == \
+        swap_eng.stats["swapped_out_pages"]
+    assert swap_eng.stats["preemptions"] < base_eng.stats["preemptions"]
+    for a, b in zip(base, got):
+        assert a.uid == b.uid
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    assert len(swap_eng.host_pool) == 0 and swap_eng.host_pool.used_bytes == 0
+    swap_eng.alloc.check()
+
+
+def test_session_rejoins_idle_slot_in_place():
+    """A finished turn with a session id holds its slot IDLE (KV on
+    device); the next turn extends the context and rejoins with a
+    suffix-only prefill.  Tokens match a sessionless engine that
+    re-prefills the full transcript, and the hit accounting shows the
+    prefill actually skipped the held context."""
+    spec, params = _setup()
+    rng = np.random.default_rng(2)
+    p1 = rng.integers(1, 128, size=14).astype(np.int32)
+    cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=96, num_pages=24,
+                          debug_invariants=True)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    t1 = eng.run([Request(0, p1.copy(), 8, session=7)])[0]
+    assert eng.num_idle == 1 and eng.num_active == 0
+    assert eng.pending_cost == 0          # idle slots are not device load
+
+    extra = rng.integers(1, 128, size=6).astype(np.int32)
+    p2 = np.concatenate([p1, t1.tokens, extra])
+    # a queued follow-up turn charges its SUFFIX, not the held context
+    eng.submit(Request(1, p2.copy(), 8, session=7))
+    assert eng.pending_cost < _bucket(len(p2), cfg.page_size,
+                                      cfg.max_seq) + 8
+    done = []
+    while eng.num_active or eng.queue:
+        done.extend(eng.step())
+    t2 = done[0]
+    assert eng.stats["session_reuses"] == 1
+    assert eng.stats["session_hit_tokens"] >= len(p1) + len(t1.tokens) - 1
+
+    fresh = ContinuousBatchingEngine(params, spec, cfg)
+    ref2 = fresh.run([Request(1, p2.copy(), 8)])[0]
+    np.testing.assert_array_equal(t2.tokens, ref2.tokens)
+
+    eng.end_session(7)
+    assert eng.num_idle == 0
+    eng.prefix_cache.flush() if eng.prefix_cache is not None else None
+    eng.alloc.check()
+
+
+def test_idle_slot_kv_immutable_under_unrelated_traffic():
+    """An idle session slot's held pages are byte-immutable while other
+    requests decode.  Inactive lanes still WRITE their (junk) KV every
+    decode step at their pinned pos 0, and only a NULL block-table row
+    — reset at the idle transition — steers those writes onto the
+    sacrificial null page.  Regression: the row used to stay installed
+    across the idle window, so every unrelated decode iteration wrote
+    junk into the held context's first page (plus one write at the old
+    pos) and the rejoined turn decoded over corrupted KV.  The token-
+    identity tests alone missed it at toy width (argmax happened not
+    to flip), so this pins the page BYTES, not the outputs."""
+    spec, params = _setup()
+    rng = np.random.default_rng(6)
+    p1 = rng.integers(1, 128, size=14).astype(np.int32)
+    cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=96, num_pages=24,
+                          host_pool_bytes=50e6,
+                          idle_park_iterations=10_000,   # timer never fires
+                          debug_invariants=True)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    t1 = eng.run([Request(0, p1.copy(), 8, session=7)])[0]
+    idle = next(s for s in eng.slots if s is not None and s.idle)
+    before = eng.backend.swap_out(idle.pages)
+    eng.run([Request(100 + i,
+                     rng.integers(1, 128, size=10).astype(np.int32), 6)
+             for i in range(3)])
+    assert eng.num_idle == 1 and eng.stats["idle_parks"] == 0
+    after = eng.backend.swap_out(idle.pages)
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the rejoin over those pages still matches a fresh engine
+    extra = rng.integers(1, 128, size=6).astype(np.int32)
+    p2 = np.concatenate([p1, t1.tokens, extra])
+    t2 = eng.run([Request(1, p2.copy(), 8, session=7)])[0]
+    assert eng.stats["session_reuses"] == 1
+    fresh = ContinuousBatchingEngine(params, spec, cfg)
+    ref2 = fresh.run([Request(1, p2.copy(), 8)])[0]
+    np.testing.assert_array_equal(t2.tokens, ref2.tokens)
+    eng.end_session(7)
+    eng.alloc.check()
+
+
+def test_session_parks_to_host_and_swaps_back():
+    """The idle timer parks a session's KV to the host pool (device
+    pages freed); the next turn swaps it back in and continues
+    token-identically.  ``end_session`` drops a parked record too."""
+    spec, params = _setup()
+    rng = np.random.default_rng(3)
+    p1 = rng.integers(1, 128, size=14).astype(np.int32)
+    cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=96, num_pages=24,
+                          host_pool_bytes=50e6, idle_park_iterations=2,
+                          debug_invariants=True)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    t1 = eng.run([Request(0, p1.copy(), 8, session=7)])[0]
+    # unrelated traffic advances the iteration clock past the threshold
+    eng.run([Request(100 + i,
+                     rng.integers(1, 128, size=10).astype(np.int32), 6)
+             for i in range(3)])
+    assert eng.stats["idle_parks"] == 1 and eng.num_parked == 1
+    assert eng.num_idle == 0                    # slot itself is free again
+    assert eng.host_pool.used_bytes > 0         # the KV lives on the host now
+
+    extra = rng.integers(1, 128, size=6).astype(np.int32)
+    p2 = np.concatenate([p1, t1.tokens, extra])
+    t2 = eng.run([Request(1, p2.copy(), 8, session=7)])[0]
+    assert eng.stats["swap_ins"] == 1
+    fresh = ContinuousBatchingEngine(params, spec, cfg)
+    ref2 = fresh.run([Request(1, p2.copy(), 8)])[0]
+    np.testing.assert_array_equal(t2.tokens, ref2.tokens)
+
+    # second turn finished -> idle again; end_session releases it
+    eng.end_session(7)
+    assert eng.num_idle == 0 and eng.num_parked == 0
+    eng.alloc.check()
+
+
+def test_session_without_host_pool_degrades_to_recompute():
+    """No host pool: an idle session slot that must yield its pages is
+    simply DROPPED and the next turn cold-prefills the transcript —
+    sessions never wedge the engine, they just lose the optimization."""
+    spec, params = _setup()
+    rng = np.random.default_rng(4)
+    p1 = rng.integers(1, 128, size=14).astype(np.int32)
+    # tiny pool, no prefix store: the evict tier can't save the idle
+    # session's pages, so new traffic must drop them
+    cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=64, num_pages=6,
+                          enable_prefix_cache=False, debug_invariants=True)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    t1 = eng.run([Request(0, p1.copy(), 8, session=7)])[0]
+    assert eng.num_idle == 1
+    eng.run([Request(100 + i,
+                     rng.integers(1, 128, size=14).astype(np.int32), 8)
+             for i in range(3)])
+    assert eng.stats["idle_drops"] >= 1 and eng.num_idle == 0
+    p2 = np.concatenate([p1, t1.tokens])
+    t2 = eng.run([Request(1, p2.copy(), 8, session=7)])[0]
+    fresh = ContinuousBatchingEngine(params, spec, cfg)
+    ref2 = fresh.run([Request(1, p2.copy(), 8)])[0]
+    np.testing.assert_array_equal(t2.tokens, ref2.tokens)
+    eng.end_session(7)
+    eng.alloc.check()
+
+
+def test_session_stale_prompt_drops_and_admits_cold():
+    """A follow-up turn that does NOT extend the held context (client
+    edited history) invalidates the session state and admits cold —
+    correctness never depends on the client replaying faithfully."""
+    spec, params = _setup()
+    rng = np.random.default_rng(5)
+    p1 = rng.integers(1, 128, size=14).astype(np.int32)
+    cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=64, num_pages=24,
+                          debug_invariants=True)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    eng.run([Request(0, p1.copy(), 8, session=7)])
+    assert eng.num_idle == 1
+    p2 = rng.integers(1, 128, size=20).astype(np.int32)  # unrelated prompt
+    t2 = eng.run([Request(1, p2.copy(), 8, session=7)])[0]
+    assert eng.stats["session_reuses"] == 0
+    assert eng.stats["idle_drops"] == 1
+    fresh = ContinuousBatchingEngine(params, spec, cfg)
+    ref2 = fresh.run([Request(1, p2.copy(), 8)])[0]
+    np.testing.assert_array_equal(t2.tokens, ref2.tokens)
+    eng.alloc.check()
