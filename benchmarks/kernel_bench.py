@@ -121,6 +121,77 @@ def _paged_rows(rng, rows):
             })
 
 
+def _windowed_paged_rows(rng, rows):
+    """Ring-paged sliding-window decode attention: page traffic per
+    decode step vs WINDOW, not context.  The ring block table holds
+    ``ring_pages(window) = ceil(W/page)+1`` entries per slot, so the
+    pool a step streams is O(window) no matter the context length —
+    these rows pin that for fp32/int8/int4 pages (nibble-packed int4
+    halves the page bytes again) next to what full attention would
+    have streamed at the same context, with the TPU-v5e memory-bound
+    times both byte counts imply."""
+    from repro.core import roofline
+    from repro.quant.quantize import (lane_major_scales, pack_int4,
+                                      quantize_kv_int4, quantize_kv_int8)
+    from repro.serve.paged_cache import ring_pages
+
+    B, H, KV, D, page, window = 4, 8, 2, 64, 16, 64
+    R = ring_pages(window, page)           # 5 entries: O(window) pool
+    P = B * R + 1
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(P, page, KV, D)), jnp.float32)
+    bt = jnp.asarray(np.arange(1, P).reshape(B, R), jnp.int32)
+    k8, ks = quantize_kv_int8(kf)
+    v8, vs = quantize_kv_int8(vf)
+    q4k, ks4 = quantize_kv_int4(kf)
+    q4v, vs4 = quantize_kv_int4(vf)
+    k4, v4 = pack_int4(q4k, axis=1), pack_int4(q4v, axis=1)
+    ks, vs = lane_major_scales(ks), lane_major_scales(vs)
+    ks4, vs4 = lane_major_scales(ks4), lane_major_scales(vs4)
+    cases = {
+        "fp32": ((kf, vf), None),
+        "int8": ((k8, v8), (ks, vs)),
+        "int4": ((k4, v4), (ks4, vs4)),
+    }
+    on_tpu = jax.default_backend() == "tpu"
+    for ctx in (128, 512):                 # 2x and 8x the window
+        lengths = jnp.full((B,), ctx, jnp.int32)
+        pps_full = ctx // page             # what full attention streams
+        for name, ((kp, vp), sc) in cases.items():
+            kw = {} if sc is None else {"k_scale": sc[0], "v_scale": sc[1]}
+            f = jax.jit(lambda a, k=kp, v=vp, kw=kw: ref.paged_attention_ref(
+                a, k, v, bt, lengths, window=window, ring=True, **kw))
+            us = _time(f, q)
+
+            def step_bytes(n_pages):
+                b = B * n_pages * page * KV * D * 2 * kp.dtype.itemsize
+                if name == "int4":
+                    b //= 2                # two tokens per byte
+                if sc is not None:
+                    b += B * n_pages * page * KV * 2 * 4
+                return b
+
+            win_bytes, full_bytes = step_bytes(R), step_bytes(pps_full)
+            bound = lambda nb: roofline.roofline_terms(
+                0.0, float(nb), 0.0,
+                roofline.hw_mod.TPU_V5E).memory_s * 1e6
+            row = {
+                "kernel": f"paged_attention_{name}_win{window}_ring_ref",
+                "M": ctx, "K": KV, "N": D, "us": round(us, 1),
+                "window": window, "ring_pages_per_slot": R,
+                "page_bytes_moved": win_bytes,
+                "page_bytes_full_attention": full_bytes,
+                "bytes_vs_full_attention": round(win_bytes / full_bytes, 3),
+                "tpu_mem_bound_us": round(bound(win_bytes), 3),
+                "tpu_mem_bound_full_us": round(bound(full_bytes), 3),
+                "weight_max_err": 0.0,
+            }
+            if on_tpu:
+                row["bound_fraction"] = round(bound(win_bytes) / us, 4)
+            rows.append(row)
+
+
 def run():
     rng = np.random.default_rng(0)
     rows = []
@@ -141,6 +212,7 @@ def run():
     rows.append({"kernel": "flash_attention_ref", "M": 512, "K": 8, "N": 64,
                  "us": round(_time(f, q, k), 1), "weight_max_err": 0.0})
     _paged_rows(rng, rows)
+    _windowed_paged_rows(rng, rows)
     us = (time.perf_counter() - t_total) * 1e6 / max(1, len(rows))
     return "kernel_bench", us, rows
 

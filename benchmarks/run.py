@@ -95,6 +95,14 @@ def tier1() -> None:
         # same-window baseline under the model-anchored SLOs
         ([sys.executable, bench, "--chaos", "--smoke",
           "--json", "BENCH_serve_chaos.json"], {}),
+        # sliding-window ring-KV gate: long streams on a uniformly
+        # attn_local gemma3 config — ring block tables (O(window)
+        # pages/slot, out-of-window pages recycled in place) must
+        # admit >= 2x the steady-state concurrency of the mask-only
+        # full-memory reference at EQUAL pool bytes with
+        # token-identical outputs, and must actually recycle
+        ([sys.executable, bench, "--window", "--smoke",
+          "--json", "BENCH_serve_window.json"], {}),
         # kernel microbench JSON artifact (page-byte accounting rows)
         ([sys.executable, kbench, "--json", "BENCH_kernel_bench.json"],
          {}),

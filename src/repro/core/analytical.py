@@ -338,7 +338,8 @@ def prefix_hit_rate(num_requests: int, num_templates: int,
 
 
 def mean_pages_held(avg_prompt: float, avg_new: float, page_size: int,
-                    admission: str = "lazy") -> float:
+                    admission: str = "lazy", window: int = 0,
+                    spec_k: int = 1) -> float:
     """Mean pages a request holds over its lifetime.
 
     ``conservative`` admission reserves pages for prompt+max_new up
@@ -347,22 +348,38 @@ def mean_pages_held(avg_prompt: float, avg_new: float, page_size: int,
     span — the occupancy headroom that lets the lazy scheduler admit
     more concurrent requests into the same pool (preemption keeps the
     FCFS head live when the gamble loses).
+
+    ``window`` > 0 models the RING-paged sliding-window cache
+    (``serve.paged_cache.ring_window``): a slot never holds more than
+    ``ring_pages(window, page_size, spec_k)`` pages no matter how long
+    its stream — out-of-window pages are recycled — so held pages clamp
+    at that O(window) bound.  This is the term that turns unbounded-
+    stream serving from O(context) to O(window) per slot.
     """
     def pages(t: float) -> float:
         return -(-t // page_size)
     if admission == "conservative":
-        return pages(avg_prompt + avg_new)
-    if admission != "lazy":
+        held = pages(avg_prompt + avg_new)
+    elif admission == "lazy":
+        held = pages(avg_prompt) + (pages(avg_prompt + avg_new)
+                                    - pages(avg_prompt)) / 2.0
+    else:
         raise ValueError(f"admission {admission!r}")
-    return pages(avg_prompt) + (pages(avg_prompt + avg_new)
-                                - pages(avg_prompt)) / 2.0
+    if window > 0:
+        from repro.serve.paged_cache import ring_pages
+        held = min(held, float(ring_pages(window, page_size, spec_k)))
+    return held
 
 
 def effective_slots(plan: "PagedCachePlan", slots: int, avg_prompt: float,
-                    avg_new: float, admission: str = "lazy") -> float:
+                    avg_new: float, admission: str = "lazy",
+                    window: int = 0, spec_k: int = 1) -> float:
     """Concurrent requests the pool sustains: the slot count capped by
-    usable pages over the admission policy's mean held pages."""
-    held = mean_pages_held(avg_prompt, avg_new, plan.page_size, admission)
+    usable pages over the admission policy's mean held pages (ring-
+    clamped when ``window`` > 0 — the windowed engine's concurrency
+    multiplier at fixed pool bytes)."""
+    held = mean_pages_held(avg_prompt, avg_new, plan.page_size, admission,
+                           window=window, spec_k=spec_k)
     return min(float(slots), plan.usable_pages / max(1.0, held))
 
 

@@ -107,7 +107,8 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
                          params: float | None = None,
                          tp: int = 1, spec_k: int = 1,
                          acceptance_rate: float = 0.0,
-                         chunk_tokens: int | None = None) -> IterationCost:
+                         chunk_tokens: int | None = None,
+                         window: int = 0) -> IterationCost:
     """Analytical cost of one scheduler iteration — predicts continuous
     batching throughput from the same roofline terms as ``breakdown()``.
 
@@ -165,12 +166,22 @@ def mixed_iteration_cost(spec: ModelSpec, hw: HardwareSpec,
     inter-token-latency spike of an unchunked long-prompt admission —
     at the price of more admission iterations per request (TTFT), the
     exact trade ``predict_serve_throughput`` decomposes.
+
+    ``window`` > 0 models the ring-paged sliding-window cache: each
+    decode slot STREAMS at most ``window`` context tokens of KV per
+    step (the kernel skips fully-out-of-window pages and the ring
+    never holds more) and its attention spans the same bound, so both
+    the per-slot KV byte term and the decode FLOP context clamp at the
+    window — decode page traffic goes O(context) → O(window), which on
+    the memory-bound decode roofline is the whole win.
     """
     from repro.core import blocks
     if chunk_tokens is not None:
         if chunk_tokens <= 0:
             raise ValueError("chunk_tokens must be positive when given")
         prefill_tokens = min(prefill_tokens, chunk_tokens)
+    if window > 0:
+        avg_context = min(avg_context, float(window))
     if tp > 1 and getattr(plan, "tp", 1) > 1:
         raise ValueError(
             f"plan already holds per-device bytes (built with tp="
@@ -214,8 +225,8 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
                              tp: int = 1, dp: int = 1, spec_k: int = 1,
                              acceptance_rate: float = 0.0,
                              chunk_tokens: int | None = None,
-                             parked_context_tokens: float | None = None
-                             ) -> Dict[str, float]:
+                             parked_context_tokens: float | None = None,
+                             window: int = 0) -> Dict[str, float]:
     """Steady-state continuous batching vs static-batch throughput.
 
     Static batching pads every slot to the batch max and holds slots
@@ -293,9 +304,19 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     ``predicted_resume_ttft_s`` / ``predicted_recompute_ttft_s`` and
     ``swap_cheaper`` (1.0/0.0), the numbers the ``--swap`` multi-turn
     benchmark gate prints its measured TTFTs against.
+
+    ``window`` > 0 models the ring-paged sliding-window engine
+    (``SchedulerConfig.windowed_kv``) against the SAME full-attention
+    static baseline: each slot's held pages clamp at the O(window) ring
+    bound — so ``effective_slots`` (and with it admitted concurrency at
+    fixed pool bytes) multiplies — and each decode step streams at most
+    ``window`` tokens of KV.  The result echoes ``window`` and
+    ``ring_pages_per_slot``; the ``--window`` benchmark gate measures
+    its concurrency ratio against this cell.
     """
     avg_ctx = avg_prompt + avg_new / 2
-    live = effective_slots(plan, slots, avg_prompt, avg_new, admission)
+    live = effective_slots(plan, slots, avg_prompt, avg_new, admission,
+                           window=window, spec_k=spec_k)
     hit = avg_prompt * min(1.0, max(0.0, prefix_hit_rate))
     # continuous: amortized one prefill per finished request per avg_new steps
     cont = mixed_iteration_cost(
@@ -304,7 +325,7 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
         decode_slots=int(round(live)), avg_context=avg_ctx,
         cached_prefix_tokens=int(hit * live / max(1.0, avg_new)), tp=tp,
         spec_k=spec_k, acceptance_rate=acceptance_rate,
-        chunk_tokens=chunk_tokens)
+        chunk_tokens=chunk_tokens, window=window)
     # static: same decode roofline but slots idle in the drain tail --
     # useful-token rate scales by mean/max occupancy (~avg/(2*avg) for a
     # uniform length spread) and every context pads to the batch max.
@@ -333,7 +354,7 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
     worst = mixed_iteration_cost(
         spec, hw, precision, plan, prefill_tokens=max(1, burst),
         decode_slots=int(round(live)), avg_context=avg_ctx, tp=tp,
-        spec_k=spec_k, acceptance_rate=acceptance_rate)
+        spec_k=spec_k, acceptance_rate=acceptance_rate, window=window)
     per_tok = expected_accepted_tokens(acceptance_rate, spec_k)
     out["predicted_itl_s"] = cont.iteration_s / per_tok
     out["predicted_itl_worst_s"] = worst.iteration_s / per_tok
@@ -353,6 +374,11 @@ def predict_serve_throughput(spec: ModelSpec, hw: HardwareSpec,
         out["predicted_resume_ttft_s"] = rec["swap_in_s"] + worst.iteration_s
         out["predicted_recompute_ttft_s"] = (rec["reprefill_s"]
                                              + worst.iteration_s)
+    if window > 0:
+        from repro.serve.paged_cache import ring_pages
+        out["window"] = float(window)
+        out["ring_pages_per_slot"] = float(
+            ring_pages(window, plan.page_size, spec_k))
     if spec_k > 1:
         out["spec_k"] = float(spec_k)
         out["acceptance_rate"] = min(1.0, max(0.0, acceptance_rate))

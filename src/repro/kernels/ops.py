@@ -89,7 +89,8 @@ def _resolve_paged_impl(impl: str) -> str:
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                    window: int = 0, scale: Optional[float] = None,
+                    window: int = 0, ring: bool = False,
+                    scale: Optional[float] = None,
                     k_scale=None, v_scale=None, impl: str = "auto"):
     """Paged decode attention: q (B, H, D) against a page pool — or
     q (B, K, H, D) for a K-token decode window (the speculative-decode
@@ -105,19 +106,25 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     ~4x/~8x fewer HBM bytes per page and no fp32 gather
     materialization.  The reference dequant-after-gather path is the
     oracle (and the CPU lowering); ``impl="pallas"`` forces the kernel
-    body (interpret-mode off-TPU) for any cache dtype."""
+    body (interpret-mode off-TPU) for any cache dtype.
+
+    ``window > 0`` SKIPS fully-out-of-window pages (the grid shrinks to
+    the last O(window) live pages); ``ring=True`` additionally declares
+    the block table a ring of ``block_tables.shape[1]`` entries — the
+    O(window)-bounded layout the serve scheduler installs for uniformly
+    sliding-window (`attn_local`) stacks."""
     if _resolve_paged_impl(impl) == "ref":
         return ref.paged_attention_ref(
             q, k_pages, v_pages, block_tables, lengths, window=window,
-            scale=scale, k_scale=k_scale, v_scale=v_scale)
+            ring=ring, scale=scale, k_scale=k_scale, v_scale=v_scale)
     return paged_attention_pallas(
         q, k_pages, v_pages, block_tables, lengths, window=window,
-        scale=scale, k_scale=k_scale, v_scale=v_scale,
+        ring=ring, scale=scale, k_scale=k_scale, v_scale=v_scale,
         interpret=_default_interpret())
 
 
 def paged_attention_sharded(mesh, q, k_pages, v_pages, block_tables,
-                            lengths, *, window: int = 0,
+                            lengths, *, window: int = 0, ring: bool = False,
                             scale: Optional[float] = None,
                             k_scale=None, v_scale=None, axis: str = "model",
                             impl: str = "auto", gather_output: bool = True):
@@ -157,14 +164,14 @@ def paged_attention_sharded(mesh, q, k_pages, v_pages, block_tables,
     if k_scale is not None:
         def local(lq, kp, vp, ks, vs, bt, ln):
             return paged_attention(lq, kp, vp, bt, ln, window=window,
-                                   scale=scale, k_scale=ks, v_scale=vs,
-                                   impl=impl)
+                                   ring=ring, scale=scale, k_scale=ks,
+                                   v_scale=vs, impl=impl)
         f = shard_map_compat(local, mesh, (qs, ps, ps, ss, ss, bs, ls), qs)
         o = f(q, k_pages, v_pages, k_scale, v_scale, block_tables, lengths)
     else:
         def local(lq, kp, vp, bt, ln):
             return paged_attention(lq, kp, vp, bt, ln, window=window,
-                                   scale=scale, impl=impl)
+                                   ring=ring, scale=scale, impl=impl)
         f = shard_map_compat(local, mesh, (qs, ps, ps, bs, ls), qs)
         o = f(q, k_pages, v_pages, block_tables, lengths)
     if not gather_output:

@@ -96,9 +96,32 @@ def _dequant_page(k_ref, v_ref, ks_ref, vs_ref, quant: str, page: int):
             _unpack_nibbles(v_ref[0], page) * vs)
 
 
+def _page_tokens(p, length, page: int, n_pages: int, mode: str):
+    """Absolute token positions (1, 1, page) covered by grid step ``p``.
+
+    mode == "full": entry p holds absolute page p (the classic layout).
+    mode == "skip": the grid was shrunk to the last ``n_pages`` live
+    pages — entry p maps to absolute page ``lo + p`` with
+    ``lo = max(last_page - (n_pages - 1), 0)``, so fully-out-of-window
+    pages are never streamed (the index map chases the same offset).
+    mode == "ring": the block table is a ring of ``n_pages`` entries;
+    entry j holds absolute page ``last - ((last - j) mod n_pages)``
+    (negative => never written yet, masked via tok < 0).
+    """
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    if mode == "full":
+        return p * page + iota
+    last = jax.lax.div(length - 1, page)      # length >= 1 on live rows
+    if mode == "skip":
+        lo = jnp.maximum(last - (n_pages - 1), 0)
+        return (lo + p) * page + iota
+    ap = last - jnp.remainder(last - p, n_pages)          # ring
+    return ap * page + iota
+
+
 def _paged_kernel(bt_ref, len_ref, q_ref, *rest, scale: float, page: int,
                   n_pages: int, window: int, kv_heads: int, grp: int,
-                  quant: str):
+                  quant: str, mode: str):
     if quant == "none":
         k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = rest
         ks_ref = vs_ref = None
@@ -121,8 +144,10 @@ def _paged_kernel(bt_ref, len_ref, q_ref, *rest, scale: float, page: int,
     s = jnp.einsum("kgd,tkd->kgt", qg, k,
                    preferred_element_type=jnp.float32)    # (KV, G, page)
 
-    tok = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    tok = _page_tokens(p, length, page, n_pages, mode)
     valid = tok < length
+    if mode == "ring":
+        valid &= tok >= 0
     if window:
         valid &= tok > (length - 1 - window)
     s = jnp.where(valid, s, NEG_INF)
@@ -146,7 +171,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, *rest, scale: float, page: int,
 
 def _paged_window_kernel(bt_ref, len_ref, q_ref, *rest, scale: float,
                          page: int, n_pages: int, window: int, kv_heads: int,
-                         grp: int, quant: str, wq: int):
+                         grp: int, quant: str, wq: int, mode: str):
     """K-query decode-window body: per-query online-softmax state in a
     leading ``wq`` scratch dim, one K/V page load shared by all K
     queries.  Query j attends absolute positions <= length - wq + j
@@ -173,11 +198,13 @@ def _paged_window_kernel(bt_ref, len_ref, q_ref, *rest, scale: float,
     # (wq, H, D) -> (wq, KV, G, D): leading-dim split only
     qg = (q_ref[0].astype(jnp.float32) * scale).reshape(
         wq, kv_heads, grp, D)
-    tok = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+    tok = _page_tokens(p, len_ref[b], page, n_pages, mode)
     for j in range(wq):                     # static unroll: wq is 2..8
         s = jnp.einsum("kgd,tkd->kgt", qg[j], k,
                        preferred_element_type=jnp.float32)
         valid = tok <= base + j
+        if mode == "ring":
+            valid &= tok >= 0
         if window:
             valid &= (base + j - tok) < window
         s = jnp.where(valid, s, NEG_INF)
@@ -202,6 +229,7 @@ def _paged_window_kernel(bt_ref, len_ref, q_ref, *rest, scale: float,
 def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                            lengths: jnp.ndarray, *, window: int = 0,
+                           ring: bool = False,
                            scale: float | None = None,
                            k_scale: jnp.ndarray | None = None,
                            v_scale: jnp.ndarray | None = None,
@@ -212,7 +240,18 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     (P, page, KV, D) float — or int8 with lane-major
     ``k_scale``/``v_scale`` (P, KV, page) f32, or nibble-packed int4
     (P, page//2, KV, D) (packing inferred from the scale's token dim);
-    block_tables: (B, pages_per_slot) int32; lengths: (B,) int32."""
+    block_tables: (B, pages_per_slot) int32; lengths: (B,) int32.
+
+    ``window > 0`` with a flat block table SKIPS fully-out-of-window
+    entries: the page grid dim shrinks to the last
+    ``ceil((window + K - 1)/page) + 1`` live pages and the K/V index
+    map chases ``bt[b, lo_b + p]`` with a per-slot ``lo_b`` computed
+    from ``lengths`` — decode page traffic is O(window), not
+    O(context), with bitwise-identical results to streaming-then-
+    masking.  ``ring=True`` declares the block table a RING of
+    ``block_tables.shape[1]`` entries (entry j holds absolute page
+    ``last - ((last - j) mod R)``, stale entries masked), the layout
+    the serve scheduler uses to bound per-slot KV at O(window)."""
     if q.ndim == 4:
         B, WQ, H, D = q.shape
     else:
@@ -229,9 +268,21 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
     else:
         page = k_pages.shape[1]
         quant = "none"
-    n_pages = block_tables.shape[1]
+    n_entries = block_tables.shape[1]
     grp = H // KV
     sc = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    if ring:
+        mode, n_pages = "ring", n_entries
+    elif window:
+        # last page holding an in-window key for the EARLIEST query
+        # (abs pos lengths - max(WQ,1)) .. the newest page, inclusive
+        span = window + max(WQ, 1) - 1
+        win_pages = min(n_entries, -(-span // page) + 1)
+        mode = "skip" if win_pages < n_entries else "full"
+        n_pages = win_pages
+    else:
+        mode, n_pages = "full", n_entries
 
     if WQ:
         q_spec = pl.BlockSpec((1, WQ, H, D),
@@ -244,7 +295,8 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         ]
         kernel = functools.partial(
             _paged_window_kernel, scale=sc, page=page, n_pages=n_pages,
-            window=window, kv_heads=KV, grp=grp, quant=quant, wq=WQ)
+            window=window, kv_heads=KV, grp=grp, quant=quant, wq=WQ,
+            mode=mode)
     else:
         q_spec = pl.BlockSpec((1, H, D), lambda b, p, bt, ln: (b, 0, 0))
         out_shape = jax.ShapeDtypeStruct((B, H, D), q.dtype)
@@ -255,16 +307,27 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         ]
         kernel = functools.partial(
             _paged_kernel, scale=sc, page=page, n_pages=n_pages,
-            window=window, kv_heads=KV, grp=grp, quant=quant)
-    kv_spec = pl.BlockSpec((1, k_pages.shape[1], KV, D),
-                           lambda b, p, bt, ln: (bt[b, p], 0, 0, 0))
+            window=window, kv_heads=KV, grp=grp, quant=quant, mode=mode)
+    if mode == "skip":
+        # chase the same shifted entry the kernel body masks against:
+        # only the last n_pages live pages ever cross HBM
+        def _entry(b, p, ln):
+            last = jax.lax.div(ln[b] - 1, page)
+            return jnp.maximum(last - (n_pages - 1), 0) + p
+    else:
+        def _entry(b, p, ln):
+            return p
+    kv_spec = pl.BlockSpec(
+        (1, k_pages.shape[1], KV, D),
+        lambda b, p, bt, ln: (bt[b, _entry(b, p, ln)], 0, 0, 0))
     in_specs = [q_spec, kv_spec]
     operands = [q, k_pages]
     if quant != "none":
         # lane-major scale block: the whole page's scales in one
         # (KV, page) tile (token dim on the lanes)
-        s_spec = pl.BlockSpec((1, KV, page),
-                              lambda b, p, bt, ln: (bt[b, p], 0, 0))
+        s_spec = pl.BlockSpec(
+            (1, KV, page),
+            lambda b, p, bt, ln: (bt[b, _entry(b, p, ln)], 0, 0))
         in_specs += [s_spec, kv_spec, s_spec]
         operands += [k_scale, v_pages, v_scale]
     else:
@@ -286,6 +349,8 @@ def paged_attention_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
         compiler_params=_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-        name=f"paged_attention_decode_{quant}" + (f"_w{WQ}" if WQ else ""),
+        name=(f"paged_attention_decode_{quant}"
+              + (f"_w{WQ}" if WQ else "")
+              + (f"_{mode}" if mode != "full" else "")),
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32),
       *operands)

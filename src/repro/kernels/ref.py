@@ -44,9 +44,23 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return out.astype(q.dtype)
 
 
+def _ring_positions(lengths: jnp.ndarray, n_entries: int,
+                    page: int) -> jnp.ndarray:
+    """Per-slot absolute token positions (B, n_entries * page) for a RING
+    block table: entry j of slot b holds absolute page
+    ``last - ((last - j) mod R)`` with ``last = (lengths[b]-1)//page``
+    (negative => entry never written; callers mask ``pos < 0``)."""
+    last = jnp.maximum(lengths[:, None] - 1, 0) // page          # (B, 1)
+    j = jnp.arange(n_entries)[None]                              # (1, R)
+    ap = last - jnp.mod(last - j, n_entries)                     # (B, R)
+    pos = ap[:, :, None] * page + jnp.arange(page)[None, None]
+    return pos.reshape(lengths.shape[0], n_entries * page)
+
+
 def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                         lengths: jnp.ndarray, *, window: int = 0,
+                        ring: bool = False,
                         scale: Optional[float] = None,
                         k_scale: Optional[jnp.ndarray] = None,
                         v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
@@ -71,7 +85,7 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     if q.ndim == 4:
         return paged_attention_window_ref(
             q, k_pages, v_pages, block_tables, lengths, window=window,
-            scale=scale, k_scale=k_scale, v_scale=v_scale)
+            ring=ring, scale=scale, k_scale=k_scale, v_scale=v_scale)
     from repro.quant.quantize import unpack_int4
     B, H, D = q.shape
     KV = k_pages.shape[2]
@@ -93,8 +107,12 @@ def paged_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     v = v.reshape(B, S, KV, D)
     qg = q.reshape(B, KV, G, D).astype(jnp.float32) * sc
     s = jnp.einsum("bkgd,btkd->bkgt", qg, k)           # (B, KV, G, S)
-    idx = jnp.arange(S)[None]
-    valid = idx < lengths[:, None]
+    if ring:
+        idx = _ring_positions(lengths, block_tables.shape[1], page)
+        valid = (idx >= 0) & (idx < lengths[:, None])
+    else:
+        idx = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        valid = idx < lengths[:, None]
     if window:
         valid &= idx > (lengths[:, None] - 1 - window)
     s = jnp.where(valid[:, None, None], s, -1e30)
@@ -110,6 +128,7 @@ def paged_attention_window_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                                v_pages: jnp.ndarray,
                                block_tables: jnp.ndarray,
                                lengths: jnp.ndarray, *, window: int = 0,
+                               ring: bool = False,
                                scale: Optional[float] = None,
                                k_scale: Optional[jnp.ndarray] = None,
                                v_scale: Optional[jnp.ndarray] = None
@@ -148,8 +167,12 @@ def paged_attention_window_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     qg = q.reshape(B, K, KV, G, D).astype(jnp.float32) * sc
     s = jnp.einsum("bjkgd,btkd->bjkgt", qg, k)         # (B, K, KV, G, S)
     q_abs = lengths[:, None] - K + jnp.arange(K)[None]           # (B, K)
-    idx = jnp.arange(S)[None, None]
-    valid = idx <= q_abs[..., None]                              # (B, K, S)
+    if ring:
+        idx = _ring_positions(lengths, block_tables.shape[1], page)[:, None]
+        valid = (idx >= 0) & (idx <= q_abs[..., None])           # (B, K, S)
+    else:
+        idx = jnp.arange(S)[None, None]
+        valid = idx <= q_abs[..., None]                          # (B, K, S)
     if window:
         valid &= (q_abs[..., None] - idx) < window
     s = jnp.where(valid[:, :, None, None], s, -1e30)

@@ -19,7 +19,11 @@ token-for-token greedy), and ``--prefill-chunk T`` caps per-iteration
 prefill admission at T tokens (chunked prefill: long prompts stream in
 across iterations co-scheduled with decode, flattening the inter-token
 latency spike their one-shot admission would cause; outputs stay
-token-for-token identical).
+token-for-token identical).  ``--sliding-window W`` overrides the
+spec's attention window; on a uniformly ``attn_local`` stack (gemma3
+reduced to its local layers) the paged engine auto-switches to ring
+block tables — per-slot KV bounded at O(window) pages for unbounded
+streams.
 """
 from __future__ import annotations
 
@@ -100,6 +104,12 @@ def _run_paged(args, spec, params):
     if cfg.prefill_chunk_tokens:
         print(f"[serve] chunked prefill: {cfg.prefill_chunk_tokens}-token "
               f"budget, {int(eng.stats['prefill_chunks'])} partial chunks")
+    if eng.ring:
+        print(f"[serve] sliding window {eng.window}: ring tables "
+              f"{eng.layout.slots_pages(cfg.max_seq)} pages/slot, "
+              f"{int(eng.stats['ring_recycled_pages'])} pages recycled "
+              f"in place, {int(eng.stats['ring_shared_released'])} "
+              "shared entries released")
     if cfg.spec_k > 1:
         st = eng.stats
         acc = st["spec_accepted"] / max(1, st["spec_drafted"])
@@ -172,12 +182,21 @@ def main():
                          "budget for the paged engine (multiple of the "
                          "page size; 0 = admit whole prompts, the "
                          "latency-spiky default)")
+    ap.add_argument("--sliding-window", type=int, default=0,
+                    help="override the spec's attention sliding window "
+                         "(tokens).  On a uniformly attn_local stack "
+                         "(e.g. gemma3 scaled to its local layers) the "
+                         "paged engine auto-switches to RING block "
+                         "tables: per-slot KV bounded at O(window) "
+                         "pages, out-of-window pages recycled in place")
     args = ap.parse_args()
 
     spec = ARCHS[args.arch]
     if args.local:
         spec = spec.scaled_down(layers=args.layers, width=args.width,
                                 vocab=args.vocab)
+    if args.sliding_window:
+        spec = spec.with_(sliding_window=args.sliding_window)
     rng = jax.random.PRNGKey(0)
     params = lm.init(rng, spec, dtype=jnp.float32)
     if args.precision in ("int8", "int4"):

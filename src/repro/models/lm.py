@@ -594,7 +594,7 @@ def _scatter_kv_rows(kv: Dict, name: str, rows: jnp.ndarray,
 
 
 def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
-                       kind, mesh=None,
+                       kind, ring=False, mesh=None,
                        shard_params=False) -> Tuple[jnp.ndarray, Dict]:
     """Paged-cache decode attention for one layer.
 
@@ -631,7 +631,10 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
     q = L.rope(q, posb, spec.rope_theta)
     k = L.rope(k, posb, spec.rope_theta)
 
-    slot_page = block_tables[jnp.arange(B), pos // page]
+    pidx = pos // page
+    if ring:
+        pidx = pidx % block_tables.shape[1]
+    slot_page = block_tables[jnp.arange(B), pidx]
     off = pos % page
     new_kv = dict(kv)
     for name, row in (("k", k[:, 0]), ("v", v[:, 0])):
@@ -641,20 +644,20 @@ def _attn_decode_paged(spec, p, x, pos, kv, block_tables, *,
     if mesh is not None:
         o = kops.paged_attention_sharded(
             mesh, q[:, 0], new_kv["k_pages"], new_kv["v_pages"],
-            block_tables, pos + 1, window=window,
+            block_tables, pos + 1, window=window, ring=ring,
             k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"),
             gather_output=not shard_params)
     else:
         o = kops.paged_attention(
             q[:, 0], new_kv["k_pages"], new_kv["v_pages"], block_tables,
-            pos + 1, window=window,
+            pos + 1, window=window, ring=ring,
             k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
     out = qdot(o.reshape(B, 1, H * D), p["wo"])
     return out, new_kv
 
 
 def _attn_decode_window_paged(spec, p, x, pos, lens, kv, block_tables, *,
-                              kind, mesh=None,
+                              kind, ring=False, mesh=None,
                               shard_params=False) -> Tuple[jnp.ndarray, Dict]:
     """Paged attention for a K-token DECODE WINDOW (speculative verify).
 
@@ -672,6 +675,12 @@ def _attn_decode_window_paged(spec, p, x, pos, lens, kv, block_tables, *,
     attention tensor-parallel per KV-head shard exactly as the
     single-query path (head-sharded output into row-parallel wo when
     the weights are sharded, replicated gather otherwise).
+
+    ``ring=True`` treats each block-table row as a RING of
+    ``block_tables.shape[1]`` entries (absolute page q lives at entry
+    ``q % R``) — the O(window) layout the windowed serve engine
+    installs; the write target and the attention op both follow the
+    ring mapping.
     """
     from repro.kernels import ops as kops
     B, K = x.shape[:2]
@@ -685,7 +694,10 @@ def _attn_decode_window_paged(spec, p, x, pos, lens, kv, block_tables, *,
     k = L.rope(k, posb, spec.rope_theta)
 
     valid = jnp.arange(K)[None] < lens[:, None]          # (B, K)
-    page_idx = jnp.minimum(posb // page, block_tables.shape[1] - 1)
+    if ring:
+        page_idx = (posb // page) % block_tables.shape[1]
+    else:
+        page_idx = jnp.minimum(posb // page, block_tables.shape[1] - 1)
     tgt_page = jnp.where(
         valid, block_tables[jnp.arange(B)[:, None], page_idx], 0)
     tgt_off = posb % page
@@ -699,20 +711,20 @@ def _attn_decode_window_paged(spec, p, x, pos, lens, kv, block_tables, *,
     if mesh is not None:
         o = kops.paged_attention_sharded(
             mesh, q, new_kv["k_pages"], new_kv["v_pages"],
-            block_tables, pos + K, window=window,
+            block_tables, pos + K, window=window, ring=ring,
             k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"),
             gather_output=not shard_params)
     else:
         o = kops.paged_attention(
             q, new_kv["k_pages"], new_kv["v_pages"], block_tables,
-            pos + K, window=window,
+            pos + K, window=window, ring=ring,
             k_scale=new_kv.get("k_scale"), v_scale=new_kv.get("v_scale"))
     out = qdot(o.reshape(B, K, H * D), p["wo"])
     return out, new_kv
 
 
 def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
-                       tgt_page, tgt_off, *, kind, mesh=None):
+                       tgt_page, tgt_off, *, kind, ring=False, mesh=None):
     """Attention for a prompt SUFFIX against cached prefix pages.
 
     The prefix-cache admission path: the first ``prefix_len`` context
@@ -725,6 +737,14 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
     every true query, and padded rows are routed to the null page by
     ``tgt_page`` (computed from ``true_len`` in ``prefill_paged``),
     whose content is never read.
+
+    ``ring=True`` means ``pref_pages`` is a slot's RING block-table row
+    (entry j holds the absolute page ``last - ((last - j) mod R)`` of
+    the already-written context, ``last = (prefix_len - 1) // page``):
+    the gathered rows get per-entry absolute key positions instead of
+    ``arange``, never-written entries (negative position) are masked,
+    and queries only ever need keys within ``spec.sliding_window`` —
+    which the ring holds by construction.
 
     With ``mesh`` the pools are sharded over the KV-head dim; the
     gathered prefix rows are constrained back to replicated before the
@@ -768,10 +788,19 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
     if spec.attn_logit_softcap:
         s = jnp.tanh(s / spec.attn_logit_softcap) * spec.attn_logit_softcap
     i_abs = positions[0][:, None]                        # (S, 1)
-    k_abs = jnp.concatenate([jnp.arange(npr), positions[0]])
+    if ring:
+        n_ent = pref_pages.shape[0]
+        last = jnp.maximum(prefix_len - 1, 0) // page
+        j = jnp.arange(n_ent)
+        ap = last - jnp.mod(last - j, n_ent)             # abs page per entry
+        pref_abs = (ap[:, None] * page
+                    + jnp.arange(page)[None]).reshape(npr)
+    else:
+        pref_abs = jnp.arange(npr)
+    k_abs = jnp.concatenate([pref_abs, positions[0]])
     is_suffix = jnp.concatenate([jnp.zeros((npr,), bool),
                                  jnp.ones((S,), bool)])
-    valid = (k_abs[None, :] <= i_abs) & \
+    valid = (k_abs[None, :] >= 0) & (k_abs[None, :] <= i_abs) & \
             ((k_abs[None, :] < prefix_len) | is_suffix[None, :])
     window = spec.sliding_window if kind == "attn_local" else 0
     if window:
@@ -789,7 +818,7 @@ def _suffix_attn_paged(spec, p, xn, positions, kv, pref_pages, prefix_len,
 
 def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
                   prefix_len, true_len, *, n_prefix_pages: int,
-                  mesh=None) -> Tuple[jnp.ndarray, Params]:
+                  ring=False, mesh=None) -> Tuple[jnp.ndarray, Params]:
     """Prefill a prompt SUFFIX directly into a paged cache slot whose
     first ``prefix_len`` tokens are already cached (prefix-cache hit).
 
@@ -803,14 +832,30 @@ def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
     to ``bt_row``.  The FLOPs this skips relative to a full prefill are
     what ``core.analytical.mixed_iteration_flops(cached_prefix_tokens=)``
     accounts for.
+
+    ``ring=True``: ``bt_row`` is a RING of ``bt_row.shape[0]`` entries.
+    Suffix rows land at entry ``abs_page % R``; rows whose absolute page
+    falls below the post-chunk horizon (``last_pg - R + 1``) route to
+    the null page — only the last R pages of an over-long chunk are
+    retained, which is exactly what the sliding window can ever read.
+    The prefix gather follows the ring position mapping (see
+    ``_suffix_attn_paged``), so chunked prefill and swap rejoins compose
+    with windowed slots unchanged.
     """
     page = paged_page_size(cache)
     S = tokens.shape[1]
     positions = prefix_len + jnp.arange(S)[None]         # (1, S) absolute
     pref_pages = bt_row[:n_prefix_pages]
     abs_pos = prefix_len + jnp.arange(S)
-    page_idx = jnp.minimum(abs_pos // page, bt_row.shape[0] - 1)
-    tgt_page = jnp.where(jnp.arange(S) < true_len, bt_row[page_idx], 0)
+    apg = abs_pos // page
+    if ring:
+        R = bt_row.shape[0]
+        last_pg = (prefix_len + true_len - 1) // page
+        keep = (jnp.arange(S) < true_len) & (apg > last_pg - R)
+        tgt_page = jnp.where(keep, bt_row[apg % R], 0)
+    else:
+        page_idx = jnp.minimum(apg, bt_row.shape[0] - 1)
+        tgt_page = jnp.where(jnp.arange(S) < true_len, bt_row[page_idx], 0)
     tgt_off = abs_pos % page
 
     x = jnp.take(params["global"]["embed"], tokens, axis=0)
@@ -825,7 +870,7 @@ def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
             xn = L.norm(spec, pslice, "norm1", x)
             h, kv_new = _suffix_attn_paged(
                 spec, pslice, xn, positions, cslice, pref_pages, prefix_len,
-                tgt_page, tgt_off, kind=base, mesh=mesh)
+                tgt_page, tgt_off, kind=base, ring=ring, mesh=mesh)
             y = x + h
             y2 = L.norm(spec, pslice, "norm2", y)
             if "router_w" in pslice:
@@ -849,7 +894,7 @@ def prefill_paged(params, spec: ModelSpec, tokens, cache, slot, bt_row,
 
 
 def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
-                      mesh=None,
+                      ring=False, mesh=None,
                       shard_params=False) -> Tuple[jnp.ndarray, Params]:
     """One decode step over a PAGED cache (per-slot positions).
 
@@ -877,7 +922,8 @@ def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
             pslice = jax.tree_util.tree_map(lambda v: v[li], gp)
             xn = L.norm(spec, pslice, "norm1", x)
             h, kv_new = _attn_decode_paged(spec, pslice, xn, pos, cslice,
-                                           bt, kind=base, mesh=mesh,
+                                           bt, kind=base, ring=ring,
+                                           mesh=mesh,
                                            shard_params=shard_params)
             y = x + h
             y2 = L.norm(spec, pslice, "norm2", y)
@@ -894,7 +940,7 @@ def decode_step_paged(params, spec: ModelSpec, cache, tokens, *,
 
 
 def decode_window_paged(params, spec: ModelSpec, cache, tokens, lens, *,
-                        mesh=None,
+                        ring=False, mesh=None,
                         shard_params=False) -> Tuple[jnp.ndarray, Params]:
     """K-token decode window over a paged cache (speculative verify).
 
@@ -926,7 +972,7 @@ def decode_window_paged(params, spec: ModelSpec, cache, tokens, lens, *,
             xn = L.norm(spec, pslice, "norm1", x)
             h, kv_new = _attn_decode_window_paged(
                 spec, pslice, xn, pos, lens, cslice, bt, kind=base,
-                mesh=mesh, shard_params=shard_params)
+                ring=ring, mesh=mesh, shard_params=shard_params)
             y = x + h
             y2 = L.norm(spec, pslice, "norm2", y)
             if "router_w" in pslice:
@@ -942,7 +988,8 @@ def decode_window_paged(params, spec: ModelSpec, cache, tokens, lens, *,
 
 
 def decode_step(params, spec: ModelSpec, cache, tokens, *,
-                mesh=None, shard_params=False) -> Tuple[jnp.ndarray, Params]:
+                ring=False, mesh=None,
+                shard_params=False) -> Tuple[jnp.ndarray, Params]:
     """One decoding step for the whole batch. tokens: (B, 1) int32.
 
     Decode unrolls a python loop over layers with PER-LAYER cache buffers:
@@ -955,8 +1002,10 @@ def decode_step(params, spec: ModelSpec, cache, tokens, *,
     to ``decode_step_paged``.
     """
     if "block_tables" in cache:
-        return decode_step_paged(params, spec, cache, tokens, mesh=mesh,
-                                 shard_params=shard_params)
+        return decode_step_paged(params, spec, cache, tokens, ring=ring,
+                                 mesh=mesh, shard_params=shard_params)
+    if ring:
+        raise ValueError("ring layout requires a paged cache")
     pos = cache["pos"]
     x = jnp.take(params["global"]["embed"], tokens, axis=0)
     if spec.name.startswith("gemma"):

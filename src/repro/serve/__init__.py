@@ -93,6 +93,28 @@ than recompute-only, with token-identical outputs across the swap
 (fp32/int8/int4, single-device and tp=2 — the tp pool swaps per-shard
 and reassembles host-side).
 
+SLIDING-WINDOW KV is a third memory tier-style axis: on a uniformly
+``attn_local`` stack (every KV-holding layer windowed — gemma3 reduced
+to its local layers; one block table serves all layers, so a single
+global layer disqualifies ring eviction and ``paged_cache.ring_window``
+auto-falls back to mask-only) each slot's block table becomes a RING
+of ``ring_pages(window, page, spec_k) = ceil((window+spec_k-1)/page)+1``
+entries: per-slot KV is O(window) for UNBOUNDED streams, the write
+head recycles an exclusive out-of-window page in place (zero allocator
+traffic) and releases — never frees — a shared prefix page that falls
+out of the window, and the Pallas kernels stream only the ring's
+entries (flat windowed tables get the same O(window) traffic via the
+page-skip index map).  ``SchedulerConfig.windowed_kv``: ``None``
+auto-detects, ``False`` forces the mask-only reference (same windowed
+attention math, full-attention memory — the ``--window`` gate
+baseline), ``True`` asserts the stack qualifies.  Sessions park/rejoin
+and spec-k rollbacks compose (the ring's +1 straddle page is what
+keeps a rolled-back verify window inside never-recycled entries), and
+``core.analytical.mean_pages_held`` / ``core.latency`` clamp held
+pages and attended context at the window, so
+``predict_serve_throughput(window=)`` predicts the concurrency jump
+the ``--window`` gate measures.
+
 Paged KV precision support matrix (``SchedulerConfig.cache_dtype`` x
 parallelism axes x decode mode) — every cell is exercised by tier-1
 tests / the CI serve smokes (prefill, decode, prefix-cache, CoW per
@@ -107,7 +129,13 @@ benchmark gate; fault-tolerance cells in tests/test_serve_faults.py
 and the ``--chaos`` benchmark gate; swap/park cells assert token
 identity across swap-out/swap-in per dtype in
 tests/test_serve_scheduler.py, tp=2 in
-tests/test_serve_backend_multidevice.py, and the ``--swap`` gate):
+tests/test_serve_backend_multidevice.py, and the ``--swap`` gate;
+sliding-window cells assert ring-vs-flat-oracle and kernel parity per
+dtype incl. verify windows across the ring wrap in
+tests/test_quantized_paged_attention.py, engine token identity vs the
+mask-only reference + static windowed generate in
+tests/test_serve_scheduler.py, the windowed int4 launcher smoke in
+tests/test_launch_serve.py, and the ``--window`` gate):
 
 =========  ====================  =======================  ==============
 dtype      single device         tp-sharded (tp=2/4):     dp replicas
@@ -126,6 +154,11 @@ dtype      single device         tp-sharded (tp=2/4):     dp replicas
            splits RMW-preserve   pages shard on the       dp=2 x tp=2
            the neighbour token)  KV-head dim; spec_k      int4 smoke)
                                  gate in CI)
+``any`` +  yes (ring tables,     ring param is static     composes (the
+sliding    token-identical to    on both backends'        ring is
+window     the mask-only         jits; kernel parity      per-slot host
+(ring KV)  reference; spec-k +   per dtype in tier-1)     state, router
+           sessions compose)                              unaffected)
 =========  ====================  =======================  ==============
 
 Fault-tolerance matrix (chaos mode x backend x dp — every cell through

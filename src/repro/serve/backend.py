@@ -65,22 +65,38 @@ from repro.serve import paged_cache as pc
 # retracing per-instance closures.  All steps return sampled token ids,
 # not logits, so only (B,)-sized arrays ever cross to the host.
 
-@functools.partial(jax.jit, static_argnames=("spec", "impl"),
+@functools.partial(jax.jit, static_argnames=("spec", "impl", "ring"),
                    donate_argnums=(2,))
-def _admit_fn(params, batch, cache, slot, true_len, bt_row, *, spec, impl):
+def _admit_fn(params, batch, cache, slot, true_len, bt_row, *, spec, impl,
+              ring=False):
     """Fused cold admission (no cached prefix): prefill the
     (bucket-padded) prompt, scatter its KV into the slot's pages,
     install the block-table row, and sample the first token.  One jit
     call per admission (retraces only per prompt bucket).  Needs no
     mesh: the prefill math runs replicated on every backend, and GSPMD
-    partitions the scatter into sharded pools on its own."""
+    partitions the scatter into sharded pools on its own.
+
+    ``ring=True``: ``bt_row`` is a RING of R entries — absolute prompt
+    page q scatters into entry ``q % R`` when it lies within the final
+    window horizon (the last R pages), and routes to the null page
+    otherwise (the sliding window can never read it); padding pages
+    past ``true_len`` also go to null so they never collide with a live
+    ring entry."""
     logits, pre = lm.prefill(params, spec, batch,
                              max_seq=batch["tokens"].shape[1],
                              impl=impl, true_len=true_len)
     page = lm.paged_page_size(cache)
     n = batch["tokens"].shape[1] // page          # prompt pages (static)
+    if ring:
+        R = bt_row.shape[0]
+        apg = jnp.arange(n)
+        last_pg = (true_len - 1) // page
+        keep = (apg > last_pg - R) & (apg <= last_pg)
+        pv = jnp.where(keep, bt_row[apg % R], pc.NULL_PAGE)
+    else:
+        pv = bt_row[:n]
     new_groups = pc.scatter_prompt_pages(cache["groups"], pre["groups"],
-                                         bt_row[:n], page)
+                                         pv, page)
     new_cache = {
         "pos": cache["pos"].at[slot].set(true_len),
         "block_tables": cache["block_tables"].at[slot].set(bt_row),
@@ -90,25 +106,28 @@ def _admit_fn(params, batch, cache, slot, true_len, bt_row, *, spec, impl):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("spec", "n_prefix_pages", "mesh"),
+                   static_argnames=("spec", "n_prefix_pages", "mesh", "ring"),
                    donate_argnums=(2,))
 def _admit_prefix_fn(params, batch, cache, slot, prefix_len, true_len,
-                     bt_row, *, spec, n_prefix_pages, mesh=None):
+                     bt_row, *, spec, n_prefix_pages, mesh=None, ring=False):
     """Fused warm admission: prefill only the prompt SUFFIX against the
     slot's cached prefix pages (``lm.prefill_paged``) and sample the
-    first token.  Retraces per (suffix bucket, prefix-page bucket)."""
+    first token.  Retraces per (suffix bucket, prefix-page bucket).
+    ``ring=True`` follows the ring entry mapping for both the prefix
+    gather and the suffix scatter (see ``lm.prefill_paged``)."""
     logits, new_cache = lm.prefill_paged(
         params, spec, batch["tokens"], cache, slot, bt_row, prefix_len,
-        true_len, n_prefix_pages=n_prefix_pages, mesh=mesh)
+        true_len, n_prefix_pages=n_prefix_pages, ring=ring, mesh=mesh)
     return jnp.argmax(logits[0, 0]), new_cache
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "mesh", "shard_params"),
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "mesh", "shard_params", "ring"),
                    donate_argnums=(1,))
 def _decode_fn(params, cache, tokens, active, *, spec, mesh=None,
-               shard_params=False):
+               shard_params=False, ring=False):
     logits, cache = lm.decode_step(params, spec, cache, tokens, mesh=mesh,
-                                   shard_params=shard_params)
+                                   shard_params=shard_params, ring=ring)
     # pin inactive slots at pos 0 so their (clamped) block-table lookups
     # stay on the null page indefinitely
     cache["pos"] = cache["pos"] * active
@@ -120,10 +139,11 @@ def _decode_fn(params, cache, tokens, active, *, spec, mesh=None,
     return jnp.argmax(logits[:, 0], axis=-1), finite, cache
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "mesh", "shard_params"),
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "mesh", "shard_params", "ring"),
                    donate_argnums=(1,))
 def _decode_window_fn(params, cache, tokens, active, lens, *, spec,
-                      mesh=None, shard_params=False):
+                      mesh=None, shard_params=False, ring=False):
     """Fused speculative verify step: score a K-token window per slot
     (last committed token + K-1 drafts), greedy-accept drafts ON DEVICE,
     and advance each slot's pos by exactly the emitted count — the
@@ -137,7 +157,7 @@ def _decode_window_fn(params, cache, tokens, active, lens, *, spec,
     """
     pos0 = cache["pos"]
     logits, cache = lm.decode_window_paged(params, spec, cache, tokens,
-                                           lens, mesh=mesh,
+                                           lens, ring=ring, mesh=mesh,
                                            shard_params=shard_params)
     out = jnp.argmax(logits, axis=-1)                       # (B, K)
     K = tokens.shape[1]
@@ -300,24 +320,33 @@ class SingleDeviceBackend(PagedKVBackend):
 
     def __init__(self, params: Any, spec: ModelSpec, cfg):
         self.params, self.spec, self.cfg = params, spec, cfg
+        # Uniformly sliding-window stacks get a RING block table bounded
+        # at O(window) pages per slot (unless cfg.windowed_kv forces the
+        # mask-only reference); everything else keeps the flat layout.
+        self.window = pc.ring_window(spec, getattr(cfg, "windowed_kv", None))
+        self.ring = self.window > 0
         self.layout = pc.make_layout(
             spec, max_seq=cfg.max_seq, page_size=cfg.page_size,
             num_pages=cfg.num_pages, kv_budget_bytes=cfg.kv_budget_bytes,
             cache_dtype=cfg.cache_dtype, max_slots=cfg.max_slots,
-            tp=self.tp)
+            tp=self.tp, window=self.window,
+            spec_k=getattr(cfg, "spec_k", 1))
         self.plan = pc.plan_for_layout(spec, self.layout, cfg.cache_dtype)
         self.cache = self._init_cache()
         self._place()
         self._admit = functools.partial(_admit_fn, spec=spec,
-                                        impl=cfg.attention_impl)
+                                        impl=cfg.attention_impl,
+                                        ring=self.ring)
         self._admit_pref = functools.partial(_admit_prefix_fn, spec=spec,
-                                             mesh=self.mesh)
+                                             mesh=self.mesh, ring=self.ring)
         self._decode = functools.partial(_decode_fn, spec=spec,
                                          mesh=self.mesh,
-                                         shard_params=self.weights_sharded)
+                                         shard_params=self.weights_sharded,
+                                         ring=self.ring)
         self._decode_window = functools.partial(_decode_window_fn, spec=spec,
                                                 mesh=self.mesh,
-                                                shard_params=self.weights_sharded)
+                                                shard_params=self.weights_sharded,
+                                                ring=self.ring)
 
     def _init_cache(self):
         """Build the paged device cache; subclasses override to create

@@ -134,6 +134,44 @@ def pages_needed(tokens: int, page_size: int) -> int:
     return -(-tokens // page_size)
 
 
+def ring_window(spec: ModelSpec, windowed_kv: Optional[bool] = None) -> int:
+    """The sliding window the paged pool may RING-evict against, or 0.
+
+    Ring eviction frees a slot's pages once they fall fully behind
+    ``spec.sliding_window``, so it is only sound when EVERY KV-holding
+    layer is windowed (``attn_local``): one block table is shared by
+    all layers, and a single global-attention layer needs the full
+    context.  ``windowed_kv=None`` auto-detects; ``False`` forces the
+    mask-only (no-evict) reference behaviour — windowed attention math
+    with full-attention memory; ``True`` asserts the stack qualifies
+    (raises otherwise, rather than silently corrupting global layers).
+    """
+    if windowed_kv is False:
+        return 0
+    w = int(getattr(spec, "sliding_window", 0) or 0)
+    kinds = list(spec.layer_kinds())
+    uniform = w > 0 and kinds and all(k == "attn_local" for k in kinds)
+    if windowed_kv and not uniform:
+        raise ValueError(
+            f"windowed_kv=True but {spec.name} is not a uniformly "
+            f"sliding-window stack (kinds: {sorted(set(kinds))}, "
+            f"window={w})")
+    return w if uniform else 0
+
+
+def ring_pages(window: int, page_size: int, spec_k: int = 1) -> int:
+    """Ring block-table capacity in pages: enough to cover ``window``
+    keys for the EARLIEST of ``spec_k`` speculative queries (span
+    ``window + spec_k - 1`` tokens) plus one straddle page — the
+    per-slot KV bound that holds for unbounded streams.  The +1 also
+    guarantees a spec-k rollback landing before the ring's write head
+    never re-enters an already-recycled page."""
+    if window <= 0:
+        raise ValueError("ring_pages needs window > 0")
+    span = window + max(spec_k, 1) - 1
+    return pages_needed(span, page_size) + 1
+
+
 # ---------------------------------------------------------------------------
 # Prefix store
 # ---------------------------------------------------------------------------
@@ -318,12 +356,19 @@ class ParkedKV:
     Pages whose refcount was > 1 at swap-out (shared prefix pages) are
     COPIED into the blob, never stolen: the other holders keep the
     device page; the parked slot resumes into fresh pages.
+
+    For RING slots (windowed KV) the page rows are gathered in ENTRY
+    order — rejoining scatters them back at the same ring entries, so
+    the entry -> absolute-page mapping (a pure function of the restored
+    length) is preserved; ``abs_pages`` records how many absolute pages
+    the stream had ever covered (>= ``n_pages`` once wrapped).
     """
     context: np.ndarray
     written: int
     n_pages: int
     blob: object
     nbytes: int
+    abs_pages: Optional[int] = None
 
 
 def blob_nbytes(blob) -> int:
@@ -418,7 +463,8 @@ def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
                 mem: Optional[MemoryBreakdown] = None,
                 cache_dtype: str = "fp32",
                 max_slots: Optional[int] = None,
-                tp: int = 1) -> lm.PagedLayout:
+                tp: int = 1, window: int = 0,
+                spec_k: int = 1) -> lm.PagedLayout:
     """Size the page pool: explicit ``num_pages``, a raw byte budget, or
     a ``MemoryBreakdown`` + device size (budget = what weights and
     activations leave free, eq. (9)'s residual term).  Byte budgets are
@@ -428,8 +474,16 @@ def make_layout(spec: ModelSpec, *, max_seq: int, page_size: int = 16,
     edge-cluster capacity story ``core.analytical.plan_paged_cache``
     prices.  With ``max_slots`` the pool is capped at the addressable
     maximum (every slot full plus the null page) — a bigger pool is
-    pure scatter/donation overhead."""
+    pure scatter/donation overhead.
+
+    ``window > 0`` sizes block-table rows as RINGS of
+    ``ring_pages(window, page_size, spec_k)`` entries instead of
+    ``max_seq // page_size`` — per-slot KV is O(window) regardless of
+    context length, so the same pool bytes admit proportionally more
+    slots (and the ``max_slots`` cap shrinks to the ring bound)."""
     pps = pages_needed(max_seq, page_size)
+    if window:
+        pps = min(pps, ring_pages(window, page_size, spec_k))
     if num_pages is None:
         if kv_budget_bytes is None:
             if device_bytes is None or mem is None:

@@ -195,6 +195,18 @@ class SchedulerConfig:
     # idle this many scheduler iterations (0 = never on the timer;
     # pressure from _reserve still parks/drops idle slots on demand)
     idle_park_iterations: int = 8
+    # windowed (ring) KV for uniformly sliding-window stacks: None
+    # auto-detects (ring when every KV layer is attn_local with a
+    # window — gemma-style local stacks), False forces the mask-only
+    # reference (windowed attention math, full-attention memory: the
+    # token-identity baseline the --window gate compares against), True
+    # asserts the stack qualifies.  With the ring each slot's KV is
+    # bounded at O(window) pages forever — out-of-window pages are
+    # recycled in place when exclusively owned and their reference
+    # dropped (never stolen) when the prefix store or another slot
+    # still shares them — so the same pool bytes admit proportionally
+    # more concurrent unbounded streams.
+    windowed_kv: Optional[bool] = None
     # audit mode: run allocator + host-pool + slot/page invariant
     # checks after every step() so a refcount bug surfaces at the
     # iteration that caused it (tier-1 test fixtures enable this)
@@ -227,6 +239,14 @@ class _Slot:
     session: Optional[int] = None
     idle: bool = False
     idle_since: float = 0.0            # stats["iterations"] stamp
+    # ring KV bookkeeping: ABSOLUTE pages this slot's context has ever
+    # covered.  On flat engines it always equals len(pages); on ring
+    # engines it keeps counting past the ring capacity R while
+    # len(pages) stays pinned at R — the write head's next ring entry
+    # is abs_pages % R, and abs_pages > len(pages) means the slot has
+    # wrapped (its entries hold the LAST R absolute pages, the
+    # out-of-window remainder recycled)
+    abs_pages: int = 0
 
     @property
     def done(self) -> bool:
@@ -304,6 +324,12 @@ class ContinuousBatchingEngine:
             SingleDeviceBackend(params, spec, cfg)
         self.layout = self.backend.layout
         self.plan = self.backend.plan
+        # ring KV: the backend resolved cfg.windowed_kv against the
+        # stack (window > 0 only when every KV layer is attn_local) and
+        # sized pages_per_slot to the O(window) ring capacity R — every
+        # slot's KV is bounded at R pages no matter how long it streams
+        self.window = int(getattr(self.backend, "window", 0) or 0)
+        self.ring = bool(getattr(self.backend, "ring", False))
         self.alloc = pc.PageAllocator(self.layout.num_pages)
         self.prefix_cache: Optional[pc.PrefixCache] = (
             pc.PrefixCache(self.alloc, cfg.page_size)
@@ -350,7 +376,14 @@ class ContinuousBatchingEngine:
             "swap_outs": 0, "swap_ins": 0, "swapped_out_pages": 0,
             "swapped_in_pages": 0, "idle_parks": 0, "idle_drops": 0,
             "session_reuses": 0, "session_prompt_tokens": 0,
-            "session_hit_tokens": 0}
+            "session_hit_tokens": 0,
+            # ring KV: exclusively-owned pages recycled in place as
+            # they fell out of the window (each one is an allocation —
+            # and a potential preemption — the flat engine would have
+            # paid), and shared pages whose reference this slot
+            # released for a fresh one (prefix store / other holders
+            # kept the bytes; nothing was stolen)
+            "ring_recycled_pages": 0, "ring_shared_released": 0}
         # injectable wall clock for deadline shedding (tests freeze it)
         self.clock = time.monotonic
 
@@ -362,6 +395,11 @@ class ContinuousBatchingEngine:
             raise ValueError(f"request {req.uid}: context {total} exceeds "
                              f"max_seq {self.cfg.max_seq}")
         n_pages = pc.pages_needed(total, self.cfg.page_size)
+        if self.ring:
+            # ring KV: a slot never holds more than the ring capacity,
+            # however long the stream — O(window) admission sizing is
+            # exactly what multiplies concurrency at fixed pool bytes
+            n_pages = min(n_pages, self.layout.slots_pages(self.cfg.max_seq))
         if n_pages > self.layout.num_pages - 1:
             # would never admit even running SOLO with the whole store
             # evicted: run() would spin on the FCFS head forever
@@ -600,7 +638,7 @@ class ContinuousBatchingEngine:
             self.host_pool.park(key, pc.ParkedKV(
                 context=context, written=len(context) - 1,
                 n_pages=len(slot.pages), blob=blob,
-                nbytes=pc.blob_nbytes(blob)))
+                nbytes=pc.blob_nbytes(blob), abs_pages=slot.abs_pages))
             self.stats["idle_parks"] += 1
             self.stats["swapped_out_pages"] += len(slot.pages)
         else:
@@ -640,7 +678,7 @@ class ContinuousBatchingEngine:
         self.host_pool.park(key, pc.ParkedKV(
             context=new_prompt, written=len(new_prompt) - 1,
             n_pages=len(slot.pages), blob=blob,
-            nbytes=pc.blob_nbytes(blob)))
+            nbytes=pc.blob_nbytes(blob), abs_pages=slot.abs_pages))
         self.alloc.free(slot.pages)
         self.slots[idx] = None
         self.queue.appendleft(Request(
@@ -766,7 +804,11 @@ class ContinuousBatchingEngine:
             draft.extend(slot.prompt.tolist())
             draft.extend([tok0])
             slot.draft = draft
-        if self.prefix_cache is not None:
+        # a WRAPPED ring slot's entries no longer map absolute prompt
+        # pages flat (the out-of-window prefix was recycled), so only
+        # prompts that still sit unwrapped publish to the prefix store
+        if (self.prefix_cache is not None
+                and slot.abs_pages <= len(slot.pages)):
             self.prefix_cache.register_prompt(slot.prompt, slot.pages)
 
     def _continue_prefills(self, budget: Optional[int]) -> Optional[int]:
@@ -797,7 +839,12 @@ class ContinuousBatchingEngine:
                 slot.prefilled:slot.prefilled + chunk]
             row = np.full((row_len,), pc.NULL_PAGE, np.int32)
             row[:len(slot.pages)] = slot.pages
-            npp = _pow2_pages(pc.pages_needed(slot.prefilled, page), row_len)
+            # ring engines gather the WHOLE ring (the entry↔absolute-
+            # page mapping is mod-R over all entries); flat engines
+            # bucket the written-prefix width for compile reuse
+            npp = (row_len if self.ring else
+                   _pow2_pages(pc.pages_needed(slot.prefilled, page),
+                               row_len))
             tok0 = self.backend.prefill_chunk(
                 padded, i, slot.prefilled, chunk, row, n_prefix_pages=npp)
             slot.prefilled += chunk
@@ -829,7 +876,8 @@ class ContinuousBatchingEngine:
         padded[0, :chunk] = slot.prompt[matched:matched + chunk]
         row = np.full((row_len,), pc.NULL_PAGE, np.int32)
         row[:len(slot.pages)] = slot.pages
-        npp = _pow2_pages(pc.pages_needed(matched, page), row_len)
+        npp = (row_len if self.ring else
+               _pow2_pages(pc.pages_needed(matched, page), row_len))
         tok0 = (self.backend.admit_prefix(padded, i, matched, chunk, row,
                                           n_prefix_pages=npp)
                 if chunk == suffix_len else
@@ -874,14 +922,18 @@ class ContinuousBatchingEngine:
             return budget
         written = ctx - 1
         headroom = self.num_active
-        extra = max(pc.pages_needed(plen, self.cfg.page_size),
-                    len(slot.pages)) - len(slot.pages)
         slot.idle = False          # claim the slot: _reserve must not park it
-        if extra > 0:
-            if not self._reserve(extra + headroom):
-                slot.idle = True
-                return budget      # FCFS: wait for pages
-            slot.pages.extend(self.alloc.alloc(extra))
+        # cover the new turn's pages before its suffix prefill installs
+        # the block-table row: appends while the ring is filling, and on
+        # a full ring advances entries (CoW-releasing any the prefix
+        # store still shares) so the suffix never scatters into shared
+        # bytes.  Partial progress is kept on failure — the retry next
+        # iteration resumes where this one stopped.
+        target = max(pc.pages_needed(plen, self.cfg.page_size),
+                     slot.abs_pages)
+        if not self._ring_extend(slot, target, headroom=headroom):
+            slot.idle = True
+            return budget          # FCFS: wait for pages
         self.queue.popleft()
         slot.uid = req.uid
         slot.prompt = req.prompt
@@ -947,7 +999,13 @@ class ContinuousBatchingEngine:
             return ("miss", budget)
         if budget is not None and self._chunk_quota(budget) == 0:
             return ("wait", budget)
-        n_total = max(pc.pages_needed(plen, page), rec.n_pages)
+        need = pc.pages_needed(plen, page)
+        if self.ring:
+            # the rejoined stream is ring-bounded like any other slot;
+            # a turn extending past the ring wraps over the scattered
+            # pages in entry order (all freshly allocated — exclusive)
+            need = min(need, self.layout.slots_pages(self.cfg.max_seq))
+        n_total = max(need, rec.n_pages)
         headroom = self.num_active
         if not self._reserve(n_total + headroom):
             if self.num_active == 0:
@@ -971,7 +1029,8 @@ class ContinuousBatchingEngine:
         slot = _Slot(req.uid, req.prompt, plen, req.max_new_tokens, pages,
                      -1, self._admit_seq, [], None, prefilled=rec.written,
                      deadline_s=req.deadline_s, retries_left=req.retries,
-                     arrival_t=req.arrival_t, session=req.session)
+                     arrival_t=req.arrival_t, session=req.session,
+                     abs_pages=max(pc.pages_needed(plen, page), n_total))
         self.slots[i] = slot
         self._admit_seq += 1
         self.stats["admitted"] += 1
@@ -1021,9 +1080,22 @@ class ContinuousBatchingEngine:
                 # "miss": record dropped — fall through to cold admission
             plen = len(req.prompt)
             n_prompt_pages = pc.pages_needed(plen, page)
+            # ring KV: the slot holds at most the ring capacity — a
+            # prompt wider than that wraps over its own entries during
+            # prefill (the scatter routes below-horizon rows to the
+            # null page), so admission allocates O(window) pages however
+            # long the prompt
+            n_slot_pages = (min(n_prompt_pages, row_len) if self.ring
+                            else n_prompt_pages)
             match = (self.prefix_cache.lookup(req.prompt)
                      if self.prefix_cache is not None
                      else pc.PrefixMatch([], None, 0))
+            if self.ring and n_prompt_pages > row_len:
+                # the prompt wraps before prefill completes: matched
+                # flat prefix pages cannot sit at ring entries (entry j
+                # must end up holding the LAST absolute page ≡ j mod R)
+                # — skip reuse rather than install a wrong layout
+                match = pc.PrefixMatch([], None, 0)
             # Try the richest reuse first; with live slots a failed
             # reserve just WAITS (they finish and free pages, and the
             # matched entries survive for the retry).  With NO live
@@ -1053,7 +1125,7 @@ class ContinuousBatchingEngine:
                     pinned.append(partial[0])
                 if pinned:
                     self.alloc.share(pinned)
-                fresh_needed = n_prompt_pages - len(full_pages)
+                fresh_needed = n_slot_pages - len(full_pages)
                 if self._reserve(fresh_needed + headroom):
                     plan = (full_pages, partial, matched, fresh_needed)
                     break
@@ -1093,8 +1165,9 @@ class ContinuousBatchingEngine:
                     spad = _bucket(chunk, page, self.cfg.max_seq)
                     padded = np.zeros((1, spad), np.int32)
                     padded[0, :chunk] = req.prompt[matched:matched + chunk]
-                    npp = _pow2_pages(pc.pages_needed(matched, page),
-                                      row_len)
+                    npp = (row_len if self.ring else
+                           _pow2_pages(pc.pages_needed(matched, page),
+                                       row_len))
                     tok0 = (self.backend.admit_prefix(
                                 padded, i, matched, chunk, row,
                                 n_prefix_pages=npp)
@@ -1119,7 +1192,8 @@ class ContinuousBatchingEngine:
                          pages, -1, self._admit_seq, [], None,
                          prefilled=matched + chunk,
                          deadline_s=req.deadline_s, retries_left=req.retries,
-                         arrival_t=req.arrival_t, session=req.session)
+                         arrival_t=req.arrival_t, session=req.session,
+                         abs_pages=n_prompt_pages)
             self.slots[i] = slot
             self._admit_seq += 1
             self.stats["admitted"] += 1
@@ -1137,6 +1211,56 @@ class ContinuousBatchingEngine:
                 self.stats["prefill_chunks"] += 1
             else:
                 self._complete_prefill(slot, tok0)
+
+    def _ring_extend(self, slot: _Slot, need_abs: int,
+                     updates: Optional[List[tuple]] = None,
+                     headroom: int = 0) -> bool:
+        """Advance a ring slot's entries until its context covers
+        ``need_abs`` absolute pages.  While the slot is still filling
+        its ring (len(pages) < R) this appends pages exactly like flat
+        growth.  Once the ring is full, advancing over an entry whose
+        page this slot owns EXCLUSIVELY recycles the physical page in
+        place — no allocation, no block-table write, the out-of-window
+        rows simply get overwritten (the kernel's ring token math masks
+        them the moment the write head enters the new absolute page).
+        An entry still SHARED (prefix store, another slot) is never
+        stolen: this slot drops its reference and installs a fresh page
+        at the entry, so every other holder keeps the original bytes.
+        ``updates`` (when given) collects (entry, page) block-table
+        writes for entries whose physical page changed.  Returns False
+        when an allocation is needed but ``_reserve`` cannot make room
+        (partial progress is kept — callers escalate and retry).
+
+        Flat engines run the same code: their ring capacity IS the
+        full per-slot page count, so only the append branch ever
+        executes and growth is byte-identical to the pre-ring path."""
+        R = self.layout.slots_pages(self.cfg.max_seq)
+        while slot.abs_pages < need_abs:
+            if len(slot.pages) < R:
+                if not self._reserve(1 + headroom):
+                    return False
+                pg = self.alloc.alloc(1)[0]
+                slot.pages.append(pg)
+                if updates is not None:
+                    updates.append((len(slot.pages) - 1, pg))
+                slot.abs_pages += 1
+                continue
+            e = slot.abs_pages % R
+            old = slot.pages[e]
+            if self.alloc.refcount(old) == 1:
+                slot.abs_pages += 1      # exclusive: recycle in place
+                self.stats["ring_recycled_pages"] += 1
+                continue
+            if not self._reserve(1 + headroom):
+                return False
+            pg = self.alloc.alloc(1)[0]
+            self.alloc.free([old])       # drop OUR ref; holders keep it
+            slot.pages[e] = pg
+            if updates is not None:
+                updates.append((e, pg))
+            slot.abs_pages += 1
+            self.stats["ring_shared_released"] += 1
+        return True
 
     def _grow(self, window: Optional[Dict[int, int]] = None) -> None:
         """Lazy decode allocation: give every live slot the page(s) its
@@ -1158,13 +1282,13 @@ class ContinuousBatchingEngine:
                 continue
             w = window.get(i, 1) if window is not None else 1
             write_pos = slot.prompt_len + len(slot.generated) - 1
-            need_idx = (write_pos + w - 1) // page
-            while slot is self.slots[i] and need_idx >= len(slot.pages):
-                if self._reserve(1):
-                    new_page = self.alloc.alloc(1)[0]
-                    slot.pages.append(new_page)
-                    updates.append((i, len(slot.pages) - 1, new_page))
-                    continue
+            need_abs = (write_pos + w - 1) // page + 1
+            while slot is self.slots[i] and slot.abs_pages < need_abs:
+                ups: List[tuple] = []
+                ok = self._ring_extend(slot, need_abs, updates=ups)
+                updates.extend((i, e, pg) for e, pg in ups)
+                if ok:
+                    break
                 victim = self._pick_victim()
                 assert victim is not None    # slot i itself is live
                 # drop any block-table updates queued for the victim
@@ -1249,6 +1373,7 @@ class ContinuousBatchingEngine:
         self.alloc.check()
         if self.host_pool is not None:
             self.host_pool.check()
+        R = self.layout.slots_pages(self.cfg.max_seq)
         for s in self.slots:
             if s is None:
                 continue
@@ -1260,6 +1385,18 @@ class ContinuousBatchingEngine:
             if s.idle:
                 assert s.session is not None and s.done, \
                     f"idle slot {s.uid} without a finished session turn"
+            # ring bound: no slot ever holds more than the ring
+            # capacity, and a wrapped counter only exists on a FULL
+            # ring (the append phase keeps abs == held)
+            assert len(s.pages) <= R, \
+                f"slot {s.uid} holds {len(s.pages)} pages > ring cap {R}"
+            assert s.abs_pages == len(s.pages) or len(s.pages) == R, \
+                (f"slot {s.uid} wrapped (abs={s.abs_pages}) with a "
+                 f"part-filled ring ({len(s.pages)}/{R})")
+            if not self.ring:
+                assert s.abs_pages == len(s.pages), \
+                    f"flat slot {s.uid} abs_pages {s.abs_pages} != " \
+                    f"{len(s.pages)} held"
 
     def step(self) -> List[Completion]:
         """Grow + admit + decode one WINDOW (one token unless speculating)

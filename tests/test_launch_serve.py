@@ -44,6 +44,18 @@ def test_paged_engine_cli_spec_decode():
     assert "spec decode:" in out and "drafts" in out
 
 
+def test_paged_engine_cli_windowed_int4():
+    """gemma3 reduced to its attn_local layers + --sliding-window:
+    the paged engine must auto-switch to ring block tables (O(window)
+    KV per slot) with int4 pages, and the run must actually wrap."""
+    out = _serve("--arch", "gemma3-4b", *TINY, "--engine", "paged",
+                 "--cache-dtype", "int4", "--sliding-window", "16",
+                 "--steps", "32")
+    assert "paged engine (int4 pages" in out
+    assert "sliding window 16: ring tables 2 pages/slot" in out
+    assert "pages recycled in place" in out
+
+
 def test_paged_engine_cli_sharded():
     out = _serve(*TINY, "--engine", "paged", "--cache-dtype", "int4",
                  "--devices", "2",

@@ -1,11 +1,17 @@
 """Refcounted prefix caching + lazy allocation/preemption invariants.
 
-Four blocks:
+Five blocks:
 
 * refcounted ``PageAllocator`` fuzz — random interleavings of
   alloc/share/free/evict against a model of expected refcounts, both as
   a hypothesis property (where dev deps are installed) and as an
   always-on numpy interleaving sweep;
+* windowed (ring) slot fuzz — the same store/allocator under ring
+  advancement: slots hold at most ``R`` pages, advancing over an
+  exclusive entry recycles the page in place, and advancing over a
+  SHARED entry (a prefix page falling out of the window) must
+  decrement the sharer's reference and never free it under the store
+  or other holders;
 * ``PrefixCache`` store semantics (cumulative hashing, LRU eviction
   that skips shared pages, collision guard, flush);
 * scheduler equivalence — prefix caching ON is token-for-token prefix
@@ -171,6 +177,104 @@ def test_prefix_store_evict_cow_share_numpy_interleavings():
         _drive_evict_cow_share(ops)
 
 
+def _drive_windowed_ring_slots(ops, R=3):
+    """Walk one op tape of WINDOWED (ring) slots against the refcounted
+    store: slots admit on prefix hits (shared pages land at ring
+    entries), their write head advances page by page, and once a slot
+    holds ``R`` pages an advance lands on the ring's oldest entry — an
+    EXCLUSIVE page is recycled in place (no allocator traffic at all),
+    a SHARED page (a cached prefix page that just fell out of the
+    window) gets the slot's reference decremented while the store and
+    any co-holders keep it alive.  Mirrors
+    ``scheduler._ring_extend``'s exact allocator discipline; asserts
+    the ring bound, holder refcounts and allocator invariants after
+    every op, and a clean drain."""
+    alloc = pc.PageAllocator(20)
+    store = pc.PrefixCache(alloc, page_size=4)
+    base = np.arange(1000, dtype=np.int32)
+    chains = []
+    slots = {}                      # sid -> {"pages": [...], "abs": int}
+    next_sid = 0
+    recycled = released = 0
+    for kind, arg in ops:
+        if kind == 0:               # register a fresh chain in the store
+            plen = 3 + arg % 9
+            prompt = np.concatenate(
+                [np.asarray([2000 + len(chains)], np.int32), base[:plen]])
+            n = pc.pages_needed(len(prompt), 4)
+            if alloc.can_alloc(n):
+                pages = alloc.alloc(n)
+                store.register_prompt(prompt, pages)
+                alloc.free(pages)   # owner finishes; store-only now
+                chains.append(prompt)
+        elif kind == 1 and chains:  # admit a windowed slot on a hit
+            prompt = chains[arg % len(chains)]
+            ext = np.concatenate([prompt, base[900:902]])
+            m = store.lookup(ext)
+            held = list(m.full_pages[:R])   # ring slots hold <= R entries
+            if held:
+                alloc.share(held)
+                slots[next_sid] = {"pages": held, "abs": len(held)}
+                next_sid += 1
+        elif kind == 2 and slots:   # advance a slot's write head one page
+            s = slots[sorted(slots)[arg % len(slots)]]
+            if len(s["pages"]) < R:
+                if alloc.can_alloc(1):
+                    s["pages"].append(alloc.alloc(1)[0])
+                    s["abs"] += 1
+            else:
+                e = s["abs"] % R
+                old = s["pages"][e]
+                if alloc.refcount(old) == 1:
+                    recycled += 1   # exclusive: reuse in place, no traffic
+                    s["abs"] += 1
+                elif alloc.can_alloc(1):
+                    before = alloc.refcount(old)
+                    s["pages"][e] = alloc.alloc(1)[0]
+                    alloc.free([old])
+                    assert alloc.refcount(old) == before - 1 >= 1, \
+                        "a shared prefix page falling out of the window " \
+                        "must decrement, never free under its holders"
+                    s["abs"] += 1
+                    released += 1
+        elif kind == 3 and slots:   # a slot finishes
+            sid = sorted(slots)[arg % len(slots)]
+            alloc.free(slots.pop(sid)["pages"])
+        elif kind == 4:             # pressure: LRU evict store-only pages
+            want = 1 + arg % 4
+            before_free = alloc.free_pages
+            freed = store.evict(want)
+            assert freed <= want
+            assert alloc.free_pages == before_free + freed
+        for s in slots.values():
+            assert len(s["pages"]) <= R, "ring bound violated"
+            assert s["abs"] >= len(s["pages"])
+            for p in set(s["pages"]):
+                assert alloc.refcount(p) >= s["pages"].count(p)
+        alloc.check()
+    for s in slots.values():
+        alloc.free(s["pages"])
+    store.flush()
+    alloc.check()
+    assert alloc.free_pages == 19
+    return recycled, released
+
+
+def test_windowed_ring_slots_numpy_interleavings():
+    """150 random windowed-slot tapes (always runs); across the sweep
+    both ring paths — in-place recycle AND shared-entry release — must
+    actually fire, or the tape generator stopped exercising the ring."""
+    recycled = released = 0
+    for seed in range(150):
+        rng = np.random.default_rng(seed)
+        ops = [(int(rng.integers(0, 5)), int(rng.integers(0, 10 ** 6)))
+               for _ in range(120)]
+        r, s = _drive_windowed_ring_slots(ops)
+        recycled += r
+        released += s
+    assert recycled > 0 and released > 0
+
+
 # hypothesis property: random op tapes never violate the invariants.
 # Imported guardedly (NOT module-level importorskip) so the numpy sweep
 # above still runs where dev deps are absent.
@@ -225,6 +329,14 @@ if _HAVE_HYPOTHESIS:
         """Shrinking search over the same evict x CoW x share tape
         walker the numpy sweep drives (``_drive_evict_cow_share``)."""
         _drive_evict_cow_share(ops)
+
+    @given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 10 ** 6)),
+                    min_size=1, max_size=120))
+    @settings(max_examples=150, deadline=None)
+    def test_windowed_ring_slots_property(ops):
+        """Shrinking search over the windowed-slot tape walker
+        (``_drive_windowed_ring_slots``)."""
+        _drive_windowed_ring_slots(ops)
 else:
     @pytest.mark.skip(reason="hypothesis not installed (see "
                              "requirements-dev.txt); the numpy "
@@ -236,6 +348,13 @@ else:
                              "requirements-dev.txt); the engine-level "
                              "prefix/preemption tests cover evict + CoW")
     def test_prefix_store_evict_cow_share_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed (see "
+                             "requirements-dev.txt); the numpy "
+                             "interleaving sweep covers the ring "
+                             "invariants")
+    def test_windowed_ring_slots_property():
         pass
 
 

@@ -104,6 +104,114 @@ def test_pack_unpack_int4_axis_roundtrip():
 
 
 # ---------------------------------------------------------------------------
+# Ring block tables: the O(window) sliding-window pool layout
+# ---------------------------------------------------------------------------
+
+RING_PAGE, RING_R, RING_WINDOW = 8, 3, 13
+# B=5 lengths cover: empty slot, single page, ring-capacity boundary
+# (exactly R full pages, unwrapped), just-wrapped ending mid-byte for
+# int4, and a deep wrap several laps in
+RING_LENGTHS = [0, 8, 24, 25, 41]
+
+
+def _ring_fixture(seed, lengths, wq=0, B=5, H=4, KV=2, D=16):
+    """A flat pool + the SAME tokens laid out as the ring writer leaves
+    them: absolute page ``ap`` scattered to ring entry ``ap % R`` in
+    order, later laps overwriting earlier ones; never-written entries
+    hold garbage (they must be masked, which is what the tests pin)."""
+    page, R = RING_PAGE, RING_R
+    rng = np.random.default_rng(seed)
+    pps = (max(lengths) + page - 1) // page
+    Pf = B * pps + 1
+    qshape = (B, wq, H, D) if wq else (B, H, D)
+    q = jnp.asarray(rng.normal(size=qshape), jnp.float32)
+    kf = rng.normal(size=(Pf, page, KV, D))
+    vf = rng.normal(size=(Pf, page, KV, D))
+    bt_flat = np.arange(1, Pf).reshape(B, pps)
+    Pr = B * R + 1
+    kr = rng.normal(size=(Pr, page, KV, D))          # stale-entry garbage
+    vr = rng.normal(size=(Pr, page, KV, D))
+    bt_ring = np.arange(1, Pr).reshape(B, R)
+    for b, ln in enumerate(lengths):
+        for ap in range((int(ln) - 1) // page + 1 if ln else 0):
+            kr[bt_ring[b, ap % R]] = kf[bt_flat[b, ap]]
+            vr[bt_ring[b, ap % R]] = vf[bt_flat[b, ap]]
+    return (q, jnp.asarray(kf, jnp.float32), jnp.asarray(vf, jnp.float32),
+            jnp.asarray(bt_flat, jnp.int32), jnp.asarray(kr, jnp.float32),
+            jnp.asarray(vr, jnp.float32), jnp.asarray(bt_ring, jnp.int32),
+            jnp.asarray(lengths, jnp.int32))
+
+
+@pytest.mark.parametrize("quant", ["fp32", "int8", "int4"])
+def test_ring_ref_matches_flat_oracle(quant):
+    """The ring layout must be pure relabeling: the flat ref (full
+    O(context) table) with the same window is the oracle, and page
+    contents are identical where valid, so agreement is exact — any
+    drift means the ring token math read a stale or wrong entry.
+    Quantized pools quantize per token row, so garbage rows in
+    recycled/unwritten ring pages cannot leak into valid rows (int4's
+    mid-byte nibble neighbour included: length 25 ends mid-byte)."""
+    q, kf, vf, btf, kr, vr, btr, lengths = _ring_fixture(7, RING_LENGTHS)
+    kpf, vpf, ksf, vsf = _quantize_pools(quant, kf, vf)
+    kpr, vpr, ksr, vsr = _quantize_pools(quant, kr, vr)
+    o_flat = ref.paged_attention_ref(q, kpf, vpf, btf, lengths,
+                                     window=RING_WINDOW, k_scale=ksf,
+                                     v_scale=vsf)
+    o_ring = ref.paged_attention_ref(q, kpr, vpr, btr, lengths,
+                                     window=RING_WINDOW, ring=True,
+                                     k_scale=ksr, v_scale=vsr)
+    np.testing.assert_allclose(np.asarray(o_flat), np.asarray(o_ring),
+                               rtol=2e-6, atol=2e-6)
+    assert float(jnp.max(jnp.abs(o_ring[0]))) == 0.0   # empty slot
+
+
+@pytest.mark.parametrize("quant,tol", [("fp32", 2e-6), ("int8", 1e-5),
+                                       ("int4", 1e-4)])
+def test_ring_kernel_matches_ref(quant, tol):
+    """Pallas ring mode (grid over the R ring entries, ring token
+    positions in the mask) vs the gather ref, all cache dtypes, at the
+    page-boundary / wrap lengths."""
+    q, _, _, _, kr, vr, btr, lengths = _ring_fixture(8, RING_LENGTHS)
+    kp, vp, ks, vs = _quantize_pools(quant, kr, vr)
+    o_ref = ref.paged_attention_ref(q, kp, vp, btr, lengths,
+                                    window=RING_WINDOW, ring=True,
+                                    k_scale=ks, v_scale=vs)
+    o_pal = paged_attention_pallas(q, kp, vp, btr, lengths,
+                                   window=RING_WINDOW, ring=True,
+                                   k_scale=ks, v_scale=vs, interpret=True)
+    assert float(jnp.max(jnp.abs(o_pal - o_ref))) <= tol
+    assert float(jnp.max(jnp.abs(o_pal[0]))) == 0.0
+
+
+@pytest.mark.parametrize("quant,tol", [("fp32", 2e-6), ("int8", 1e-5),
+                                       ("int4", 1e-4)])
+def test_ring_verify_window_rollback_across_wrap(quant, tol):
+    """Spec-k verify windows on a ring: K=4 queries share one pass, and
+    the lengths put the EARLIEST query's window start on the ring's
+    oldest live entry — the post-rollback re-verify after a rejected
+    draft crossed the wrap (``ring_pages``'s +1 straddle page is what
+    guarantees that entry was never recycled).  Flat oracle + kernel
+    parity; exactness vs the oracle pins the per-query ring masks."""
+    WQ = 4
+    lengths = [17, 24, 28, 33, 41]   # boundary, just-wrapped, deep wrap
+    q, kf, vf, btf, kr, vr, btr, ln = _ring_fixture(9, lengths, wq=WQ)
+    kpf, vpf, ksf, vsf = _quantize_pools(quant, kf, vf)
+    kpr, vpr, ksr, vsr = _quantize_pools(quant, kr, vr)
+    o_flat = ref.paged_attention_ref(q, kpf, vpf, btf, ln,
+                                     window=RING_WINDOW, k_scale=ksf,
+                                     v_scale=vsf)
+    o_ring = ref.paged_attention_ref(q, kpr, vpr, btr, ln,
+                                     window=RING_WINDOW, ring=True,
+                                     k_scale=ksr, v_scale=vsr)
+    np.testing.assert_allclose(np.asarray(o_flat), np.asarray(o_ring),
+                               rtol=2e-6, atol=2e-6)
+    o_pal = paged_attention_pallas(q, kpr, vpr, btr, ln,
+                                   window=RING_WINDOW, ring=True,
+                                   k_scale=ksr, v_scale=vsr, interpret=True)
+    assert float(jnp.max(jnp.abs(o_pal - o_ring))) <= tol
+
+
+# ---------------------------------------------------------------------------
 # ops dispatch: identical rules for all three cache dtypes
 # ---------------------------------------------------------------------------
 

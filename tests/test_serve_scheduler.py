@@ -716,3 +716,140 @@ def test_session_stale_prompt_drops_and_admits_cold():
     ref2 = fresh.run([Request(1, p2.copy(), 8)])[0]
     np.testing.assert_array_equal(t2.tokens, ref2.tokens)
     eng.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Ring-paged sliding-window KV (windowed slots)
+# ---------------------------------------------------------------------------
+
+def _windowed_setup(window=8, layers=2, width=64, vocab=128):
+    """A uniformly attn_local stack (gemma3 scaled down keeps only
+    local layers at 2 layers with a 5:1 ratio) — the shape ring
+    eviction auto-detects on."""
+    spec = ASSIGNED["gemma3-4b"].scaled_down(
+        layers=layers, width=width, vocab=vocab).with_(
+        sliding_window=window, local_global_ratio=5)
+    params = lm.init(jax.random.PRNGKey(0), spec)
+    return spec, params
+
+
+@pytest.mark.parametrize("spec_k", [1, 3])
+def test_ring_engine_token_identical_to_mask_only(spec_k):
+    """Ring eviction (windowed_kv auto-detected) vs the mask-only
+    reference (windowed attention math, full-attention memory) on
+    streams running many laps past the window: token-for-token
+    identical, per-slot pages bounded at ring_pages (debug_invariants
+    asserts it every step), and the ring actually recycled.  spec_k=3
+    runs the same comparison under self-speculative decoding, whose
+    rollbacks repeatedly land verify windows across the ring wrap."""
+    spec, params = _windowed_setup(window=8)
+    rng = np.random.default_rng(4)
+    reqs = [Request(i, rng.integers(1, 128,
+                                    size=int(rng.integers(5, 14))).astype(
+                        np.int32), int(rng.integers(18, 30)))
+            for i in range(6)]
+
+    def go(windowed_kv):
+        cfg = SchedulerConfig(max_slots=3, page_size=4, max_seq=48,
+                              num_pages=40, spec_k=spec_k,
+                              windowed_kv=windowed_kv,
+                              debug_invariants=True)
+        eng = ContinuousBatchingEngine(params, spec, cfg)
+        done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                        for r in reqs])
+        eng.alloc.check()
+        return eng, sorted(done, key=lambda c: c.uid)
+
+    ring_eng, ring_done = go(None)
+    ref_eng, ref_done = go(False)
+    assert ring_eng.ring and ring_eng.window == 8
+    assert not ref_eng.ring and ref_eng.window == 0
+    R = pc.ring_pages(8, 4, spec_k)
+    assert ring_eng.layout.slots_pages(48) == R
+    assert ring_eng.stats["ring_recycled_pages"] > 0
+    for a, b in zip(ring_done, ref_done):
+        assert a.uid == b.uid
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+def test_ring_engine_matches_static_generate_under_pressure():
+    """windowed_kv=True (assertive mode) with a pool too small for the
+    mask-only layout: the ring bound is what makes the workload fit,
+    preemption still fires, and every output matches the static
+    windowed generate (naive attention honors the same sliding
+    window).  Shared prefix pages crossing out of the window must be
+    RELEASED to the store, not freed — the drain check catches either
+    direction of refcount corruption."""
+    spec, params = _windowed_setup(window=8)
+    rng = np.random.default_rng(9)
+    tmpl = rng.integers(1, 128, size=9).astype(np.int32)
+    reqs = []
+    for i in range(5):
+        suf = rng.integers(1, 128, size=int(rng.integers(2, 6))).astype(
+            np.int32)
+        reqs.append(Request(i, np.concatenate([tmpl, suf]), 20))
+    cfg = SchedulerConfig(max_slots=3, page_size=4, max_seq=40, num_pages=8,
+                          windowed_kv=True, debug_invariants=True)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    done = eng.run([Request(r.uid, r.prompt.copy(), r.max_new_tokens)
+                    for r in reqs])
+    assert eng.stats["ring_recycled_pages"] > 0
+    assert eng.stats["ring_shared_released"] > 0
+    scfg = ServeConfig(max_seq=40, attention_impl="naive")
+    for r, c in zip(reqs, sorted(done, key=lambda c: c.uid)):
+        out = generate(params, spec, {"tokens": jnp.asarray(r.prompt[None])},
+                       r.max_new_tokens - 1, scfg)
+        np.testing.assert_array_equal(np.asarray(out["tokens"][0]), c.tokens)
+    eng.alloc.check()
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.flush()
+    eng.alloc.check()
+    assert eng.alloc.free_pages == eng.layout.num_pages - 1
+
+
+def test_windowed_kv_gating():
+    """windowed_kv=True must refuse stacks with ANY global-attention
+    layer (one block table serves all layers); auto-detect (None) must
+    quietly fall back to mask-only there, and stay off when the spec
+    has no sliding window at all."""
+    spec_global, params_g = _setup()          # granite: full attention
+    cfg = SchedulerConfig(max_slots=2, page_size=8, max_seq=32,
+                          num_pages=16, windowed_kv=True)
+    with pytest.raises(ValueError, match="windowed_kv"):
+        ContinuousBatchingEngine(params_g, spec_global, cfg)
+    # 6 gemma3 layers at ratio 5 include one global layer -> no ring
+    spec_mixed = ASSIGNED["gemma3-4b"].scaled_down(
+        layers=6, width=64, vocab=128).with_(
+        sliding_window=8, local_global_ratio=5)
+    assert "attn_global" in list(spec_mixed.layer_kinds())
+    assert pc.ring_window(spec_mixed, None) == 0
+    with pytest.raises(ValueError):
+        pc.ring_window(spec_mixed, True)
+    cfg_off = SchedulerConfig(max_slots=2, page_size=8, max_seq=32,
+                              num_pages=16, windowed_kv=None)
+    eng = ContinuousBatchingEngine(params_g, spec_global, cfg_off)
+    assert not eng.ring and eng.window == 0
+
+
+def test_ring_session_rejoin_past_window():
+    """Session turns on a ring engine: the held slot's ring has wrapped
+    by the time the follow-up turn arrives, the rejoin suffix-prefills
+    only the new tokens, and the transcript matches a fresh ring engine
+    that re-prefills the full history."""
+    spec, params = _windowed_setup(window=8)
+    rng = np.random.default_rng(6)
+    p1 = rng.integers(1, 128, size=7).astype(np.int32)
+    cfg = SchedulerConfig(max_slots=2, page_size=4, max_seq=64, num_pages=24,
+                          windowed_kv=True, debug_invariants=True)
+    eng = ContinuousBatchingEngine(params, spec, cfg)
+    t1 = eng.run([Request(0, p1.copy(), 12, session=3)])[0]
+    assert eng.num_idle == 1
+    extra = rng.integers(1, 128, size=5).astype(np.int32)
+    p2 = np.concatenate([p1, t1.tokens, extra])
+    t2 = eng.run([Request(1, p2.copy(), 10, session=3)])[0]
+    assert eng.stats["session_reuses"] == 1
+    fresh = ContinuousBatchingEngine(params, spec, cfg)
+    ref2 = fresh.run([Request(1, p2.copy(), 10)])[0]
+    np.testing.assert_array_equal(t2.tokens, ref2.tokens)
+    eng.end_session(3)
+    eng.alloc.check()
